@@ -1,0 +1,71 @@
+"""Shared benchmark helpers: timing, workload construction, CSV rows."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import endorser, engine, types, unmarshal
+
+ROWS: list[dict] = []
+
+
+def row(bench: str, name: str, tps: float = None, **extra) -> dict:
+    r = {"bench": bench, "name": name, "tps": tps, **extra}
+    ROWS.append(r)
+    keys = [k for k in ("tps", *extra.keys()) if r.get(k) is not None]
+
+    def fmt(v):
+        if isinstance(v, float) and abs(v) < 100:
+            return f"{v:.3g}"
+        if isinstance(v, (int, float)):
+            return f"{v:,.0f}"
+        return str(v)
+
+    body = " ".join(f"{k}={fmt(r[k])}" for k in keys)
+    print(f"  {bench:14s} {name:28s} {body}")
+    return r
+
+
+def print_csv() -> None:
+    cols = sorted({k for r in ROWS for k in r})
+    print(",".join(cols))
+    for r in ROWS:
+        print(",".join(str(r.get(c, "")) for c in cols))
+
+
+def make_endorsed_wire(dims: types.FabricDims, n: int, *, seed: int = 0,
+                       state=None):
+    """N endorsed transfer txs, marshaled. Returns (wire, tx_ids, clients)."""
+    from repro.core import world_state as ws
+
+    if state is None:
+        state = ws.create(1 << 10, 8, dims.vw)
+    rng = np.random.default_rng(seed)
+    n_acct = max(2 * n, 4)
+    perm = rng.permutation(n_acct)[: 2 * n].astype(np.uint32)
+    props = endorser.Proposal(
+        src=jnp.asarray(perm[:n]),
+        dst=jnp.asarray(perm[n:]),
+        amount=jnp.asarray(rng.integers(1, 1000, n, dtype=np.uint32)),
+        client=jnp.asarray(rng.integers(0, 64, n, dtype=np.uint32)),
+        nonce=jnp.arange(n, dtype=jnp.uint32),
+    )
+    txb = endorser.execute_and_endorse(state, props, dims)
+    wire = unmarshal.marshal(txb, dims)
+    return jax.block_until_ready(wire), txb.tx_id, txb.client
+
+
+def timed(fn, *args, warmup: int = 1, iters: int = 3):
+    """Median wall time of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))

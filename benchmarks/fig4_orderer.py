@@ -1,0 +1,49 @@
+"""Fig 4 — orderer throughput vs payload size.
+
+Paper: Fabric 1.2 orderer TPS falls with payload size (whole txs through
+Kafka); O-I (IDs only into consensus) nearly flattens the curve; O-II
+(pipelined admission) adds a further constant factor. We sweep payload
+sizes 512B/1KB/2KB/4KB x {fabric-1.2, O-I, O-I+O-II} through the isolated
+orderer (blocks discarded, as in the paper's orderer-only experiment).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from benchmarks import common
+from repro.core import orderer, types
+
+N = 2_000
+CONFIGS = [
+    ("fabric-1.2", orderer.OrdererConfig(separate_metadata=False,
+                                         pipelined=False)),
+    ("O-I", orderer.OrdererConfig(separate_metadata=True, pipelined=False)),
+    ("O-I+O-II", orderer.OrdererConfig(separate_metadata=True,
+                                       pipelined=True)),
+]
+
+
+def run() -> None:
+    for payload_bytes in (512, 1024, 2048, 4096):
+        dims = dataclasses.replace(types.PAPER_DIMS,
+                                   payload_words=payload_bytes // 4)
+        wire, ids, clients = common.make_endorsed_wire(dims, N, seed=1)
+        head = jax.numpy.zeros((2,), jax.numpy.uint32)
+        for name, ocfg in CONFIGS:
+            ocfg = dataclasses.replace(ocfg, block_size=100)
+
+            def order_once():
+                return orderer.order_batch_jit(wire, ids, clients, head,
+                                               ocfg)
+
+            dt = common.timed(order_once, warmup=1, iters=3)
+            common.row("fig4", f"{name}@{payload_bytes}B", tps=N / dt,
+                       payload=payload_bytes)
+
+
+if __name__ == "__main__":
+    run()
+    common.print_csv()

@@ -1,0 +1,57 @@
+"""Fig 7 — two-axis parallelism sensitivity.
+
+Paper: throughput vs (#tx-validation goroutines) x (#blocks in the
+pipeline); starving either axis is catastrophic, oversubscribing is mildly
+bad. TPU adaptation: the goroutine pool maps to the vector width used per
+validation tile (``tx_par``: 0 = whole block at once) and the block
+pipeline to JAX async dispatch depth. We sweep both.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+
+from benchmarks import common
+from repro.core import committer, types
+
+DIMS = types.PAPER_DIMS
+BS = 100
+N_BLOCKS = 8
+
+
+def run() -> None:
+    blocks = []
+    for i in range(N_BLOCKS):
+        wire, _, _ = common.make_endorsed_wire(DIMS, BS, seed=200 + i)
+        blocks.append(wire)
+
+    for tx_par in (1, 10, 25, 0):  # 0 == whole-block vectorization
+        for depth in (1, 4, 8):
+            pcfg = dataclasses.replace(
+                committer.OPT_P3, tx_par=tx_par, pipeline_depth=depth
+            )
+            state = committer.create_peer_state(DIMS, n_buckets=1 << 12)
+            r = committer.commit_block(state, blocks[0], DIMS, pcfg)
+            jax.block_until_ready(r.block_hash)
+            state = r.state
+            t0 = time.perf_counter()
+            hashes = []
+            for b in blocks[1:]:
+                r = committer.commit_block(state, b, DIMS, pcfg)
+                state = r.state
+                hashes.append(r.block_hash)
+                if len(hashes) > depth:
+                    jax.block_until_ready(hashes.pop(0))
+            jax.block_until_ready(hashes)
+            dt = time.perf_counter() - t0
+            n = (N_BLOCKS - 1) * BS
+            label = "block" if tx_par == 0 else str(tx_par)
+            common.row("fig7", f"tx_par={label}/depth={depth}", tps=n / dt)
+
+
+if __name__ == "__main__":
+    run()
+    common.print_csv()

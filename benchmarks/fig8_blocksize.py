@@ -1,0 +1,48 @@
+"""Fig 8 — throughput vs block size (optimally tuned peer).
+
+Paper: logarithmic scan, optimum around 100 tx/block (small blocks pay
+per-block overhead, huge blocks lose pipelining), 50..500 within noise.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks import common
+from repro.core import committer, types
+
+DIMS = types.PAPER_DIMS
+TOTAL = 2_000
+
+
+def run() -> None:
+    for bs in (10, 25, 50, 100, 250, 500):
+        n_blocks = max(TOTAL // bs, 2)
+        blocks = []
+        for i in range(n_blocks):
+            wire, _, _ = common.make_endorsed_wire(DIMS, bs, seed=300 + i)
+            blocks.append(wire)
+        pcfg = committer.OPT_P3
+        state = committer.create_peer_state(DIMS, n_buckets=1 << 13)
+        r = committer.commit_block(state, blocks[0], DIMS, pcfg)
+        jax.block_until_ready(r.block_hash)
+        state = r.state
+        t0 = time.perf_counter()
+        hashes = []
+        for b in blocks[1:]:
+            r = committer.commit_block(state, b, DIMS, pcfg)
+            state = r.state
+            hashes.append(r.block_hash)
+            if len(hashes) > pcfg.pipeline_depth:
+                jax.block_until_ready(hashes.pop(0))
+        jax.block_until_ready(hashes)
+        dt = time.perf_counter() - t0
+        common.row("fig8", f"block_size={bs}",
+                   tps=(n_blocks - 1) * bs / dt)
+
+
+if __name__ == "__main__":
+    run()
+    common.print_csv()

@@ -1,0 +1,89 @@
+"""Fill the generated tables in EXPERIMENTS.md from experiment artifacts."""
+
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks import roofline
+
+HERE = os.path.dirname(__file__)
+EXP = os.path.join(HERE, "..", "EXPERIMENTS.md")
+OPT = os.path.abspath(os.path.join(HERE, "..", "experiments", "optimized"))
+
+
+def memory_rows() -> str:
+    rows = []
+    for f in sorted(os.listdir(roofline.DRYRUN)):
+        if not f.endswith("__single.json"):
+            continue
+        b = json.load(open(os.path.join(roofline.DRYRUN, f)))
+        if b.get("status") != "ok":
+            continue
+        def footprint(m):
+            # Donated buffers appear in both args and outputs; alias
+            # subtracts the double count.
+            return (m.get("argument_bytes", 0) + m.get("temp_bytes", 0)
+                    + m.get("output_bytes", 0)
+                    - m.get("alias_bytes", 0)) / 1e9
+
+        tot_b = footprint(b.get("memory", {}))
+        o_path = os.path.join(OPT, f)
+        tot_o = None
+        if os.path.exists(o_path):
+            o = json.load(open(o_path))
+            tot_o = footprint(o.get("memory", {}))
+        if tot_b > 16 or (tot_o or 0) > 16:
+            fit_o = (f"{tot_o:.1f} GB" if tot_o is not None else "—")
+            rows.append(
+                f"| {b['arch']} / {b['shape']} | {tot_b:.1f} GB "
+                f"{'(OVER)' if tot_b > 16 else ''} | {fit_o} "
+                f"{'(OVER)' if (tot_o or 0) > 16 else ''} |"
+            )
+    return "\n".join(rows) if rows else "| (all cells < 16 GB) | | |"
+
+
+def summary() -> str:
+    base = {f"{r['arch']}/{r['shape']}": r for r in roofline.load()}
+    opt = {f"{r['arch']}/{r['shape']}": r for r in roofline.load(OPT)}
+    tot_b = tot_o = 0.0
+    improved = 0
+    for k, o in opt.items():
+        b = base.get(k)
+        if not b:
+            continue
+        tot_b += b["bound_s"]
+        tot_o += o["bound_s"]
+        if o["bound_s"] < b["bound_s"] * 0.95:
+            improved += 1
+    return (
+        f"**{improved}/{len(opt)} cells improve >5%; the summed bound over "
+        f"all 32 single-pod cells drops {tot_b:.0f}s -> {tot_o:.0f}s "
+        f"({100 * (1 - tot_o / tot_b):.0f}% lower).** Decode cells are "
+        "unchanged by design (already at their streaming roofline after "
+        "§Perf iteration 1)."
+    )
+
+
+def _splice(text: str, tag: str, body: str) -> str:
+    import re
+
+    start, end = f"<!-- {tag}_START -->", f"<!-- {tag}_END -->"
+    pat = re.compile(re.escape(start) + r".*?" + re.escape(end), re.S)
+    return pat.sub(start + "\n" + body + "\n" + end, text)
+
+
+def main() -> None:
+    text = open(EXP).read()
+    text = _splice(text, "BASELINE", roofline.table(roofline.load(),
+                                                    "single"))
+    text = _splice(text, "OPTIMIZED", roofline.table(roofline.load(OPT),
+                                                     "single"))
+    text = _splice(text, "SUMMARY", summary())
+    text = _splice(text, "MEMORY", memory_rows())
+    open(EXP, "w").write(text)
+    print("EXPERIMENTS.md tables filled")
+
+
+if __name__ == "__main__":
+    main()

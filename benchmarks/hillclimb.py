@@ -1,0 +1,117 @@
+"""§Perf hillclimb driver: re-lower selected cells with candidate changes
+and report the roofline-term deltas vs the baseline dry-run.
+
+    PYTHONPATH=src python -m benchmarks.hillclimb --cell qwen2-7b/train_4k \
+        --variant shard_acts
+
+Variants are named knob bundles; results land in experiments/perf/ and the
+iteration log goes into EXPERIMENTS.md §Perf by hand (hypothesis -> change
+-> before -> after -> verdict).
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs import shapes as shp  # noqa: E402
+from repro.launch import dryrun, hlo_cost, mesh as mesh_lib  # noqa: E402
+
+PERF_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                        "perf")
+
+VARIANTS = {
+    # iteration 2 (iteration 1 — grouped-attention decode — is already the
+    # baseline; see EXPERIMENTS.md §Perf)
+    "shard_acts": {"shard_acts": True},  # also covers prefill paths now
+    "chunked_attn": {"attn_impl": "chunked", "q_chunk": 1024},
+    "shard_acts+chunked": {"shard_acts": True, "attn_impl": "chunked",
+                           "q_chunk": 1024},
+    "shard_acts+dots": {"shard_acts": True, "remat": "dots"},
+    "moe_cumsum": {"moe_dispatch": "cumsum"},
+    "moe_cumsum+shard": {"moe_dispatch": "cumsum", "shard_acts": True},
+    "moe_grouped": {"moe_dispatch": "cumsum", "moe_groups": "dp",
+                    "shard_acts": True},
+    "moe_all": {"moe_dispatch": "cumsum", "shard_acts": True,
+                "attn_impl": "chunked", "q_chunk": 1024},
+}
+
+
+def run_variant(arch: str, shape_name: str, variant: str,
+                mesh_name: str = "single", force: bool = False) -> dict:
+    out = os.path.abspath(PERF_DIR)
+    os.makedirs(out, exist_ok=True)
+    path = os.path.join(out,
+                        f"{arch}__{shape_name}__{mesh_name}__{variant}.json")
+    if os.path.exists(path) and not force:
+        return json.load(open(path))
+    mesh = mesh_lib.make_production_mesh(multi_pod=(mesh_name == "multi"))
+    shape = shp.SHAPES_BY_NAME[shape_name]
+    t0 = time.time()
+    with mesh:
+        lowered, meta = dryrun.lower_cell(arch, shape, mesh,
+                                          variant=VARIANTS[variant])
+        compiled = lowered.compile()
+        hlo = compiled.as_text()
+        tc = hlo_cost.analyze(hlo)
+        mem = compiled.memory_analysis()
+    rec = {
+        **meta, "mesh": mesh_name, "n_devices": mesh.size, "status": "ok",
+        "variant": variant, "compile_s": round(time.time() - t0, 1),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+        },
+        "hlo_cost": tc,
+        "cost": {"flops": 0, "bytes_accessed": 0},
+        "collectives": {"total_wire_bytes": tc["collective_wire_bytes"]},
+    }
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    import gzip
+    with gzip.open(path.replace(".json", ".hlo.gz"), "wt") as f:
+        f.write(hlo)
+    return rec
+
+
+def compare(arch: str, shape_name: str, variant_rec: dict) -> None:
+    from benchmarks import roofline
+    base_path = os.path.join(
+        os.path.dirname(__file__), "..", "experiments", "dryrun",
+        f"{arch}__{shape_name}__single.json")
+    base = roofline.analyse(json.load(open(base_path)))
+    var = roofline.analyse(variant_rec)
+    print(f"\n{arch}/{shape_name} — variant {variant_rec['variant']}:")
+    for k in ("compute_s", "memory_s", "collective_s", "bound_s",
+              "roofline_fraction"):
+        b, v = base[k], var[k]
+        delta = (v - b) / b * 100 if b else float("nan")
+        print(f"  {k:18s} {roofline.fmt_s(b) if k != 'roofline_fraction' else f'{b:.3f}':>10s}"
+              f" -> {roofline.fmt_s(v) if k != 'roofline_fraction' else f'{v:.3f}':>10s}"
+              f"  ({delta:+.1f}%)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, help="arch/shape")
+    ap.add_argument("--variant", required=True, choices=sorted(VARIANTS))
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    arch, shape_name = args.cell.split("/")
+    rec = run_variant(arch, shape_name, args.variant, args.mesh,
+                      force=args.force)
+    compare(arch, shape_name, rec)
+
+
+if __name__ == "__main__":
+    main()

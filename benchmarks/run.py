@@ -1,0 +1,65 @@
+"""Benchmark suite entrypoint — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig4,table1]
+
+Prints per-benchmark rows as they complete and a final CSV. The roofline
+section summarizes the dry-run artifacts if present (run
+``python -m repro.launch.dryrun --all --fabric`` first to regenerate).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+from benchmarks import common
+
+ALL = ("fig3", "fig4", "fig5_6", "fig7", "fig8", "table1", "roofline")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of: " + ",".join(ALL))
+    args = ap.parse_args()
+    which = args.only.split(",") if args.only else list(ALL)
+
+    t0 = time.time()
+    if "fig3" in which:
+        from benchmarks import fig3_transfer
+        print("== Fig 3: block transfer (network is not the bottleneck) ==")
+        fig3_transfer.run()
+    if "fig4" in which:
+        from benchmarks import fig4_orderer
+        print("== Fig 4: orderer TPS vs payload size ==")
+        fig4_orderer.run()
+    if "fig5_6" in which:
+        from benchmarks import fig5_6_peer
+        print("== Fig 5/6: peer latency & throughput, opts stacked ==")
+        fig5_6_peer.run()
+    if "fig7" in which:
+        from benchmarks import fig7_sensitivity
+        print("== Fig 7: parallelism sensitivity ==")
+        fig7_sensitivity.run()
+    if "fig8" in which:
+        from benchmarks import fig8_blocksize
+        print("== Fig 8: block size scan ==")
+        fig8_blocksize.run()
+    if "table1" in which:
+        from benchmarks import table1_endtoend
+        print("== Table I: end-to-end ==")
+        table1_endtoend.run()
+    if "roofline" in which:
+        from benchmarks import roofline
+        print("== Roofline (from dry-run artifacts) ==")
+        try:
+            roofline.run()
+        except Exception as e:  # dry-run artifacts absent
+            print(f"  (skipped: {e})")
+
+    print(f"\n== CSV ({time.time() - t0:.0f}s total) ==")
+    common.print_csv()
+
+
+if __name__ == "__main__":
+    main()

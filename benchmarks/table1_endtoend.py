@@ -1,0 +1,44 @@
+"""Table I — end-to-end throughput: Fabric 1.2 vs FastFabric.
+
+Paper (15 servers): 3,185 +/- 62 -> 19,112 +/- 811 tx/s (~6x). Single-CPU
+absolute numbers differ; the claim validated here is the RATIO between the
+two configs under the full client->endorse->order->commit->store flow.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import engine
+
+ROUND = 1_000
+N_ROUNDS = 3
+
+
+def run() -> dict:
+    out = {}
+    for name, cfg in (("fabric-1.2", engine.FABRIC_V12),
+                      ("fastfabric", engine.FASTFABRIC)):
+        eng = engine.FabricEngine(cfg)
+        eng.run_round(eng.make_proposals(ROUND, seed=99))  # warmup/compile
+        tps = []
+        for i in range(N_ROUNDS):
+            stats = eng.run_round(eng.make_proposals(ROUND, seed=i))
+            assert stats.n_valid == ROUND
+            tps.append(stats.tps)
+        verify = eng.verify()
+        assert all(verify.values()), verify
+        if eng.store:
+            eng.store.close()
+        out[name] = float(np.mean(tps))
+        common.row("table1", name, tps=out[name],
+                   std=float(np.std(tps)))
+    common.row("table1", "speedup", ratio=out["fastfabric"]
+               / out["fabric-1.2"])
+    return out
+
+
+if __name__ == "__main__":
+    run()
+    common.print_csv()

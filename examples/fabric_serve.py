@@ -1,0 +1,62 @@
+"""Serving scenario: continuous batching through the fabric engine.
+
+Submits a burst of requests to the slot-based server (admission ordered on
+the metadata plane, slots tracked in the versioned world state), then
+verifies the outputs against independent single-request generation.
+
+    PYTHONPATH=src python examples/fabric_serve.py
+"""
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.lm import LM, Batch
+from repro.serving.engine import Request, ServeEngine
+
+CFG = ModelConfig(
+    name="serve-demo", family="dense", n_layers=4, d_model=256,
+    n_heads=4, n_kv=2, d_head=64, d_ff=1024, vocab=4096, dtype="float32",
+)
+
+
+def main() -> None:
+    model = LM(CFG)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(model, params, slots=4, max_len=96)
+
+    rng = np.random.default_rng(1)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, CFG.vocab, 24).astype(np.int32),
+                    max_new=16)
+            for i in range(10)]
+    print(f"10 requests, 4 slots, max_new=16 "
+          f"(continuous batching, slot reuse)")
+    t0 = time.time()
+    eng.run(reqs)
+    wall = time.time() - t0
+    print(f"served {eng.tokens_out} tokens in {wall:.1f}s "
+          f"({eng.tokens_out / wall:,.0f} tok/s, {eng.steps} engine steps)")
+
+    # Spot-check against independent generation.
+    r = reqs[3]
+    cache = model.init_cache(1, 64)
+    logits, cache = model.prefill(
+        params, Batch(tokens=jax.numpy.asarray(r.prompt)[None]), cache)
+    want = [int(jax.numpy.argmax(logits[0]))]
+    pos = len(r.prompt)
+    for _ in range(15):
+        logits, cache = model.decode_step(
+            params, cache, jax.numpy.asarray([want[-1]], jax.numpy.int32),
+            jax.numpy.int32(pos))
+        want.append(int(jax.numpy.argmax(logits[0])))
+        pos += 1
+    print(f"req 3 matches independent greedy generation: {r.out == want}")
+    print(f"request ledger versions (2 == assigned+retired exactly once): "
+          f"{[eng.request_version(r.rid) for r in reqs[:5]]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""End-to-end driver: train a ~100M-parameter qwen2-style model for a few
+hundred steps on the deterministic ID-ordered pipeline, with hash-chained
+checkpoints and a simulated mid-run failure + exact restore.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+
+The model is a scaled member of the qwen2 family (same block math as the
+full config, reduced width/depth). Loss on the affine-recurrence task
+drops steeply within a few hundred steps on CPU.
+"""
+
+import argparse
+import shutil
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.configs.base import ModelConfig
+from repro.data import pipeline
+from repro.models.lm import LM
+from repro.training import optimizer, train_step as ts_lib
+
+# ~100M params: 8 layers x d_model 512 (GQA 8h/2kv) x d_ff 2048, vocab 8192.
+CFG_100M = ModelConfig(
+    name="qwen2-100m", family="dense", n_layers=8, d_model=512,
+    n_heads=8, n_kv=2, d_head=64, d_ff=2048, vocab=8192, qkv_bias=True,
+    dtype="float32",
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    args = ap.parse_args()
+
+    print(f"model: {CFG_100M.name}  params={CFG_100M.n_params()/1e6:.1f}M")
+    model = LM(CFG_100M, vocab_chunk=64)
+    tcfg = ts_lib.TrainConfig(
+        opt=optimizer.AdamWConfig(lr=1e-3, warmup_steps=20,
+                                  total_steps=args.steps),
+        microbatches=2,
+    )
+    dcfg = pipeline.DataConfig(vocab=256, seq_len=args.seq,
+                               global_batch=args.batch)
+    step_fn = jax.jit(ts_lib.make_train_step(model, tcfg),
+                      donate_argnums=(0,))
+    ckdir = tempfile.mkdtemp(prefix="ff_ckpt_")
+    ckpt = Checkpointer(ckdir, keep=2)
+
+    def batch_for(i):
+        b = pipeline.global_batch_for_step(dcfg, i)
+        return jax.tree.map(
+            lambda x: None if x is None else jnp.asarray(x), b,
+            is_leaf=lambda x: x is None)
+
+    state = ts_lib.init_state(model, jax.random.PRNGKey(0))
+    kill_at = args.steps // 2
+    print(f"training; simulated failure at step {kill_at}")
+    for i in range(kill_at):
+        state, m = step_fn(state, batch_for(i))
+        if i % 25 == 0:
+            print(f"  step {i:4d} loss {float(m['loss']):.4f}")
+        if (i + 1) % 50 == 0:
+            ckpt.save(i + 1, state)
+    ckpt.save(kill_at, state, blocking=True)
+    loss_before_kill = float(m["loss"])
+    del state
+    print(f"  !! node failure at step {kill_at} "
+          f"(loss was {loss_before_kill:.4f})")
+
+    # --- restart path: restore + verify chain + resume the data stream ---
+    like = ts_lib.init_state(model, jax.random.PRNGKey(0))
+    state, start = ckpt.restore(like)
+    assert ckpt.verify_chain()
+    print(f"  restored checkpoint step {start}; chain verified; resuming")
+    for i in range(start, args.steps):
+        state, m = step_fn(state, batch_for(i))
+        if i % 25 == 0 or i == args.steps - 1:
+            print(f"  step {i:4d} loss {float(m['loss']):.4f}")
+    print(f"final loss: {float(m['loss']):.4f}")
+    ckpt.close()
+    shutil.rmtree(ckdir, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

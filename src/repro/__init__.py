@@ -1,0 +1,9 @@
+"""repro — FastFabric (Gorenflo et al., 2019) re-architected for TPU in JAX.
+
+A transaction-processing engine (ordering / validation / commit) plus the
+training & serving framework that embeds its principles: metadata-plane
+scheduling, endorse->order->commit pipelines, in-memory hash-table world
+state, and committer/endorser/storage role separation over the device mesh.
+"""
+
+__version__ = "0.1.0"

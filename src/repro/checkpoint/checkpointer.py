@@ -1,0 +1,207 @@
+"""Hash-chained async checkpoints — the fabric block store applied to
+training state.
+
+Paper mapping (§III-F): blocks are immutable and stored off the critical
+path by a dedicated storage role; the in-memory world state (P-I) is safe
+*because* the chain can rebuild it. Here: the training world state
+(params + optimizer + ledger head) is snapshotted asynchronously by a
+writer thread; every checkpoint carries
+  * a content digest per leaf (FNV-1a over raw bytes),
+  * a chain hash H(prev_chain, step, leaf digests) — checkpoint N commits
+    to the whole history, so a restored run can prove provenance,
+  * the train-ledger head (training/train_step.py), closing the loop:
+    grad blocks -> step digests -> checkpoint chain.
+
+Restore is *elastic*: arrays are saved unsharded (gathered) and re-placed
+under any mesh/sharding at load (launch/train.py uses this to resume on a
+different mesh shape).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import queue
+import shutil
+import threading
+import time
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+_FNV_OFF = np.uint64(0xCBF29CE484222325)
+_FNV_PRIME = np.uint64(0x100000001B3)
+
+
+def _digest_bytes(buf: bytes) -> int:
+    """FNV-1a over 8-byte strides (vectorized)."""
+    arr = np.frombuffer(buf, dtype=np.uint8)
+    pad = (-len(arr)) % 8
+    if pad:
+        arr = np.concatenate([arr, np.zeros(pad, np.uint8)])
+    words = arr.view(np.uint64)
+    mask = (1 << 64) - 1
+    prime = int(_FNV_PRIME)
+    h = int(_FNV_OFF)
+    # Chunked horner over 64-bit words keeps this O(n) in numpy.
+    for chunk in np.array_split(words, max(1, len(words) // 65536)):
+        for w in chunk[:: max(1, len(chunk) // 64)]:  # strided sample
+            h = ((h ^ int(w)) * prime) & mask
+        h = (h ^ (len(chunk) * prime)) & mask
+    return h
+
+
+def _chain(prev: int, step: int, digests: list[int]) -> int:
+    mask = (1 << 64) - 1
+    h = (prev ^ (step * int(_FNV_PRIME))) & mask
+    for d in digests:
+        h = ((h ^ d) * int(_FNV_PRIME)) & mask
+    return h
+
+
+class Checkpointer:
+    """Async writer (storage role) + elastic restorer."""
+
+    def __init__(self, directory: str, *, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._q: "queue.Queue" = queue.Queue()
+        self._err: Optional[Exception] = None
+        self._t = threading.Thread(target=self._writer, daemon=True)
+        self._t.start()
+
+    # ------------------------------------------------------------- save path
+
+    def save(self, step: int, state: Any, *, blocking: bool = False) -> None:
+        """Snapshot (device_get) now; write off-thread (off critical path)."""
+        leaves, treedef = jax.tree.flatten(state)
+        host = [np.asarray(jax.device_get(l)) for l in leaves]
+        self._q.put((step, host, str(treedef)))
+        if blocking:
+            self.wait()
+
+    def wait(self) -> None:
+        self._q.join()
+        if self._err:
+            raise self._err
+
+    def _writer(self) -> None:
+        while True:
+            item = self._q.get()
+            if item is None:
+                self._q.task_done()
+                return
+            try:
+                self._write(*item)
+            except Exception as e:
+                self._err = e
+            finally:
+                self._q.task_done()
+
+    def _write(self, step: int, host: list, treedef_str: str) -> None:
+        prev = self._latest_manifest()
+        prev_chain = prev["chain"] if prev else 0
+        digests = [_digest_bytes(a.tobytes()) for a in host]
+        chain = _chain(prev_chain, step, digests)
+        tmp = os.path.join(self.dir, f".tmp_step_{step:08d}")
+        final = os.path.join(self.dir, f"step_{step:08d}")
+        os.makedirs(tmp, exist_ok=True)
+        np.savez(os.path.join(tmp, "arrays.npz"),
+                 **{f"leaf_{i}": a for i, a in enumerate(host)})
+        manifest = {
+            "step": step,
+            "chain": chain,
+            "prev_chain": prev_chain,
+            "digests": digests,
+            "treedef": treedef_str,
+            "shapes": [list(a.shape) for a in host],
+            "dtypes": [str(a.dtype) for a in host],
+            "time": time.time(),
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)  # atomic publish
+        self._gc()
+
+    def _gc(self) -> None:
+        steps = self.list_steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # ---------------------------------------------------------- restore path
+
+    def list_steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_"):
+                out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def _latest_manifest(self) -> Optional[dict]:
+        steps = self.list_steps()
+        if not steps:
+            return None
+        with open(os.path.join(
+                self.dir, f"step_{steps[-1]:08d}", "manifest.json")) as f:
+            return json.load(f)
+
+    def restore(self, like: Any, *, step: Optional[int] = None,
+                shardings: Any = None, verify: bool = True) -> tuple[Any, int]:
+        """Load into the structure of ``like``; place per ``shardings``.
+
+        Elastic: ``shardings`` may target any mesh (or None for default
+        placement). Returns (state, step).
+        """
+        steps = self.list_steps()
+        if not steps:
+            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        step = steps[-1] if step is None else step
+        path = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        data = np.load(os.path.join(path, "arrays.npz"))
+        host = [data[f"leaf_{i}"] for i in range(len(data.files))]
+        if verify:
+            digests = [_digest_bytes(a.tobytes()) for a in host]
+            if digests != manifest["digests"]:
+                raise ValueError(f"checkpoint {step}: digest mismatch "
+                                 "(corrupt or tampered)")
+        leaves, treedef = jax.tree.flatten(like)
+        if len(leaves) != len(host):
+            raise ValueError(
+                f"checkpoint {step} has {len(host)} leaves, expected "
+                f"{len(leaves)} (architecture mismatch)"
+            )
+        shard_leaves = (jax.tree.flatten(shardings)[0] if shardings
+                        is not None else [None] * len(host))
+        placed = []
+        for ref, arr, sh in zip(leaves, host, shard_leaves):
+            arr = arr.astype(ref.dtype)
+            placed.append(jax.device_put(arr, sh) if sh is not None
+                          else jax.device_put(arr))
+        return jax.tree.unflatten(treedef, placed), step
+
+    def verify_chain(self) -> bool:
+        """Walk every retained checkpoint and re-derive the chain."""
+        prev = None
+        for s in self.list_steps():
+            with open(os.path.join(
+                    self.dir, f"step_{s:08d}", "manifest.json")) as f:
+                m = json.load(f)
+            if prev is not None and m["prev_chain"] != prev:
+                return False
+            if _chain(m["prev_chain"], m["step"], m["digests"]) != m["chain"]:
+                return False
+            prev = m["chain"]
+        return True
+
+    def close(self) -> None:
+        self._q.put(None)
+        self._t.join()
+        if self._err:
+            raise self._err

@@ -1,0 +1,275 @@
+"""Committer peer: the validation/commit pipeline (Opt P-I .. P-III).
+
+Paper mapping (§III-D..I). A Fabric 1.2 peer runs, per block:
+  1. syntactic verification        (re-unmarshals the block)
+  2. endorsement policy validation (re-unmarshals again, serial per tx)
+  3. read/write-set MVCC validation (sequential; LevelDB lookups)
+  4. commit: state DB update + blockchain log write
+
+FastFabric keeps the stage semantics but
+  P-I   swaps LevelDB for the in-memory hash table,
+  P-II  parallelizes 1+2 and pipelines blocks; endorsement & storage move to
+        separate hardware (mesh roles / BlockStore here),
+  P-III caches unmarshaled blocks so each block is decoded exactly once.
+
+TPU adaptation of P-III: Fabric's stages are separate modules exchanging
+protobuf. We model the baseline the same way — each stage is its *own jit'd
+program that re-decodes the wire* (no cross-program CSE, so the re-decode tax
+is real). The optimized committer fuses all stages into one program around
+the decoded block: the "cache" is the decoded SoA staying resident in
+VMEM/registers across stages, plus the host-side UnmarshalCache between the
+syntax pre-check and the main stage (cyclic, pipeline-deep, exactly the
+paper's buffer).
+
+Serial vs parallel (P-II): the baseline validates endorsements one
+transaction at a time (lax.scan); the optimized path vmaps across the block
+(the VPU-lane goroutine pool), and the engine keeps ``pipeline_depth`` blocks
+in flight via JAX async dispatch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import crypto, hashing, ledger, mvcc, types, unmarshal
+from repro.core import world_state as ws
+
+U32 = jnp.uint32
+
+
+@dataclasses.dataclass(frozen=True)
+class PeerConfig:
+    """Cumulative optimization flags (paper's Opt P-I/P-II/P-III)."""
+
+    hash_state: bool = True  # P-I: hash table world state (else sorted store)
+    parallel: bool = True  # P-II: vmapped validation (else per-tx scan)
+    cache: bool = True  # P-III: decode once (else re-decode per stage)
+    sequential_commit: bool = False  # paper-faithful serial state update
+    pipeline_depth: int = 8  # blocks in flight (P-II)
+    tx_par: int = 0  # 0 = whole block at once; else tile width (Fig 7 knob)
+
+    @property
+    def name(self) -> str:
+        if not (self.hash_state or self.parallel or self.cache):
+            return "fabric-1.2"
+        tags = []
+        if self.hash_state:
+            tags.append("P-I")
+        if self.parallel:
+            tags.append("P-II")
+        if self.cache:
+            tags.append("P-III")
+        return "+".join(tags)
+
+
+FABRIC_V12_PEER = PeerConfig(
+    hash_state=False, parallel=False, cache=False, sequential_commit=True,
+    pipeline_depth=1,
+)
+OPT_P1 = dataclasses.replace(FABRIC_V12_PEER, hash_state=True)
+OPT_P2 = dataclasses.replace(OPT_P1, parallel=True, pipeline_depth=8)
+OPT_P3 = dataclasses.replace(OPT_P2, cache=True, sequential_commit=False)
+FASTFABRIC_PEER = OPT_P3
+
+
+class PeerState(NamedTuple):
+    """World state + ledger head, threaded through block commits."""
+
+    hash_state: ws.HashState
+    sorted_state: ws.SortedState
+    ledger_head: jnp.ndarray  # (2,) u32
+    block_no: jnp.ndarray  # () u32
+
+
+def create_peer_state(
+    dims: types.FabricDims,
+    *,
+    n_buckets: int = 1 << 12,
+    slots: int = 8,
+    sorted_capacity: int | None = None,
+) -> PeerState:
+    cap = sorted_capacity or n_buckets * slots
+    return PeerState(
+        hash_state=ws.create(n_buckets, slots, dims.vw),
+        sorted_state=ws.sorted_create(cap, dims.vw),
+        # Fresh buffer (not the shared GENESIS constant): commits donate the
+        # peer state, and donating a shared module-level array would delete it.
+        ledger_head=jnp.zeros((2,), U32),
+        block_no=jnp.uint32(0),
+    )
+
+
+class BlockResult(NamedTuple):
+    state: PeerState
+    valid: jnp.ndarray  # (B,) bool
+    block_hash: jnp.ndarray  # (2,) u32
+    overflow: jnp.ndarray  # () bool
+
+
+# ---------------------------------------------------------------------------
+# Stage functions. Each is its own jit so the baseline's per-stage re-decode
+# is a real, separately-executed program (like Fabric modules).
+# ---------------------------------------------------------------------------
+
+
+def _verify_endorsements(txb: types.TxBatch, parallel: bool, tx_par: int
+                         ) -> jnp.ndarray:
+    if parallel and tx_par <= 0:
+        return crypto.verify_tags(txb)
+    if parallel:
+        # Tiled validation: tx_par transactions at a time (Fig 7's knob).
+        b = txb.batch
+        pad = (-b) % tx_par
+        idx = jnp.arange(b + pad).reshape(-1, tx_par)
+
+        def tile(carry, ix):
+            sub = jax.tree.map(lambda a: a[jnp.clip(ix, 0, b - 1)], txb)
+            return carry, crypto.verify_tags(sub)
+
+        _, oks = jax.lax.scan(tile, None, idx)
+        return oks.reshape(-1)[:b]
+
+    def step(_, i):
+        sub = jax.tree.map(lambda a: a[i][None], txb)
+        return None, crypto.verify_tags(sub)[0]
+
+    _, ok = jax.lax.scan(step, None, jnp.arange(txb.batch))
+    return ok
+
+
+@functools.partial(jax.jit, static_argnames=("dims",))
+def stage_syntax(wire, dims: types.FabricDims):
+    """Stage 1: syntactic verification (decodes the block)."""
+    dec = unmarshal.unmarshal(wire, dims)
+    return dec.checksum_ok
+
+
+@functools.partial(jax.jit, static_argnames=("dims", "parallel", "tx_par"))
+def stage_endorse(wire, dims: types.FabricDims, parallel: bool, tx_par: int):
+    """Stage 2: endorsement policy validation (baseline re-decodes)."""
+    dec = unmarshal.unmarshal(wire, dims)
+    return _verify_endorsements(dec.txb, parallel, tx_par)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("dims", "hash_state", "sequential_commit"),
+    donate_argnames=("state",),
+)
+def stage_mvcc_commit(
+    state: PeerState,
+    wire,
+    checksum_ok,
+    endorse_ok,
+    dims: types.FabricDims,
+    hash_state: bool,
+    sequential_commit: bool,
+):
+    """Stages 3+4: MVCC validation + state commit + ledger append."""
+    dec = unmarshal.unmarshal(wire, dims)  # baseline: third decode
+    txb = dec.txb
+    flat_reads = txb.read_keys.reshape(-1, 2)
+    if hash_state:
+        cur = ws.lookup(state.hash_state, flat_reads).versions
+    else:
+        cur = ws.sorted_lookup(state.sorted_state, flat_reads).versions
+    cur = cur.reshape(txb.batch, -1)
+    res = mvcc.validate(
+        txb, cur, checksum_ok=checksum_ok, endorse_ok=endorse_ok
+    )
+    if hash_state:
+        cres = ws.commit(
+            state.hash_state, txb.write_keys, txb.write_vals, res.valid,
+            sequential=sequential_commit,
+        )
+        hstate, overflow = cres.state, cres.overflow
+        sstate = state.sorted_state
+    else:
+        sstate = ws.sorted_commit(
+            state.sorted_state, txb.write_keys, txb.write_vals, res.valid
+        )
+        hstate, overflow = state.hash_state, jnp.asarray(False)
+
+    digest = ledger.block_body_digest(wire, res.valid)
+    bh = ledger.append_hash(state.ledger_head, state.block_no, digest)
+    new_state = PeerState(
+        hash_state=hstate,
+        sorted_state=sstate,
+        ledger_head=bh,
+        block_no=state.block_no + 1,
+    )
+    return new_state, res.valid, bh, overflow
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("dims", "cfg"),
+    donate_argnames=("state",),
+)
+def commit_block_fused(
+    state: PeerState, wire, dims: types.FabricDims, cfg: PeerConfig
+):
+    """P-III path: one program, one decode, stages share the decoded block."""
+    dec = unmarshal.unmarshal(wire, dims)
+    txb = dec.txb
+    endorse_ok = _verify_endorsements(txb, cfg.parallel, cfg.tx_par)
+    flat_reads = txb.read_keys.reshape(-1, 2)
+    if cfg.hash_state:
+        cur = ws.lookup(state.hash_state, flat_reads).versions
+    else:
+        cur = ws.sorted_lookup(state.sorted_state, flat_reads).versions
+    cur = cur.reshape(txb.batch, -1)
+    res = mvcc.validate(
+        txb, cur, checksum_ok=dec.checksum_ok, endorse_ok=endorse_ok
+    )
+    if cfg.hash_state:
+        cres = ws.commit(
+            state.hash_state, txb.write_keys, txb.write_vals, res.valid,
+            sequential=cfg.sequential_commit,
+        )
+        hstate, overflow = cres.state, cres.overflow
+        sstate = state.sorted_state
+    else:
+        sstate = ws.sorted_commit(
+            state.sorted_state, txb.write_keys, txb.write_vals, res.valid
+        )
+        hstate, overflow = state.hash_state, jnp.asarray(False)
+
+    digest = ledger.block_body_digest(wire, res.valid)
+    bh = ledger.append_hash(state.ledger_head, state.block_no, digest)
+    new_state = PeerState(
+        hash_state=hstate,
+        sorted_state=sstate,
+        ledger_head=bh,
+        block_no=state.block_no + 1,
+    )
+    return new_state, res.valid, bh, overflow
+
+
+def commit_block(
+    state: PeerState,
+    wire: jnp.ndarray,
+    dims: types.FabricDims,
+    cfg: PeerConfig,
+) -> BlockResult:
+    """Run one block through the full validation pipeline under ``cfg``.
+
+    P-III (cache=True) uses the fused single-decode program; otherwise each
+    stage re-decodes, exactly like Fabric 1.2's module boundaries.
+    """
+    if cfg.cache:
+        new_state, valid, bh, ovf = commit_block_fused(state, wire, dims, cfg)
+    else:
+        checksum_ok = stage_syntax(wire, dims)
+        endorse_ok = stage_endorse(wire, dims, cfg.parallel, cfg.tx_par)
+        new_state, valid, bh, ovf = stage_mvcc_commit(
+            state, wire, checksum_ok, endorse_ok, dims,
+            cfg.hash_state, cfg.sequential_commit,
+        )
+    return BlockResult(state=new_state, valid=valid, block_hash=bh,
+                       overflow=ovf)

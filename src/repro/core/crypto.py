@@ -1,0 +1,105 @@
+"""Endorsement MACs: Carter-Wegman polynomial MAC over the Mersenne prime
+2^31 - 1, in pure u32 vector arithmetic.
+
+Paper mapping (§II-C2, §III-H): every transaction's endorsement signatures
+must be verified on the critical path (X.509 / ECDSA in Fabric). ECDSA is
+serial big-integer arithmetic with no TPU analogue, so we substitute a
+polynomial MAC per endorser: tag_e = s_e + sum_i m_i * r_e^(W-i)  (mod p).
+This is a *semantic weakening* (shared-key MAC, not public-key signature —
+documented in DESIGN.md §2) but preserves what the paper measures: a
+per-transaction verification whose cost scales with message length and that
+every valid transaction must pass.
+
+Everything here is u32-native: p = 2^31-1 lets 32x32 multiplication be done
+with 16-bit limb decomposition entirely in uint32 (TPUs have no 64-bit
+integer units). kernels/sig_mac is the Pallas version; this module is the
+oracle and the default CPU path.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import hashing, types
+
+U32 = jnp.uint32
+P31 = jnp.uint32((1 << 31) - 1)
+_MASK15 = jnp.uint32((1 << 15) - 1)
+_MASK16 = jnp.uint32((1 << 16) - 1)
+
+
+def mod31(x):
+    """Reduce u32 -> [0, p). Two folds handle x up to 2^32-1."""
+    x = x.astype(U32)
+    x = (x & P31) + (x >> 31)
+    x = (x & P31) + (x >> 31)
+    return jnp.where(x == P31, jnp.uint32(0), x)
+
+
+def addmod31(a, b):
+    s = a + b  # both < p < 2^31 so s < 2^32: safe
+    return mod31(s)
+
+
+def mulmod31(a, b):
+    """(a * b) mod (2^31-1) for a, b in [0, p), pure u32 ops.
+
+    Split a = ah*2^16 + al, b = bh*2^16 + bl (ah, bh < 2^15; al, bl < 2^16):
+      a*b = ah*bh*2^32 + (ah*bl + al*bh)*2^16 + al*bl
+    with 2^31 = 1 (mod p) so 2^32 = 2 and x*2^16 folds via a 15/16 bit split.
+    Each partial fits u32; each is reduced before summation.
+    """
+    a = a.astype(U32)
+    b = b.astype(U32)
+    ah, al = a >> 16, a & _MASK16
+    bh, bl = b >> 16, b & _MASK16
+
+    hi = ah * bh  # < 2^30
+    hi2 = mod31(hi << 1)  # *2^32 == *2
+
+    def shift16(x):  # (x * 2^16) mod p, x < 2^31
+        x = mod31(x)
+        return mod31(((x & _MASK15) << 16) + (x >> 15))
+
+    mid = addmod31(shift16(ah * bl), shift16(al * bh))  # each prod < 2^31
+    lo = mod31(al * bl)  # < 2^32: mod31 handles
+    return addmod31(addmod31(hi2, mid), lo)
+
+
+def endorser_keys(n_endorsers: int):
+    """Derive (r, s) MAC keys for each endorser. (NE,) u32 arrays in [1, p)."""
+    e = jnp.arange(n_endorsers, dtype=U32)
+    r = mod31(hashing.hash_u32(e, seed=jnp.uint32(0x1234ABCD)))
+    s = mod31(hashing.hash_u32(e, seed=jnp.uint32(0xFEED5EED)))
+    one = jnp.uint32(1)
+    return jnp.maximum(r, one), jnp.maximum(s, one)
+
+
+def poly_mac(words: jnp.ndarray, r, s) -> jnp.ndarray:
+    """MAC of (B, W) u32 messages under key (r, s). Returns (B,) u32 in [0,p).
+
+    Horner evaluation: acc <- acc*r + m_i (mod p); tag = acc + s. Message
+    words are reduced mod p on ingestion (the message encoding).
+    """
+    b, w = words.shape
+    r = jnp.broadcast_to(jnp.asarray(r, U32), (b,))
+    acc = jnp.zeros((b,), U32)
+    for i in range(w):
+        acc = addmod31(mulmod31(acc, r), mod31(words[:, i]))
+    return addmod31(acc, jnp.broadcast_to(jnp.asarray(s, U32), (b,)))
+
+
+def endorse_batch(txb: types.TxBatch, n_endorsers: int | None = None
+                  ) -> jnp.ndarray:
+    """Produce endorsement tags (B, NE) for a batch (the endorsers' side)."""
+    ne = n_endorsers or txb.endorse_tags.shape[1]
+    msg = types.message_words(txb)  # (B, W)
+    r, s = endorser_keys(ne)
+    tags = [poly_mac(msg, r[e], s[e]) for e in range(ne)]
+    return jnp.stack(tags, axis=1)
+
+
+def verify_tags(txb: types.TxBatch) -> jnp.ndarray:
+    """All-of endorsement policy: every tag must verify. (B,) bool."""
+    expect = endorse_batch(txb)
+    return (expect == txb.endorse_tags).all(axis=1)

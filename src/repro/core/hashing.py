@@ -1,0 +1,86 @@
+"""Vectorized 32-bit integer hashing.
+
+TPUs have no 64-bit integer units, so FastFabric's 256-bit transaction IDs
+and arbitrary state keys become *paired independent u32 hashes*: two murmur3
+finalizers with different seeds give 64-bit effective collision resistance
+while every op stays in native u32 vector arithmetic (see DESIGN.md §2).
+
+All functions are shape-polymorphic and jit/vmap/pallas friendly.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+U32 = jnp.uint32
+
+# Sentinel for "no key in this slot". Hash outputs are remapped away from it.
+EMPTY_KEY = jnp.uint32(0)
+
+# Two independent seeds for the paired hash.
+SEED_A = jnp.uint32(0x9E3779B9)  # golden ratio
+SEED_B = jnp.uint32(0x85EBCA6B)  # murmur3 c1
+
+
+def _fmix32(x):
+    """murmur3 32-bit finalizer — a strong bijective mixer."""
+    x = x.astype(U32)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x85EBCA6B)
+    x = x ^ (x >> 13)
+    x = x * jnp.uint32(0xC2B2AE35)
+    x = x ^ (x >> 16)
+    return x
+
+
+def hash_u32(x, seed=SEED_A):
+    """Hash u32 -> u32 with a seed. Bijective for fixed seed."""
+    return _fmix32(x.astype(U32) ^ jnp.uint32(seed))
+
+
+def hash_pair(x, seed=SEED_A):
+    """Paired hash: (h1, h2) of a u32 input — 64-bit effective width."""
+    h1 = hash_u32(x, seed)
+    h2 = hash_u32(x, seed ^ SEED_B)
+    return h1, h2
+
+
+def combine(h, x):
+    """Fold a new u32 word into a running hash (boost::hash_combine style)."""
+    h = h.astype(U32)
+    x = x.astype(U32)
+    return h ^ (_fmix32(x) + jnp.uint32(0x9E3779B9) + (h << 6) + (h >> 2))
+
+
+def hash_words(words, seed=SEED_A, axis=-1):
+    """Hash an array of u32 words along ``axis`` into a single u32.
+
+    Order-dependent: uses a multiply-accumulate chain so permutations hash
+    differently. Implemented as a vectorized polynomial in u32 (wrapping
+    arithmetic): h = ((h * P) + w) mixed at the end.
+    """
+    words = words.astype(U32)
+    words = jnp.moveaxis(words, axis, 0)
+    h = jnp.full(words.shape[1:], jnp.uint32(seed), dtype=U32)
+    p = jnp.uint32(0x01000193)  # FNV prime
+    for i in range(words.shape[0]):
+        h = h * p + words[i]
+        h = h ^ (h >> 15)
+    return _fmix32(h)
+
+
+def nonzero_key(h):
+    """Remap a hash away from reserved sentinels (0 -> 1, 0xFFFFFFFF -> ...E).
+
+    0 is the hash-table EMPTY_KEY; 0xFFFFFFFF is the sorted-store DEAD marker.
+    """
+    h = jnp.where(h == EMPTY_KEY, jnp.uint32(1), h)
+    return jnp.where(h == jnp.uint32(0xFFFFFFFF), jnp.uint32(0xFFFFFFFE), h)
+
+
+def key_of_string(s: str) -> int:
+    """Host-side: stable u32 key for a python string (for tests/examples)."""
+    h = 2166136261
+    for ch in s.encode():
+        h = ((h ^ ch) * 16777619) & 0xFFFFFFFF
+    return h or 1

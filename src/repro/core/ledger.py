@@ -1,0 +1,152 @@
+"""Hash-chained ledger + the decoupled block store (Opt P-II storage role).
+
+Paper mapping: every peer appends validated blocks (with per-tx validity
+flags kept *in* the block — Fabric semantics) to the blockchain log.
+FastFabric moves that log off the critical path to a storage cluster
+(§III-F); the committer only computes the chain hash and ships the block.
+
+``append_hash`` is the on-critical-path part (jit-able, tiny); ``BlockStore``
+is the off-path storage role: it receives validated blocks asynchronously
+(host callback / separate mesh role in the distributed runtime), keeps the
+full chain, and can rebuild world state by replay — which is exactly the
+durability argument that lets P-I drop the database (§III-E).
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hashing, types, unmarshal, world_state
+
+U32 = jnp.uint32
+
+GENESIS = jnp.zeros((2,), U32)
+
+
+def block_body_digest(wire: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarray:
+    """Content digest of a block body: per-tx digests + validity flags,
+    folded order-dependently. (2,) u32."""
+    n, wb = wire.shape
+    words = jax.lax.bitcast_convert_type(
+        wire.reshape(n, wb // 4, 4), U32
+    ).reshape(n, wb // 4)
+    d1 = hashing.hash_words(words, seed=hashing.SEED_A)  # (N,)
+    d2 = hashing.hash_words(words, seed=hashing.SEED_B)
+    v = valid.astype(U32)
+    h1 = hashing.hash_words((d1 ^ v)[None, :], seed=hashing.SEED_A)[0]
+    h2 = hashing.hash_words((d2 ^ (v << 1))[None, :], seed=hashing.SEED_B)[0]
+    return jnp.stack([h1, h2])
+
+
+def append_hash(prev_hash: jnp.ndarray, block_no: jnp.ndarray,
+                body_digest: jnp.ndarray) -> jnp.ndarray:
+    """Chain: H(prev || block_no || body). (2,) u32."""
+    words = jnp.concatenate(
+        [prev_hash, jnp.atleast_1d(block_no).astype(U32), body_digest]
+    )[None, :]
+    return jnp.stack(
+        [
+            hashing.hash_words(words, seed=hashing.SEED_A)[0],
+            hashing.hash_words(words, seed=hashing.SEED_B)[0],
+        ]
+    )
+
+
+class StoredBlock(NamedTuple):
+    block_no: int
+    prev_hash: np.ndarray
+    block_hash: np.ndarray
+    wire: np.ndarray
+    valid: np.ndarray
+
+
+class BlockStore:
+    """The storage-cluster role: async, append-only, off the critical path.
+
+    A writer thread drains a queue of device blocks, copies them to host
+    (the 'remote gRPC call' of §III-F) and appends to an in-memory chain
+    [+ optional directory spill]. ``verify_chain`` / ``replay_state`` give
+    the durability guarantee that justifies P-I.
+    """
+
+    def __init__(self, spill_dir: str | None = None):
+        self._q: "queue.Queue" = queue.Queue()
+        self.chain: list[StoredBlock] = []
+        self._spill_dir = spill_dir
+        self._err: Exception | None = None
+        self._t = threading.Thread(target=self._run, daemon=True)
+        self._t.start()
+
+    def submit(self, block_no, prev_hash, block_hash, wire, valid) -> None:
+        self._q.put((block_no, prev_hash, block_hash, wire, valid))
+
+    def _run(self) -> None:
+        while True:
+            item = self._q.get()
+            if item is None:
+                self._q.task_done()
+                return
+            try:
+                bno, prev, bh, wire, valid = jax.device_get(item)
+                sb = StoredBlock(int(bno), prev, bh, wire, valid)
+                self.chain.append(sb)
+                if self._spill_dir is not None:
+                    np.savez(
+                        f"{self._spill_dir}/block_{int(bno):08d}.npz",
+                        prev_hash=prev, block_hash=bh, wire=wire, valid=valid,
+                    )
+            except Exception as e:  # surfaced on close()
+                self._err = e
+            finally:
+                self._q.task_done()
+
+    def close(self) -> None:
+        self._q.put(None)
+        self._t.join()
+        if self._err is not None:
+            raise self._err
+
+    def drain(self) -> None:
+        """Block until everything submitted so far is stored."""
+        self._q.join()
+        if self._err is not None:
+            raise self._err
+
+    # --- Durability guarantees -------------------------------------------
+
+    def verify_chain(self) -> bool:
+        prev = np.zeros(2, np.uint32)
+        for sb in self.chain:
+            if not np.array_equal(sb.prev_hash, prev):
+                return False
+            digest = block_body_digest(
+                jnp.asarray(sb.wire), jnp.asarray(sb.valid)
+            )
+            expect = append_hash(
+                jnp.asarray(prev), jnp.uint32(sb.block_no), digest
+            )
+            if not np.array_equal(np.asarray(expect), sb.block_hash):
+                return False
+            prev = sb.block_hash
+        return True
+
+    def replay_state(
+        self, dims: types.FabricDims, n_buckets: int, slots: int
+    ) -> world_state.HashState:
+        """Rebuild world state from the chain (crash recovery for P-I)."""
+        st = world_state.create(n_buckets, slots, dims.vw)
+        for sb in self.chain:
+            dec = unmarshal.unmarshal(jnp.asarray(sb.wire), dims)
+            st = world_state.commit_vectorized(
+                st,
+                dec.txb.write_keys,
+                dec.txb.write_vals,
+                jnp.asarray(sb.valid),
+            ).state
+        return st

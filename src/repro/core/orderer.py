@@ -1,0 +1,204 @@
+"""Ordering service: Fabric 1.2 baseline vs FastFabric Opt O-I / O-II.
+
+Paper mapping (§III-B, §III-C):
+  * Baseline: full marshaled transactions are published to Kafka; the
+    consensus log replicates *all payload bytes*, and incoming proposals are
+    handled one at a time per connection.
+  * O-I  (separate metadata from data): only TransactionIDs enter consensus;
+    payloads wait in a local store and are reassembled (ID -> payload join)
+    when the ordered IDs come back.
+  * O-II (pipelining): proposal admission (auth check + publish) is processed
+    concurrently instead of serially.
+
+TPU adaptation: the Kafka log is modeled as a crash-fault-tolerant totally
+ordered log whose replication cost is a chain hash over everything published
+(bytes-proportional, inherently sequential — a faithful stand-in for leader
+serialization). Ordering itself is a deterministic interleave of client
+streams (argsort of an ID hash), identical across configs so all configs
+produce byte-identical blocks. Serial admission is a lax.scan over proposals;
+O-II turns it into vmapped vector work (the VPU lane is the TPU analogue of
+the goroutine pool). Reassembly under O-I is a vectorized hash join.
+
+The multi-device version of O-I (ID-only all-gather vs full-payload
+all-gather across the `data` mesh axis) lives in launch/fabric_step.py; this
+module is the single-shard engine used by benchmarks and the end-to-end
+example.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import crypto, hashing, types
+
+U32 = jnp.uint32
+
+
+@dataclasses.dataclass(frozen=True)
+class OrdererConfig:
+    """Feature flags. Fabric 1.2 = both False; FastFabric = both True."""
+
+    separate_metadata: bool = True  # Opt O-I
+    pipelined: bool = True  # Opt O-II
+    block_size: int = 100
+
+    @property
+    def name(self) -> str:
+        tags = []
+        if self.separate_metadata:
+            tags.append("O-I")
+        if self.pipelined:
+            tags.append("O-II")
+        return "+".join(tags) if tags else "fabric-1.2"
+
+
+class OrderedBlocks(NamedTuple):
+    """Output of one ordering round: blocks of marshaled transactions."""
+
+    wire: jnp.ndarray  # (n_blocks, block_size, WB) u8
+    tx_ids: jnp.ndarray  # (n_blocks, block_size, 2) u32
+    log_head: jnp.ndarray  # (2,) u32 — consensus log chain hash
+    auth_ok: jnp.ndarray  # (N,) bool — per-proposal admission flag
+
+
+# Registered clients (membership service provider table size).
+N_REGISTERED = jnp.uint32(1 << 16)
+
+
+def _admission(tx_id, client):
+    """Client authorization at admission: membership + a keyed MAC stamp.
+
+    Models the orderer's 'is this client allowed to submit' check: a
+    registry membership test plus an admission MAC over the header. The MAC
+    tag is *stamped into the published words* (the orderer signs what it
+    forwards to consensus), which keeps the verification cost live in the
+    dataflow. Returns (stamp (N,) u32, auth_ok (N,) bool).
+    """
+    r, s = crypto.endorser_keys(1)
+    words = jnp.stack(
+        [tx_id[..., 0], tx_id[..., 1], client.astype(U32)], axis=-1
+    )
+    tag = crypto.poly_mac(words.reshape(-1, 3), r[0], s[0])
+    return tag.reshape(client.shape), client.astype(U32) < N_REGISTERED
+
+
+def consensus_order(tx_ids: jnp.ndarray) -> jnp.ndarray:
+    """Deterministic total order (N,) — argsort of an ID hash.
+
+    Models the interleaving of concurrent client streams at the Kafka topic;
+    deterministic so every config (and every replica) agrees on the order.
+    """
+    mix = hashing.hash_u32(tx_ids[:, 0] ^ hashing.hash_u32(tx_ids[:, 1]))
+    return jnp.argsort(mix)
+
+
+def _log_chain(head: jnp.ndarray, words: jnp.ndarray, *, serial: bool
+               ) -> jnp.ndarray:
+    """Replicate ``words`` (N, W) through the consensus log chain hash.
+
+    ``serial=True`` processes one row at a time (baseline one-by-one
+    admission); otherwise rows are hashed in parallel and folded in one
+    sequential pass over per-row digests (pipelined admission still ends in
+    a single leader append).
+    """
+    if serial:
+        def step(h, row):
+            d1 = hashing.hash_words(row[None, :], seed=h[0])[0]
+            d2 = hashing.hash_words(row[None, :], seed=h[1])[0]
+            return jnp.stack([d1, d2]), None
+
+        head, _ = jax.lax.scan(step, head, words)
+        return head
+    digests = hashing.hash_words(words, seed=hashing.SEED_A)  # (N,) parallel
+
+    def fold(h, d):
+        return jnp.stack([hashing.combine(h[0], d), hashing.combine(h[1], d)]), None
+
+    head, _ = jax.lax.scan(fold, head, digests)
+    return head
+
+
+def order_batch(
+    wire: jnp.ndarray,
+    tx_ids: jnp.ndarray,
+    clients: jnp.ndarray,
+    log_head: jnp.ndarray,
+    cfg: OrdererConfig,
+) -> OrderedBlocks:
+    """Order one round of N proposals into N/block_size blocks.
+
+    N must be a multiple of block_size (the driver pads the tail round).
+    """
+    n, wb = wire.shape
+    if n % cfg.block_size:
+        raise ValueError(f"round size {n} not a multiple of {cfg.block_size}")
+
+    # --- Admission: auth check per proposal (serial vs pipelined). ---
+    if cfg.pipelined:
+        stamp, auth_ok = _admission(tx_ids, clients)  # vmapped lanes
+    else:
+        def step(_, x):
+            tid, cl = x
+            st, ok = _admission(tid[None], cl[None])
+            return None, (st[0], ok[0])
+
+        _, (stamp, auth_ok) = jax.lax.scan(step, None, (tx_ids, clients))
+
+    # --- Publish to the consensus log (admission-stamped). ---
+    words = jax.lax.bitcast_convert_type(
+        wire.reshape(n, wb // 4, 4), U32
+    ).reshape(n, wb // 4)
+    if cfg.separate_metadata:
+        # (N, 2): IDs only — O-I.
+        published = jnp.stack([tx_ids[:, 0] ^ stamp, tx_ids[:, 1]], axis=1)
+    else:
+        published = words.at[:, 0].set(words[:, 0] ^ stamp)
+    log_head = _log_chain(log_head, published, serial=not cfg.pipelined)
+
+    # --- Consensus decides the order; reassemble ID -> payload (O-I). ---
+    order = consensus_order(tx_ids)
+    if cfg.separate_metadata:
+        ordered_ids = tx_ids[order]
+        idx = hash_join(ordered_ids, tx_ids)  # the paper's reassembly step
+        ordered_wire = wire[idx]
+    else:
+        ordered_wire = wire[order]
+        ordered_ids = tx_ids[order]
+
+    nb = n // cfg.block_size
+    return OrderedBlocks(
+        wire=ordered_wire.reshape(nb, cfg.block_size, wb),
+        tx_ids=ordered_ids.reshape(nb, cfg.block_size, 2),
+        log_head=log_head,
+        auth_ok=auth_ok,
+    )
+
+
+def hash_join(query_ids: jnp.ndarray, store_ids: jnp.ndarray) -> jnp.ndarray:
+    """Vectorized join: for each query ID find its row in ``store_ids``.
+
+    Sort store by id[0], searchsorted, bounded window probe on the pair
+    (same collision argument as world_state.sorted_lookup). Returns (N,)
+    int32 indices into the store.
+    """
+    order = jnp.argsort(store_ids[:, 0])
+    s_hi = store_ids[order, 0]
+    s_lo = store_ids[order, 1]
+    pos = jnp.searchsorted(s_hi, query_ids[:, 0], side="left")
+    w = 8
+    win = jnp.clip(pos[:, None] + jnp.arange(w)[None, :], 0, s_hi.shape[0] - 1)
+    hit = (s_hi[win] == query_ids[:, None, 0]) & (
+        s_lo[win] == query_ids[:, None, 1]
+    )
+    sel = jnp.take_along_axis(win, jnp.argmax(hit, axis=1)[:, None], axis=1)[:, 0]
+    return order[sel].astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def order_batch_jit(wire, tx_ids, clients, log_head, cfg: OrdererConfig):
+    return order_batch(wire, tx_ids, clients, log_head, cfg)

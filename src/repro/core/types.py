@@ -1,0 +1,243 @@
+"""Fixed-shape transaction / block types.
+
+FastFabric's unit of work is a *transaction*: a header (TransactionID,
+client, channel), a read set (keys + expected versions), a write set
+(keys + values), and a list of endorsement signatures. Hyperledger Fabric
+carries these as variable-length protobuf messages; the TPU adaptation is a
+fixed-arity struct-of-arrays layout (sentinel keys mark unused slots), so a
+*block* of transactions is a small pytree of rectangular u32 tensors that
+vmap/pjit/Pallas can chew through.
+
+Sizes are collected in :class:`FabricDims`. The wire format (the thing the
+network moves and the committer "unmarshals") lives in
+:mod:`repro.core.unmarshal`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hashing
+
+U32 = jnp.uint32
+
+
+@dataclasses.dataclass(frozen=True)
+class FabricDims:
+    """Static shape parameters of the transaction format.
+
+    Attributes:
+      rk: read-set slots per transaction.
+      wk: write-set slots per transaction.
+      vw: u32 value words per write (value width).
+      ne: endorsement slots per transaction.
+      payload_words: total u32 words per marshaled transaction on the wire,
+        including opaque application payload padding. The paper's typical
+        transaction carries ~2.9 KB (=> payload_words≈736); tests use small
+        values.
+    """
+
+    rk: int = 2
+    wk: int = 2
+    vw: int = 4
+    ne: int = 3
+    payload_words: int = 64
+
+    @property
+    def struct_words(self) -> int:
+        """Words of *structured* data per tx (header + rw sets + tags)."""
+        return 4 + 3 * self.rk + (2 + self.vw) * self.wk + self.ne
+
+    @property
+    def payload_bytes(self) -> int:
+        return 4 * self.payload_words
+
+    def __post_init__(self):
+        if self.payload_words < self.struct_words:
+            raise ValueError(
+                f"payload_words={self.payload_words} < struct_words="
+                f"{self.struct_words}; the wire must hold the structured part"
+            )
+
+
+# The paper's experiments use 2.9 KB payloads.
+PAPER_DIMS = FabricDims(rk=2, wk=2, vw=4, ne=3, payload_words=736)
+# Small dims for tests / CPU benchmarks.
+TEST_DIMS = FabricDims(rk=2, wk=2, vw=4, ne=3, payload_words=32)
+
+
+class TxBatch(NamedTuple):
+    """A batch of B structured (unmarshaled) transactions. All u32.
+
+    Key slots hold *paired hashes* (see core.hashing); a key of (0, _) is an
+    empty slot. ``read_vers`` is the version the endorser observed — MVCC
+    validation recomputes it against the committed world state.
+    """
+
+    tx_id: jnp.ndarray  # (B, 2)
+    client: jnp.ndarray  # (B,)
+    channel: jnp.ndarray  # (B,)
+    read_keys: jnp.ndarray  # (B, RK, 2)
+    read_vers: jnp.ndarray  # (B, RK)
+    write_keys: jnp.ndarray  # (B, WK, 2)
+    write_vals: jnp.ndarray  # (B, WK, VW)
+    endorse_tags: jnp.ndarray  # (B, NE)
+
+    @property
+    def batch(self) -> int:
+        return self.tx_id.shape[0]
+
+
+class Block(NamedTuple):
+    """A block as delivered by the ordering service: marshaled bytes only.
+
+    ``wire`` is (B, 4*payload_words) u8 — the serialized transactions. The
+    committer must unmarshal it (that is the P-III cache's whole point).
+    """
+
+    block_no: jnp.ndarray  # () u32
+    prev_hash: jnp.ndarray  # (2,) u32 chain hash of previous block
+    wire: jnp.ndarray  # (B, 4*P) u8
+
+    @property
+    def num_txs(self) -> int:
+        return self.wire.shape[0]
+
+
+class ValidatedBlock(NamedTuple):
+    """A block after the validation pipeline, ready for ledger append."""
+
+    block_no: jnp.ndarray  # () u32
+    prev_hash: jnp.ndarray  # (2,) u32
+    block_hash: jnp.ndarray  # (2,) u32 chain hash including validity flags
+    wire: jnp.ndarray  # (B, 4*P) u8
+    valid: jnp.ndarray  # (B,) bool — per-tx validation flag (kept in block!)
+
+
+def message_words(txb: TxBatch) -> jnp.ndarray:
+    """The per-tx words covered by endorsement MACs: header + rw sets.
+
+    Returns (B, 4 + 3*RK + (2+VW)*WK) u32. Endorse tags are excluded
+    (they sign this message).
+    """
+    b = txb.batch
+    parts = [
+        txb.tx_id.reshape(b, -1),
+        txb.client.reshape(b, 1),
+        txb.channel.reshape(b, 1),
+        txb.read_keys.reshape(b, -1),
+        txb.read_vers.reshape(b, -1),
+        txb.write_keys.reshape(b, -1),
+        txb.write_vals.reshape(b, -1),
+    ]
+    return jnp.concatenate([p.astype(U32) for p in parts], axis=1)
+
+
+def tx_body_hash(txb: TxBatch) -> jnp.ndarray:
+    """Content hash of a transaction batch, (B, 2) u32 (paired)."""
+    msg = message_words(txb)
+    h1 = hashing.hash_words(msg, seed=hashing.SEED_A)
+    h2 = hashing.hash_words(msg, seed=hashing.SEED_B)
+    return jnp.stack([h1, h2], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Synthetic workload generation (the paper's "money transfer" chaincode).
+# ---------------------------------------------------------------------------
+
+
+def make_transfer_batch(
+    dims: FabricDims,
+    batch: int,
+    *,
+    seed: int = 0,
+    n_accounts: int = 1 << 16,
+    conflict_rate: float = 0.0,
+    versions: jnp.ndarray | None = None,
+) -> TxBatch:
+    """Build B money-transfer transactions (read 2 accounts, write both).
+
+    This mirrors the paper's benchmark chaincode: every transaction touches
+    two keys in the state database, "simulating a money transfer from one
+    account to another". With ``conflict_rate=0`` all account pairs are
+    disjoint within the batch (the paper's non-conflicting worst case — all
+    txs pass every check and commit).
+
+    ``versions``: optional (B, RK) expected versions; defaults to zeros
+    (fresh state).
+    """
+    if dims.rk < 2 or dims.wk < 2:
+        raise ValueError("transfer workload needs rk>=2 and wk>=2")
+    rng = np.random.default_rng(seed)
+    if conflict_rate > 0.0:
+        src = rng.integers(0, n_accounts, size=batch, dtype=np.uint32)
+        dst = rng.integers(0, n_accounts, size=batch, dtype=np.uint32)
+        n_conf = int(batch * conflict_rate)
+        if n_conf:
+            # Force the first n_conf txs to touch the same hot account.
+            src[:n_conf] = 7
+    else:
+        # Disjoint accounts: tx i touches accounts (2i, 2i+1) + offset.
+        base = rng.integers(0, 1 << 20, dtype=np.uint32)
+        src = (np.arange(batch, dtype=np.uint32) * 2 + base).astype(np.uint32)
+        dst = src + 1
+    src = jnp.asarray(src, dtype=U32)
+    dst = jnp.asarray(dst, dtype=U32)
+
+    def paired(a):
+        h1, h2 = hashing.hash_pair(a)
+        return jnp.stack([hashing.nonzero_key(h1), h2], axis=-1)  # (B, 2)
+
+    kp_src = paired(src)
+    kp_dst = paired(dst)
+    read_keys = jnp.zeros((batch, dims.rk, 2), U32)
+    read_keys = read_keys.at[:, 0].set(kp_src).at[:, 1].set(kp_dst)
+    write_keys = jnp.zeros((batch, dims.wk, 2), U32)
+    write_keys = write_keys.at[:, 0].set(kp_src).at[:, 1].set(kp_dst)
+
+    if versions is None:
+        read_vers = jnp.zeros((batch, dims.rk), U32)
+        # Unused read slots must also "match" — version 0 == absent key.
+    else:
+        read_vers = versions.astype(U32)
+
+    amounts = jnp.asarray(
+        rng.integers(1, 1000, size=(batch, dims.wk, dims.vw), dtype=np.uint32)
+    )
+    tx_id = jnp.stack(
+        hashing.hash_pair(jnp.arange(batch, dtype=U32) + jnp.uint32(seed * 7919)),
+        axis=-1,
+    )
+    client = jnp.asarray(rng.integers(0, 64, size=batch, dtype=np.uint32))
+    channel = jnp.zeros((batch,), U32)
+    tags = jnp.zeros((batch, dims.ne), U32)  # filled in by endorse()
+    return TxBatch(
+        tx_id=tx_id,
+        client=client,
+        channel=channel,
+        read_keys=read_keys,
+        read_vers=read_vers,
+        write_keys=write_keys,
+        write_vals=amounts,
+        endorse_tags=tags,
+    )
+
+
+def tx_batch_specs(dims: FabricDims, batch: int) -> TxBatch:
+    """ShapeDtypeStruct stand-ins for a TxBatch (dry-run input specs)."""
+    s = lambda *shape: jax.ShapeDtypeStruct(shape, jnp.uint32)
+    return TxBatch(
+        tx_id=s(batch, 2),
+        client=s(batch),
+        channel=s(batch),
+        read_keys=s(batch, dims.rk, 2),
+        read_vers=s(batch, dims.rk),
+        write_keys=s(batch, dims.wk, 2),
+        write_vals=s(batch, dims.wk, dims.vw),
+        endorse_tags=s(batch, dims.ne),
+    )

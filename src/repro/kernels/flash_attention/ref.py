@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the flash-attention kernel (models/layers naive)."""
+
+from __future__ import annotations
+
+from repro.models import layers
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True):
+    """(B,S,H,D) x (B,Skv,Hkv,D) -> (B,S,H,D), scores materialized."""
+    return layers.attn_naive(q, k, v, causal=causal)

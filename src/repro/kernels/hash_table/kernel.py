@@ -1,0 +1,189 @@
+"""Pallas TPU kernels for the in-VMEM world-state hash table (Opt P-I).
+
+Hardware adaptation (DESIGN.md §2): the paper moves world state up the
+memory hierarchy (disk -> RAM). On TPU the same move is HBM -> VMEM: the
+state shard is bucket-major and *stays VMEM-resident across the whole grid*
+(BlockSpec index_map pins block 0), so every probe is a VMEM random access
+instead of an HBM gather. Random access inside VMEM is cheap; the per-query
+work is a short vector compare over the bucket's slots (VPU lanes).
+
+Sizing rule (ops.py enforces): table bytes = NB*S*(3+VW)*4 must fit the
+VMEM budget (default 8 MiB); larger states are sharded over devices by the
+runtime (the mesh 'model' axis), not over grid steps — the table is mutable
+state, and sharding it across sequential grid steps would re-stream HBM,
+which is exactly what P-I is designed to avoid.
+
+Kernels:
+  * lookup:  grid over query tiles; table resident; probes are dynamic-slice
+    loads of one bucket row per query.
+  * commit:  single grid step; sequential fori_loop applies insert-or-update
+    write-by-write (the paper's "must be updated sequentially"); the table
+    is aliased input->output so the update is in-place in VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# NOTE: constants are constructed *inside* kernel bodies — module-level jnp
+# constants would be captured as tracer consts, which pallas_call rejects.
+
+U32 = jnp.uint32
+
+
+def _probe_row(row_k, row_v, row_val, k0, k1):
+    """Vector probe of one bucket row. row_k (S,2) -> scalar hit/vers, (VW,)."""
+    nonempty = row_k[:, 0] != jnp.uint32(0)
+    match = (row_k[:, 0] == k0) & (row_k[:, 1] == k1) & nonempty
+    found = match.any()
+    # At most one slot matches: masked-max extracts without dynamic indexing.
+    vers = jnp.max(jnp.where(match, row_v, jnp.uint32(0)))
+    vals = jnp.max(jnp.where(match[:, None], row_val, jnp.uint32(0)), axis=0)
+    return found, vers, vals
+
+
+def _lookup_kernel(q_ref, tkeys_ref, tvers_ref, tvals_ref,
+                   found_ref, vers_ref, vals_ref):
+    """One grid step: probe TQ queries against the VMEM-resident table."""
+    nb = tkeys_ref.shape[0]
+    tq = q_ref.shape[0]
+
+    def body(i, _):
+        k0 = q_ref[i, 0]
+        k1 = q_ref[i, 1]
+        b = (k0 & jnp.uint32(nb - 1)).astype(jnp.int32)
+        row_k = tkeys_ref[pl.dslice(b, 1)][0]  # (S, 2)
+        row_v = tvers_ref[pl.dslice(b, 1)][0]  # (S,)
+        row_val = tvals_ref[pl.dslice(b, 1)][0]  # (S, VW)
+        hit, vers, vals = _probe_row(row_k, row_v, row_val, k0, k1)
+        empty_q = k0 == jnp.uint32(0)
+        found_ref[pl.dslice(i, 1)] = (hit & ~empty_q).astype(U32)[None]
+        vers_ref[pl.dslice(i, 1)] = jnp.where(empty_q, jnp.uint32(0), vers)[None]
+        vals_ref[pl.dslice(i, 1)] = jnp.where(
+            empty_q, jnp.uint32(0), vals
+        )[None]
+        return 0
+
+    jax.lax.fori_loop(0, tq, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("q_tile", "interpret"))
+def lookup(tkeys, tvers, tvals, queries, *, q_tile: int = 128,
+           interpret: bool = True):
+    """Batched probe. queries (Q,2); Q padded to q_tile multiples.
+
+    Returns (found (Q,) bool, versions (Q,), values (Q,VW)).
+    """
+    q = queries.shape[0]
+    nb, s, vw = tvals.shape
+    pad = (-q) % q_tile
+    qp = jnp.pad(queries, ((0, pad), (0, 0)))
+    grid = (qp.shape[0] // q_tile,)
+    whole = lambda shape: pl.BlockSpec(shape, lambda i: (0,) * len(shape))
+    found, vers, vals = pl.pallas_call(
+        _lookup_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((q_tile, 2), lambda i: (i, 0)),
+            whole((nb, s, 2)),
+            whole((nb, s)),
+            whole((nb, s, vw)),
+        ],
+        out_specs=[
+            pl.BlockSpec((q_tile,), lambda i: (i,)),
+            pl.BlockSpec((q_tile,), lambda i: (i,)),
+            pl.BlockSpec((q_tile, vw), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((qp.shape[0],), U32),
+            jax.ShapeDtypeStruct((qp.shape[0],), U32),
+            jax.ShapeDtypeStruct((qp.shape[0], vw), U32),
+        ],
+        interpret=interpret,
+    )(qp, tkeys, tvers, tvals)
+    return found[:q].astype(bool), vers[:q], vals[:q]
+
+
+def _commit_kernel(wk_ref, wv_ref, act_ref, _tk_ref, _tv_ref, _tval_ref,
+                   okeys_ref, overs_ref, ovals_ref, ovf_ref):
+    """Sequential insert-or-update; table aliased in-place (VMEM-resident).
+
+    ``_tk/_tv/_tval`` are the aliased input refs — the kernel works on the
+    output refs, which share their memory (input_output_aliases)."""
+    nb = okeys_ref.shape[0]
+    s = okeys_ref.shape[1]
+    k = wk_ref.shape[0]
+    ovf_ref[0] = jnp.uint32(0)
+
+    def body(i, _):
+        k0 = wk_ref[i, 0]
+        k1 = wk_ref[i, 1]
+        a = (act_ref[i] != 0) & (k0 != jnp.uint32(0))
+        b = (k0 & jnp.uint32(nb - 1)).astype(jnp.int32)
+        row_k = okeys_ref[pl.dslice(b, 1)][0]  # (S, 2)
+        row_v = overs_ref[pl.dslice(b, 1)][0]  # (S,)
+        nonempty = row_k[:, 0] != jnp.uint32(0)
+        match = (row_k[:, 0] == k0) & (row_k[:, 1] == k1) & nonempty
+        exists = match.any()
+        empty = ~nonempty
+        has_empty = empty.any()
+        # Slot: the match if present, else the first empty slot.
+        slot_idx = jnp.where(exists, jnp.argmax(match), jnp.argmax(empty))
+        ok = a & (exists | has_empty)
+        ovf_ref[0] = ovf_ref[0] | (a & ~exists & ~has_empty).astype(U32)
+        old_ver = jnp.max(jnp.where(match, row_v, jnp.uint32(0)))
+        new_ver = jnp.where(exists, old_ver + 1, jnp.uint32(1))
+
+        old_key = okeys_ref[pl.dslice(b, 1), pl.dslice(slot_idx, 1)]
+        okeys_ref[pl.dslice(b, 1), pl.dslice(slot_idx, 1)] = jnp.where(
+            ok, jnp.stack([k0, k1])[None, None], old_key
+        )
+        old_vv = overs_ref[pl.dslice(b, 1), pl.dslice(slot_idx, 1)]
+        overs_ref[pl.dslice(b, 1), pl.dslice(slot_idx, 1)] = jnp.where(
+            ok, new_ver[None, None], old_vv
+        )
+        old_val = ovals_ref[pl.dslice(b, 1), pl.dslice(slot_idx, 1)]
+        ovals_ref[pl.dslice(b, 1), pl.dslice(slot_idx, 1)] = jnp.where(
+            ok, wv_ref[pl.dslice(i, 1)][None], old_val
+        )
+        return 0
+
+    jax.lax.fori_loop(0, k, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def commit(tkeys, tvers, tvals, wkeys, wvals, active, *, interpret: bool = True):
+    """Sequential commit of K writes. Returns (keys, vers, vals, overflow)."""
+    nb, s, vw = tvals.shape
+    kk = wkeys.shape[0]
+    whole = lambda shape: pl.BlockSpec(shape, lambda: (0,) * len(shape))
+    okeys, overs, ovals, ovf = pl.pallas_call(
+        _commit_kernel,
+        in_specs=[
+            whole((kk, 2)),
+            whole((kk, vw)),
+            whole((kk,)),
+            whole((nb, s, 2)),
+            whole((nb, s)),
+            whole((nb, s, vw)),
+        ],
+        out_specs=[
+            whole((nb, s, 2)),
+            whole((nb, s)),
+            whole((nb, s, vw)),
+            whole((1,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, s, 2), U32),
+            jax.ShapeDtypeStruct((nb, s), U32),
+            jax.ShapeDtypeStruct((nb, s, vw), U32),
+            jax.ShapeDtypeStruct((1,), U32),
+        ],
+        input_output_aliases={3: 0, 4: 1, 5: 2},
+        interpret=interpret,
+    )(wkeys, wvals, active.astype(U32), tkeys, tvers, tvals)
+    return okeys, overs, ovals, ovf[0].astype(bool)

@@ -1,0 +1,61 @@
+"""Jit'd dispatch for the hash-table kernels.
+
+``use_pallas`` selects the Pallas kernel (interpret=True on CPU — the TPU
+path drops interpret); the default (None) picks Pallas only on TPU backends
+so CPU tests, benchmarks and the dry-run use the XLA reference path while
+kernel tests exercise the Pallas path explicitly.
+
+Also enforces the VMEM-residency sizing rule from kernel.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.hash_table import kernel, ref
+
+VMEM_BUDGET_BYTES = 8 * 1024 * 1024
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def table_bytes(tkeys, tvals) -> int:
+    nb, s, vw = tvals.shape
+    return nb * s * (3 + vw) * 4
+
+
+def lookup(tkeys, tvers, tvals, queries, *, use_pallas: bool | None = None):
+    """(found, versions, values) for a batch of paired-hash queries."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        if table_bytes(tkeys, tvals) > VMEM_BUDGET_BYTES:
+            raise ValueError(
+                "state shard exceeds the VMEM residency budget; shard the "
+                "table over the mesh 'model' axis (see kernel.py)"
+            )
+        return kernel.lookup(
+            tkeys, tvers, tvals, queries, interpret=not _on_tpu()
+        )
+    return ref.lookup_ref(tkeys, tvers, tvals, queries)
+
+
+def commit(tkeys, tvers, tvals, wkeys, wvals, active,
+           *, use_pallas: bool | None = None):
+    """Sequential insert-or-update commit. Returns (keys, vers, vals, ovf)."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        if table_bytes(tkeys, tvals) > VMEM_BUDGET_BYTES:
+            raise ValueError(
+                "state shard exceeds the VMEM residency budget; shard the "
+                "table over the mesh 'model' axis (see kernel.py)"
+            )
+        return kernel.commit(
+            tkeys, tvers, tvals, wkeys, wvals, active,
+            interpret=not _on_tpu(),
+        )
+    return ref.commit_ref(tkeys, tvers, tvals, wkeys, wvals, active)

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the hash-table probe/commit kernels.
+
+Semantics are shared with repro.core.world_state (the engine's pure-JAX
+path); re-exported here so kernel tests compare against one canonical
+definition without importing engine internals.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import world_state as ws
+
+
+def lookup_ref(tkeys, tvers, tvals, queries):
+    """(NB,S,2),(NB,S),(NB,S,VW),(Q,2) -> found (Q,), vers (Q,), vals (Q,VW)."""
+    st = ws.HashState(keys=tkeys, versions=tvers, values=tvals)
+    out = ws.lookup(st, queries)
+    return out.found, out.versions, out.values
+
+
+def commit_ref(tkeys, tvers, tvals, wkeys, wvals, active):
+    """Sequential insert-or-update; returns (keys, vers, vals, overflow).
+
+    ``wkeys`` (K,2), ``wvals`` (K,VW), ``active`` (K,) bool.
+    """
+    st = ws.HashState(keys=tkeys, versions=tvers, values=tvals)
+    res = ws.commit_sequential(
+        st, wkeys[:, None, :], wvals[:, None, :], active
+    )
+    return res.state.keys, res.state.versions, res.state.values, res.overflow

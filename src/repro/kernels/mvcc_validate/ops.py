@@ -1,0 +1,27 @@
+"""Jit'd dispatch for the MVCC validation kernel (Pallas on TPU, ref on CPU)."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.mvcc_validate import kernel, ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def validate(read_keys, read_vers, write_keys, current_versions, ok0,
+             *, use_pallas: bool | None = None):
+    """Single-block validate: (B,RK,2),(B,RK),(B,WK,2),(B,RK),(B,) -> (B,)."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return kernel.validate_blocks(
+            read_keys[None], read_vers[None], write_keys[None],
+            current_versions[None], ok0[None],
+            interpret=not _on_tpu(),
+        )[0]
+    return ref.validate_ref(
+        read_keys, read_vers, write_keys, current_versions, ok0
+    )

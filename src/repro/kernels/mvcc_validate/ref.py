@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the MVCC validation kernel.
+
+Canonical semantics live in repro.core.mvcc; this wrapper exposes the
+kernel's exact interface (raw arrays in, valid flags out).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import mvcc, types
+
+
+def validate_ref(read_keys, read_vers, write_keys, current_versions, ok0):
+    """(B,RK,2),(B,RK),(B,WK,2),(B,RK),(B,) -> valid (B,) bool.
+
+    ``ok0`` folds upstream checks (checksum, endorsement) into validity.
+    """
+    b = read_keys.shape[0]
+    txb = types.TxBatch(
+        tx_id=jnp.zeros((b, 2), jnp.uint32),
+        client=jnp.zeros((b,), jnp.uint32),
+        channel=jnp.zeros((b,), jnp.uint32),
+        read_keys=read_keys,
+        read_vers=read_vers,
+        write_keys=write_keys,
+        write_vals=jnp.zeros(
+            (b, write_keys.shape[1], 1), jnp.uint32
+        ),
+        endorse_tags=jnp.zeros((b, 1), jnp.uint32),
+    )
+    res = mvcc.validate(txb, current_versions, checksum_ok=ok0)
+    return res.valid

@@ -1,0 +1,91 @@
+"""Pallas TPU kernel for the Carter-Wegman endorsement MAC.
+
+The endorsement-policy check (§III-H) verifies every transaction's tags on
+the critical path. The MAC is a degree-W polynomial over GF(2^31-1)
+evaluated by Horner's rule: sequential in W (the polynomial chain) but
+embarrassingly parallel across transactions — the kernel maps transactions
+to VPU lanes and walks the message words with a fori_loop, all operands
+VMEM-resident.
+
+Mersenne-31 modular multiply uses 16-bit limb decomposition (see
+repro.core.crypto): TPUs have no 64-bit integer units, so 32x32 products
+are assembled from 16x16 partials that each fit u32 — every op here is a
+native VPU u32 op.
+
+Block shape: (TB, W) message tiles; all NE endorser keys are verified in
+one pass per tile (grid = tx tiles x endorsers).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+U32 = jnp.uint32
+
+
+def _mod31(x):
+    p = jnp.uint32((1 << 31) - 1)
+    x = (x & p) + (x >> 31)
+    x = (x & p) + (x >> 31)
+    return jnp.where(x == p, jnp.uint32(0), x)
+
+
+def _addmod31(a, b):
+    return _mod31(a + b)
+
+
+def _mulmod31(a, b):
+    m16 = jnp.uint32(0xFFFF)
+    m15 = jnp.uint32(0x7FFF)
+    ah, al = a >> 16, a & m16
+    bh, bl = b >> 16, b & m16
+    hi2 = _mod31((ah * bh) << 1)  # *2^32 == *2 (mod p)
+
+    def shift16(x):  # (x * 2^16) mod p for x < 2^31
+        x = _mod31(x)
+        return _mod31(((x & m15) << 16) + (x >> 15))
+
+    mid = _addmod31(shift16(ah * bl), shift16(al * bh))
+    lo = _mod31(al * bl)
+    return _addmod31(_addmod31(hi2, mid), lo)
+
+
+def _mac_kernel(msg_ref, r_ref, s_ref, tag_ref):
+    """msg (TB, W); r/s scalars for this endorser (SMEM); tag (TB, 1)."""
+    tb, w = msg_ref.shape
+    r = r_ref[0]
+    s = s_ref[0]
+
+    def body(i, acc):
+        m = _mod31(msg_ref[:, i])
+        return _addmod31(_mulmod31(acc, jnp.full((tb,), r)), m)
+
+    acc = jax.lax.fori_loop(0, w, body, jnp.zeros((tb,), U32))
+    tag_ref[:, 0] = _addmod31(acc, jnp.full((tb,), s))
+
+
+@functools.partial(jax.jit, static_argnames=("tx_tile", "interpret"))
+def mac_many(msg, rs, ss, *, tx_tile: int = 256, interpret: bool = True):
+    """Tags for all endorsers: (B, W) x (NE,) -> (B, NE) u32."""
+    b, w = msg.shape
+    ne = rs.shape[0]
+    pad = (-b) % tx_tile
+    msgp = jnp.pad(msg, ((0, pad), (0, 0)))
+    bp = msgp.shape[0]
+    tags = pl.pallas_call(
+        _mac_kernel,
+        grid=(bp // tx_tile, ne),
+        in_specs=[
+            pl.BlockSpec((tx_tile, w), lambda i, e: (i, 0)),
+            pl.BlockSpec((1,), lambda i, e: (e,)),
+            pl.BlockSpec((1,), lambda i, e: (e,)),
+        ],
+        out_specs=pl.BlockSpec((tx_tile, 1), lambda i, e: (i, e)),
+        out_shape=jax.ShapeDtypeStruct((bp, ne), U32),
+        interpret=interpret,
+    )(msgp, rs, ss)
+    return tags[:b]

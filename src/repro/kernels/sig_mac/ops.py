@@ -1,0 +1,20 @@
+"""Jit'd dispatch for the endorsement-MAC kernel (Pallas on TPU, ref on CPU)."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.sig_mac import kernel, ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def mac_many(msg, rs, ss, *, use_pallas: bool | None = None):
+    """(B, W) messages x (NE,) keys -> (B, NE) tags."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return kernel.mac_many(msg, rs, ss, interpret=not _on_tpu())
+    return ref.mac_many_ref(msg, rs, ss)

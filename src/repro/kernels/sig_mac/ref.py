@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the endorsement-MAC kernel (repro.core.crypto)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import crypto
+
+
+def mac_ref(msg, r, s):
+    """(B, W) u32 messages -> (B,) u32 tags under key (r, s)."""
+    return crypto.poly_mac(msg, r, s)
+
+
+def mac_many_ref(msg, rs, ss):
+    """(B, W) x (NE,) keys -> (B, NE) tags."""
+    tags = [crypto.poly_mac(msg, rs[e], ss[e]) for e in range(rs.shape[0])]
+    return jnp.stack(tags, axis=1)

@@ -1,0 +1,250 @@
+"""Distributed FastFabric step over the production mesh (shard_map).
+
+Topology mapping (DESIGN.md §2/§5): one *channel* per ``data`` rank (the
+paper's future-work "separate ordering and fast peer per channel"), and the
+``model`` axis inside a channel is the orderer-replica/validation-worker
+cluster. Per step and channel:
+
+  1. ingest      — each model rank holds B_loc client proposals (payloads
+                   stay put for the whole step: the O-I invariant);
+                   syntactic checksum runs locally (P-II parallel
+                   validation: each worker validates what it ingested);
+  2. consensus   — the log is replicated to every orderer replica:
+                   all-gather over ``model`` of the FULL wire (baseline) or
+                   only the structured prefix (O-I: IDs + rw sets + tags,
+                   ~structure bytes instead of payload bytes) + chain hash;
+  3. order       — deterministic interleave by ID hash (identical on every
+                   replica, consensus-free);
+  4. validate    — endorsement MACs on local txs (parallel), validity bits
+                   all-gathered (1 word/tx); MVCC runs on the replicated
+                   structured sets — the sequential scan every replica
+                   executes identically;
+  5. commit      — the channel's world state (replicated over ``model``,
+                   sharded over ``data``) applies valid write sets.
+
+The collective-byte asymmetry (payload vs structure bytes over the
+``model`` axis) is the paper's Opt O-I, visible directly in the dry-run
+HLO — benchmarks/fabric_roofline.py reads it out.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import crypto, hashing, mvcc, orderer, types, unmarshal
+from repro.core import world_state as ws
+
+U32 = jnp.uint32
+
+
+class FabricMeshState(NamedTuple):
+    """Per-channel peer state, channel dim leading (sharded over `data`)."""
+
+    keys: jnp.ndarray  # (C, NB, S, 2)
+    versions: jnp.ndarray  # (C, NB, S)
+    values: jnp.ndarray  # (C, NB, S, VW)
+    log_head: jnp.ndarray  # (C, 2)
+    ledger_head: jnp.ndarray  # (C, 2)
+
+
+def create_mesh_state(n_channels: int, dims: types.FabricDims,
+                      n_buckets: int = 1 << 10, slots: int = 8
+                      ) -> FabricMeshState:
+    z = lambda *s: jnp.zeros(s, U32)
+    return FabricMeshState(
+        keys=z(n_channels, n_buckets, slots, 2),
+        versions=z(n_channels, n_buckets, slots),
+        values=z(n_channels, n_buckets, slots, dims.vw),
+        log_head=z(n_channels, 2),
+        ledger_head=z(n_channels, 2),
+    )
+
+
+def state_specs(mesh) -> FabricMeshState:
+    """Channel dim over `data`; replicated over `model` (replica cluster)."""
+    c = lambda nd: P("data", *((None,) * nd))
+    return FabricMeshState(
+        keys=c(3), versions=c(2), values=c(3), log_head=c(1),
+        ledger_head=c(1),
+    )
+
+
+def _fold_log(head, digests):
+    """Chain per-row digests into the consensus log head (C-free, (2,))."""
+    def fold(h, d):
+        return jnp.stack(
+            [hashing.combine(h[0], d), hashing.combine(h[1], d)]
+        ), None
+
+    head, _ = jax.lax.scan(fold, head, digests)
+    return head
+
+
+def _fold_log_tree(head, digests):
+    """Merkle-style pairwise reduction: O(log B) sequential depth instead
+    of the O(B) chain — the beyond-paper collapse of the last serial stage
+    of consensus (§Perf fabric iteration). Deterministic; head folds in
+    once at the root."""
+    d = digests
+    while d.shape[0] > 1:
+        if d.shape[0] % 2:
+            d = jnp.concatenate([d, d[-1:]])
+        d = hashing.combine(d[0::2], d[1::2])
+    return jnp.stack(
+        [hashing.combine(head[0], d[0]), hashing.combine(head[1], d[0])]
+    )
+
+
+def make_fabric_step(dims: types.FabricDims, cfg: "FabricStepConfig", mesh):
+    """Build the jit-able sharded step.
+
+    Inputs (global shapes):
+      state: FabricMeshState with C = data axis size
+      wire (C, B_round, WB) u8, ids (C, B_round, 2) u32 — B_round is the
+      whole channel round; each model rank ingests B_round/model_size.
+    Returns (state, valid (C, B_round) bool).
+    """
+    spw = unmarshal.struct_prefix_words(dims)
+
+    def step_local(keys, vers, vals, log_head, ledger_head, wire, ids):
+        # Shapes inside shard_map: (1, NB, S, 2), ..., (1, B_loc, WB).
+        keys, vers, vals = keys[0], vers[0], vals[0]
+        log_head, ledger_head = log_head[0], ledger_head[0]
+        wire, ids = wire[0], ids[0]
+        b_loc, wb = wire.shape
+
+        words = jax.lax.bitcast_convert_type(
+            wire.reshape(b_loc, wb // 4, 4), U32
+        ).reshape(b_loc, wb // 4)
+
+        # --- 1. local syntactic verification (P-II: validate-where-ingested)
+        checksum_ok = (
+            unmarshal.payload_checksum(words) == words[:, 4]
+        )
+        # Local endorsement verification (worst case: every tag checked).
+        txb_loc = unmarshal.unmarshal(wire, dims).txb
+        endorse_ok = crypto.verify_tags(txb_loc)
+        ok_loc = checksum_ok & endorse_ok
+
+        # --- 2. consensus replication over the `model` replica cluster.
+        published = (words[:, :spw] if cfg.separate_metadata else words)
+        log_glob = jax.lax.all_gather(
+            published, "model", axis=0, tiled=True
+        )  # (B_round, spw|W)
+        if cfg.pipelined:
+            digests = hashing.hash_words(log_glob, seed=hashing.SEED_A)
+            fold = _fold_log_tree if cfg.tree_hash else _fold_log
+            log_head = fold(log_head, digests)
+        else:
+            def ser(h, row):
+                d1 = hashing.hash_words(row[None, :], seed=h[0])[0]
+                d2 = hashing.hash_words(row[None, :], seed=h[1])[0]
+                return jnp.stack([d1, d2]), None
+
+            log_head, _ = jax.lax.scan(ser, log_head, log_glob)
+
+        # --- 3. deterministic order over the channel round.
+        ids_glob = jax.lax.all_gather(ids, "model", axis=0, tiled=True)
+        order = orderer.consensus_order(ids_glob)
+
+        # --- 4. replicated validation state: flags + structured sets.
+        ok_glob = jax.lax.all_gather(ok_loc, "model", axis=0, tiled=True)
+        ordered_words = log_glob[order]
+        if cfg.separate_metadata:
+            txb = unmarshal.unmarshal_prefix(ordered_words, dims)
+        else:  # baseline replicated the whole wire; decode it again here
+            wire_glob = jax.lax.bitcast_convert_type(
+                ordered_words, jnp.uint8
+            ).reshape(ordered_words.shape[0], -1)
+            txb = unmarshal.unmarshal(wire_glob, dims).txb
+        ok_ord = ok_glob[order]
+
+        st = ws.HashState(keys=keys, versions=vers, values=vals)
+        cur = ws.lookup(
+            st, txb.read_keys.reshape(-1, 2)
+        ).versions.reshape(txb.batch, -1)
+        res = mvcc.validate(txb, cur, checksum_ok=ok_ord)
+
+        # --- 5. commit (every replica applies the same deltas).
+        cres = ws.commit(
+            st, txb.write_keys, txb.write_vals, res.valid,
+            sequential=cfg.sequential_commit,
+        )
+        st2 = cres.state
+
+        # Ledger append over the ordered round (content + validity).
+        d1 = hashing.hash_words(ordered_words, seed=hashing.SEED_A)
+        fold2 = _fold_log_tree if cfg.tree_hash else _fold_log
+        led = fold2(ledger_head, d1 ^ res.valid.astype(U32))
+
+        # Un-order validity back to ingest layout, return this rank's slice.
+        inv = jnp.argsort(order)
+        valid_ingest = res.valid[inv]
+        rank = jax.lax.axis_index("model")
+        mine = jax.lax.dynamic_slice_in_dim(
+            valid_ingest, rank * b_loc, b_loc
+        )
+        return (
+            st2.keys[None], st2.versions[None], st2.values[None],
+            log_head[None], led[None], mine[None],
+        )
+
+    cspec = state_specs(mesh)
+    io_spec = P("data", "model", None)
+    step = jax.shard_map(
+        step_local,
+        mesh=mesh,
+        in_specs=(cspec.keys, cspec.versions, cspec.values,
+                  cspec.log_head, cspec.ledger_head, io_spec, io_spec),
+        out_specs=(cspec.keys, cspec.versions, cspec.values, cspec.log_head,
+                   cspec.ledger_head, P("data", "model")),
+        check_vma=False,
+    )
+
+    def apply(state: FabricMeshState, wire, ids):
+        keys, vers, vals, log_head, led, valid = step(
+            state.keys, state.versions, state.values, state.log_head,
+            state.ledger_head, wire, ids,
+        )
+        return FabricMeshState(keys, vers, vals, log_head, led), valid
+
+    return apply
+
+
+@dataclasses.dataclass(frozen=True)
+class FabricStepConfig:
+    separate_metadata: bool = True  # O-I
+    pipelined: bool = True  # O-II
+    sequential_commit: bool = False  # paper-faithful serial commit if True
+    tree_hash: bool = False  # beyond-paper: O(log B) consensus-log fold
+    # (replaces the serial 1600-step chain with a Merkle-style pairwise
+    # reduction — different but equally deterministic log head; §Perf)
+
+    @property
+    def name(self) -> str:
+        base = "fastfabric" if self.separate_metadata else "fabric-1.2"
+        return base + ("+tree" if self.tree_hash else "")
+
+
+FASTFABRIC_STEP = FabricStepConfig()
+FABRIC_V12_STEP = FabricStepConfig(
+    separate_metadata=False, pipelined=False, sequential_commit=True
+)
+
+
+def input_specs(mesh, dims: types.FabricDims, b_loc: int = 100):
+    """ShapeDtypeStructs for the dry-run: one round of B_loc txs per device."""
+    c = mesh.shape["data"]
+    m = mesh.shape["model"]
+    b_round = b_loc * m
+    return (
+        jax.ShapeDtypeStruct((c, b_round, 4 * dims.payload_words),
+                             jnp.uint8),
+        jax.ShapeDtypeStruct((c, b_round, 2), U32),
+    )

@@ -1,0 +1,45 @@
+"""Production meshes.
+
+Single pod: 16 x 16 = 256 chips, axes (data, model).
+Multi-pod:  2 x 16 x 16 = 512 chips, axes (pod, data, model) — the pod axis
+is an outer data-parallel dimension with hierarchical (pod-local first)
+gradient reduction; it is also the committer/endorser role-split axis for
+the fabric engine (core/roles in DESIGN.md §5).
+
+Functions, not module constants: importing this module must never touch
+jax device state (the dry-run sets XLA_FLAGS before first jax init).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever this host has, as a 1 x N (data, model) mesh — used by the
+    CPU examples and tests."""
+    n = len(jax.devices())
+    return jax.make_mesh((1, n), ("data", "model"))
+
+
+def dp_axes(mesh) -> tuple:
+    """The data-parallel axis names of a mesh (pod folds into data)."""
+    names = mesh.axis_names
+    return tuple(n for n in names if n in ("pod", "data"))
+
+
+def dp_size(mesh) -> int:
+    s = 1
+    for n in dp_axes(mesh):
+        s *= mesh.shape[n]
+    return s
+
+
+def model_size(mesh) -> int:
+    return mesh.shape.get("model", 1)

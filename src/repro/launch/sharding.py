@@ -1,0 +1,201 @@
+"""Sharding rules: params, optimizer state, batches, decode caches.
+
+The layout implements DP (data [+ pod]) x TP (model) with:
+  * vocab/embedding over ``model``;
+  * attention QKV output dim and MLP hidden over ``model`` (Megatron
+    column/row split: wq/wk/wv/w_gate/w_up column-, wo/w_down row-parallel);
+  * MoE experts over ``model`` (expert parallelism; the sort-based dispatch
+    lowers to the EP all-to-all);
+  * Mamba inner channels / SSD heads over ``model``;
+  * decode KV/SSD caches: batch over DP when divisible, sequence over
+    ``model`` (decode-time sequence parallelism — the softmax reductions
+    over the sharded KV length lower to small all-reduces, the flash-decode
+    pattern); batch=1 long-context shards the sequence over *all* axes.
+  * ZeRO-1: optimizer moments take the param sharding plus a ``data`` shard
+    on the first replicated, divisible dim (optional, default on).
+
+Non-divisible cases (e.g. 28 heads on a 16-wide model axis, vocab 256206)
+are left to GSPMD's implicit padding — documented in EXPERIMENTS.md where
+they show up as useful-FLOP ratio loss.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch import mesh as mesh_lib
+
+# Param-leaf names that shard their LAST dim over `model`.
+_COL = {"wq", "wk", "wv", "bq", "bk", "bv", "w_gate", "w_up", "in_proj",
+        "conv_w", "conv_b", "dt_bias", "A_log", "D"}
+# Param-leaf names that shard their SECOND-TO-LAST dim over `model`.
+_ROW = {"wo", "w_down", "out_proj"}
+# Fully replicated.
+_REPL = {"scale", "router"}
+
+
+def _path_names(path) -> list[str]:
+    out = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            out.append(p.key)
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            out.append(p.name)
+    return out
+
+
+def param_pspec(path, leaf, msize: int) -> P:
+    """Sharding rule for one param leaf. ``msize``: model-axis width.
+
+    Shape-aware: a dim is only sharded if divisible by the axis width
+    (explicit jit in_shardings require exact divisibility — unlike
+    propagated shardings, GSPMD will not pad them). Fallbacks:
+      * MoE experts not divisible (qwen2-moe: 60 on 16) -> intra-expert
+        tensor parallelism on the hidden dim instead of EP;
+      * anything else non-divisible -> replicate (embeddings are padded to
+        a multiple of 256 in the model, so vocab always shards).
+    """
+    names = _path_names(path)
+    last = names[-1]
+    nd = leaf.ndim
+    div = lambda i: leaf.shape[i] % msize == 0 and leaf.shape[i] >= msize
+    if last in ("embed", "lm_head"):
+        return P("model", None) if div(0) else P(None, None)
+    if last in _REPL:
+        return P(*((None,) * nd))
+    in_moe = "moe" in names and "shared" not in names
+    if in_moe and last in ("w_gate", "w_up", "w_down"):
+        # (L, E, D, F): experts over model (EP)...
+        if div(nd - 3):
+            return P(*((None,) * (nd - 3)), "model", None, None)
+        # ...else TP inside each expert (column for gate/up, row for down).
+        if last in ("w_gate", "w_up") and div(nd - 1):
+            return P(*((None,) * (nd - 1)), "model")
+        if last == "w_down" and div(nd - 2):
+            return P(*((None,) * (nd - 2)), "model", None)
+        return P(*((None,) * nd))
+    if last in _COL:
+        return (P(*((None,) * (nd - 1)), "model") if div(nd - 1)
+                else P(*((None,) * nd)))
+    if last in _ROW:
+        return (P(*((None,) * (nd - 2)), "model", None) if div(nd - 2)
+                else P(*((None,) * nd)))
+    return P(*((None,) * nd))
+
+
+def param_specs(params_shape, mesh=None) -> Any:
+    """Pytree of PartitionSpec for a params pytree (of arrays or
+    ShapeDtypeStructs)."""
+    msize = mesh_lib.model_size(mesh) if mesh is not None else 16
+    return jax.tree_util.tree_map_with_path(
+        lambda pth, lf: param_pspec(pth, lf, msize), params_shape
+    )
+
+
+def zero1_pspec(spec: P, shape, dp: tuple, dp_total: int) -> P:
+    """Add a `data` shard to the first replicated divisible dim (ZeRO-1)."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    for i, (e, dim) in enumerate(zip(entries, shape)):
+        if e is None and dim % dp_total == 0 and dim >= dp_total:
+            entries[i] = dp if len(dp) > 1 else dp[0]
+            return P(*entries)
+    return spec
+
+
+def opt_specs(params_shape, mesh, *, zero1: bool = True):
+    """AdamWState specs: moments = param spec (+ZeRO-1), step replicated."""
+    pspecs = param_specs(params_shape, mesh)
+    dp = mesh_lib.dp_axes(mesh)
+    dpt = mesh_lib.dp_size(mesh)
+    if zero1:
+        mspecs = jax.tree.map(
+            lambda s, l: zero1_pspec(s, l.shape, dp, dpt),
+            pspecs, params_shape,
+        )
+    else:
+        mspecs = pspecs
+    from repro.training.optimizer import AdamWState
+
+    return AdamWState(step=P(), m=mspecs, v=mspecs)
+
+
+def batch_pspecs(batch_shape, mesh):
+    """Batch pytree specs: leading batch dim over DP axes."""
+    dp = mesh_lib.dp_axes(mesh)
+    dpa = dp if len(dp) > 1 else dp[0]
+
+    def spec(x):
+        if x is None:
+            return None
+        return P(dpa, *((None,) * (x.ndim - 1)))
+
+    return jax.tree.map(spec, batch_shape)
+
+
+def cache_pspecs(cache_shape, mesh):
+    """DecodeCache specs (see module docstring for the layout)."""
+    dp = mesh_lib.dp_axes(mesh)
+    dpa = dp if len(dp) > 1 else dp[0]
+    dpt = mesh_lib.dp_size(mesh)
+
+    def kv_spec(x):
+        # (L|Sites, B, S, H, Dh)
+        if x is None:
+            return None
+        _, b, s, _, _ = x.shape
+        if b % dpt == 0 and b >= dpt:
+            return P(None, dpa, "model", None, None)
+        # batch too small (long-context b=1): shard S over everything.
+        all_axes = tuple(mesh.axis_names)
+        return P(None, None, all_axes, None, None)
+
+    def conv_spec(x):
+        # (L, B, K-1, C)
+        if x is None:
+            return None
+        b = x.shape[1]
+        bspec = dpa if (b % dpt == 0 and b >= dpt) else None
+        return P(None, bspec, None, "model")
+
+    def ssm_spec(x):
+        # (L, B, H, P, N)
+        if x is None:
+            return None
+        b = x.shape[1]
+        bspec = dpa if (b % dpt == 0 and b >= dpt) else None
+        return P(None, bspec, "model", None, None)
+
+    from repro.models.lm import DecodeCache
+
+    return DecodeCache(
+        k=kv_spec(cache_shape.k),
+        v=kv_spec(cache_shape.v),
+        cross_k=kv_spec(cache_shape.cross_k),
+        cross_v=kv_spec(cache_shape.cross_v),
+        conv=conv_spec(cache_shape.conv),
+        ssm_state=ssm_spec(cache_shape.ssm_state),
+        hyb_k=kv_spec(cache_shape.hyb_k),
+        hyb_v=kv_spec(cache_shape.hyb_v),
+    )
+
+
+def token_pspec(batch_size: int, mesh):
+    dp = mesh_lib.dp_axes(mesh)
+    dpa = dp if len(dp) > 1 else dp[0]
+    dpt = mesh_lib.dp_size(mesh)
+    if batch_size % dpt == 0 and batch_size >= dpt:
+        return P(dpa)
+    return P()
+
+
+def to_named(tree_of_pspecs, mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s) if isinstance(s, P) else s,
+        tree_of_pspecs,
+        is_leaf=lambda x: isinstance(x, P) or x is None,
+    )

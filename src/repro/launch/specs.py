@@ -1,0 +1,70 @@
+"""ShapeDtypeStruct stand-ins for every (arch x shape) dry-run cell.
+
+No device allocation happens here: params/caches come from jax.eval_shape,
+inputs are ShapeDtypeStructs. ``enc_len_for``/``text_len_for`` centralize
+the modality-stub conventions (audio frames = seq//4; vision prefix =
+cfg.n_prefix patches).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import ShapeSpec
+from repro.models.lm import LM, Batch
+from repro.training import optimizer, train_step as ts_lib
+
+
+def enc_len_for(cfg: ModelConfig, seq_len: int) -> int:
+    """Audio-frame (encoder) length for encdec archs: seq//4."""
+    return seq_len // 4 if cfg.family == "encdec" else 0
+
+
+def text_len_for(cfg: ModelConfig, seq_len: int) -> int:
+    """Token positions = seq minus the vision prefix."""
+    if cfg.frontend == "vision":
+        return seq_len - cfg.n_prefix
+    return seq_len
+
+
+def batch_specs(cfg: ModelConfig, seq_len: int, batch: int,
+                *, with_labels: bool) -> Batch:
+    s = lambda *shape, dt=jnp.int32: jax.ShapeDtypeStruct(shape, dt)
+    st = text_len_for(cfg, seq_len)
+    prefix = None
+    enc = None
+    if cfg.frontend == "vision":
+        prefix = s(batch, cfg.n_prefix, cfg.d_model, dt=cfg.jnp_dtype)
+    if cfg.family == "encdec":
+        enc = s(batch, enc_len_for(cfg, seq_len), cfg.d_model,
+                dt=cfg.jnp_dtype)
+    return Batch(
+        tokens=s(batch, st),
+        labels=s(batch, st) if with_labels else None,
+        prefix_embeds=prefix,
+        enc_embeds=enc,
+    )
+
+
+def param_shapes(model: LM):
+    return jax.eval_shape(model.init, jax.random.PRNGKey(0))
+
+
+def train_state_shapes(model: LM):
+    return jax.eval_shape(
+        lambda k: ts_lib.init_state(model, k), jax.random.PRNGKey(0)
+    )
+
+
+def cache_shapes(model: LM, batch: int, seq_len: int):
+    enc_len = enc_len_for(model.cfg, seq_len)
+    return jax.eval_shape(
+        lambda: model.init_cache(batch, seq_len, enc_len=enc_len)
+    )
+
+
+def decode_token_specs(batch: int):
+    return (jax.ShapeDtypeStruct((batch,), jnp.int32),
+            jax.ShapeDtypeStruct((), jnp.int32))

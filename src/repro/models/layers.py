@@ -1,0 +1,370 @@
+"""Transformer substrate: norms, rotary embeddings, GQA attention, SwiGLU.
+
+Pure-functional: ``init_*`` builds param pytrees (plain dicts), apply
+functions are jit/scan/pjit friendly. No framework dependency.
+
+Attention has two implementations sharing one oracle-checked semantics:
+  * ``attn_naive``   — materializes (S, S) scores; used for smoke tests,
+    short sequences and single-token decode.
+  * ``attn_chunked`` — online-softmax over KV chunks with a Python-unrolled
+    loop over Q chunks so causal cells process only kv_chunk <= q_chunk
+    (exact N^2/2 FLOPs, no fully-masked chunk waste); peak memory is one
+    (B, H, q_chunk, kv_chunk) tile. This is the XLA flash-attention
+    restructuring used by the 32k prefill cells; kernels/flash_attention is
+    the Pallas TPU version of the same loop.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+Params = dict
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def _dense_init(key, d_in: int, d_out: int, dtype) -> jnp.ndarray:
+    scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.truncated_normal(key, -2, 2, (d_in, d_out)) * scale
+            ).astype(dtype)
+
+
+def init_rmsnorm(d: int, dtype) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _rmsnorm_core(x: jnp.ndarray, scale: jnp.ndarray, eps: float
+                  ) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def _rmsnorm_fwd(x, scale, eps):
+    return _rmsnorm_core(x, scale, eps), (x, scale)
+
+
+def _rmsnorm_bwd(eps, res, dy):
+    """Hand-written VJP: identical math to autodiff, but one fused formula
+    whose boundary tensors stay in the input dtype — autodiff's backward
+    materialized several f32 hidden-sized cotangents per call, which the
+    train-cell roofline showed as the dominant HBM traffic (§Perf)."""
+    x, scale = res
+    xf = x.astype(jnp.float32)
+    gf = dy.astype(jnp.float32) * scale.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    r = jax.lax.rsqrt(var + eps)
+    xhat = xf * r
+    dx = r * (gf - xhat * jnp.mean(gf * xhat, axis=-1, keepdims=True))
+    dscale = jnp.sum(
+        (dy.astype(jnp.float32) * xhat).reshape(-1, x.shape[-1]), axis=0
+    )
+    return dx.astype(x.dtype), dscale.astype(scale.dtype)
+
+
+_rmsnorm_core.defvjp(_rmsnorm_fwd, _rmsnorm_bwd)
+
+
+def rmsnorm(p: Params, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    return _rmsnorm_core(x, p["scale"], eps)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(d_head: int, theta: float) -> jnp.ndarray:
+    """Inverse frequencies (d_head/2,) f32."""
+    exponent = jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head
+    return 1.0 / (theta ** exponent)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float
+               ) -> jnp.ndarray:
+    """x (B, S, H, D), positions (S,) or (B, S) -> rotated x (same dtype)."""
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)  # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., S, D/2)
+    if ang.ndim == 2:  # (S, D/2) -> broadcast over batch
+        ang = ang[None]
+    cos = jnp.cos(ang)[:, :, None, :]  # (B|1, S, 1, D/2)
+    sin = jnp.sin(ang)[:, :, None, :]
+    xf = x.astype(jnp.float32)
+    x1, x2 = xf[..., : d // 2], xf[..., d // 2:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg: ModelConfig) -> Params:
+    dt = cfg.jnp_dtype
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _dense_init(ks[0], d, h * hd, dt),
+        "wk": _dense_init(ks[1], d, kv * hd, dt),
+        "wv": _dense_init(ks[2], d, kv * hd, dt),
+        "wo": _dense_init(ks[3], h * hd, d, dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dt)
+        p["bk"] = jnp.zeros((kv * hd,), dt)
+        p["bv"] = jnp.zeros((kv * hd,), dt)
+    if cfg.qk_norm:
+        p["q_norm"] = init_rmsnorm(hd, dt)
+        p["k_norm"] = init_rmsnorm(hd, dt)
+    return p
+
+
+def _expand_kv(k: jnp.ndarray, n_heads: int) -> jnp.ndarray:
+    """(B, S, Hkv, D) -> (B, S, H, D) by group broadcast."""
+    b, s, hkv, d = k.shape
+    if hkv == n_heads:
+        return k
+    group = n_heads // hkv
+    k = jnp.broadcast_to(k[:, :, :, None, :], (b, s, hkv, group, d))
+    return k.reshape(b, s, n_heads, d)
+
+
+def attn_grouped(q, k, v, *, causal: bool, q_offset=0) -> jnp.ndarray:
+    """GQA attention without expanding KV: q is reshaped to (Hkv, G) groups.
+
+    Used on the decode path where the KV cache is sequence-sharded: keeping
+    K/V in their native (B, S, Hkv, D) layout means the softmax/contraction
+    reductions over the sharded S lower to small all-reduces (flash-decode)
+    instead of an involuntary KV all-gather (observed with the broadcast
+    formulation — see EXPERIMENTS.md §Perf).
+    """
+    b, sq, h, d = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    scale = 1.0 / math.sqrt(d)
+    qg = q.reshape(b, sq, hkv, g, d).astype(jnp.float32)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k.astype(jnp.float32)
+                        ) * scale
+    if causal:
+        sk = k.shape[1]
+        qpos = jnp.arange(sq) + q_offset
+        mask = qpos[:, None] >= jnp.arange(sk)[None, :]
+        scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, d).astype(q.dtype)
+
+
+def attn_naive(q, k, v, *, causal: bool, q_offset=0) -> jnp.ndarray:
+    """q (B,Sq,H,D), k/v (B,Sk,Hkv,D) -> (B,Sq,H,D). Scores materialized.
+
+    ``q_offset``: absolute position of q[0] relative to k[0] (decode: Sk-1).
+    """
+    h = q.shape[2]
+    k = _expand_kv(k, h)
+    v = _expand_kv(v, h)
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    scores = jnp.einsum(
+        "bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    if causal:
+        sq, sk = q.shape[1], k.shape[1]
+        qpos = jnp.arange(sq) + q_offset
+        mask = qpos[:, None] >= jnp.arange(sk)[None, :]
+        scores = jnp.where(mask[None, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def attn_chunked(q, k, v, *, causal: bool, q_chunk: int = 2048,
+                 kv_chunk: int = 2048) -> jnp.ndarray:
+    """Online-softmax attention; memory ~ one (B,H,qc,kc) tile.
+
+    Q chunks unrolled in Python; each scans only the KV chunks its causal
+    mask can reach (static bound), so compiled FLOPs are the exact causal
+    N^2/2 — this is what the 32k prefill roofline measures.
+    """
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    k = _expand_kv(k, h)
+    v = _expand_kv(v, h)
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, sk)
+    if sq % q_chunk or sk % kv_chunk:
+        raise ValueError(f"seq ({sq},{sk}) not divisible by chunks "
+                         f"({q_chunk},{kv_chunk})")
+    scale = 1.0 / math.sqrt(d)
+    nq = sq // q_chunk
+    nk = sk // kv_chunk
+    kc = k.reshape(b, nk, kv_chunk, h, d)
+    vc = v.reshape(b, nk, kv_chunk, h, d)
+
+    outs = []
+    for iq in range(nq):
+        qi = q[:, iq * q_chunk:(iq + 1) * q_chunk].astype(jnp.float32)
+        # Causal: only kv chunks that start at or before this q chunk's end.
+        hi = nk if not causal else min(
+            nk, (iq + 1) * q_chunk // kv_chunk + (1 if q_chunk % kv_chunk else 0)
+        )
+        hi = max(hi, 1)
+
+        def body(carry, ik):
+            acc, m, l = carry
+            kj = jax.lax.dynamic_index_in_dim(kc, ik, 1, keepdims=False)
+            vj = jax.lax.dynamic_index_in_dim(vc, ik, 1, keepdims=False)
+            s = jnp.einsum(
+                "bqhd,bkhd->bhqk", qi, kj.astype(jnp.float32)
+            ) * scale  # (B, H, qc, kc)
+            if causal:
+                qpos = iq * q_chunk + jnp.arange(q_chunk)
+                kpos = ik * kv_chunk + jnp.arange(kv_chunk)
+                s = jnp.where(
+                    qpos[:, None] >= kpos[None, :], s, -jnp.inf
+                )
+            m_new = jnp.maximum(m, s.max(axis=-1))  # (B, H, qc)
+            # Renormalize the running accumulator.
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l = l * alpha + p.sum(axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p, vj.astype(jnp.float32)
+            )
+            return (acc, m_new, l), None
+
+        acc0 = jnp.zeros((b, h, q_chunk, d), jnp.float32)
+        m0 = jnp.full((b, h, q_chunk), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, h, q_chunk), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(
+            body, (acc0, m0, l0), jnp.arange(hi)
+        )
+        out = acc / jnp.maximum(l[..., None], 1e-37)
+        outs.append(out.swapaxes(1, 2))  # (B, qc, H, D)
+    return jnp.concatenate(outs, axis=1).astype(q.dtype)
+
+
+def attention(p: Params, cfg: ModelConfig, x: jnp.ndarray, *,
+              positions: jnp.ndarray, causal: bool = True,
+              kv_cache: tuple[jnp.ndarray, jnp.ndarray] | None = None,
+              cache_len: jnp.ndarray | None = None,
+              impl: str = "naive", memory: jnp.ndarray | None = None,
+              q_chunk: int = 2048, kv_chunk: int = 2048,
+              shard_heads=None):
+    """Full attention sub-layer: projections + rope + core + output.
+
+    Modes:
+      * self-attention over x (train/prefill): kv_cache None.
+      * cached decode: kv_cache=(k,v) (B, Smax, Hkv, D), cache_len = filled
+        length; x is the new token(s). Returns (out, (k, v) updated).
+      * cross-attention: ``memory`` (B, Sm, Dm) provides K/V (no rope, no
+        causal mask).
+    """
+    b, s, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
+
+    def proj(w, bias, src, nh):
+        y = src @ w.astype(src.dtype)
+        if bias is not None:
+            y = y + bias.astype(y.dtype)
+        return y.reshape(src.shape[0], src.shape[1], nh, hd)
+
+    q = proj(p["wq"], p.get("bq"), x, h)
+    kv_src = memory if memory is not None else x
+    key = proj(p["wk"], p.get("bk"), kv_src, kv)
+    val = proj(p["wv"], p.get("bv"), kv_src, kv)
+
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        key = rmsnorm(p["k_norm"], key, cfg.norm_eps)
+
+    if memory is None:  # rope only for self-attention
+        q = apply_rope(q, positions, cfg.rope_theta)
+        key = apply_rope(key, positions, cfg.rope_theta)
+
+    if shard_heads is not None:  # pin (B,S,H,D) layout (perf: see lm.py)
+        # Only Q: KV head counts (GQA) rarely divide the model axis; the
+        # expand-to-H broadcast then inherits Q's head sharding.
+        q = shard_heads(q)
+
+    if kv_cache is not None:
+        ck, cv = kv_cache
+        # Insert the new K/V rows at cache_len (decode: s == 1).
+        ck = jax.lax.dynamic_update_slice(
+            ck, key.astype(ck.dtype), (0, cache_len, 0, 0)
+        )
+        cv = jax.lax.dynamic_update_slice(
+            cv, val.astype(cv.dtype), (0, cache_len, 0, 0)
+        )
+        kv_out = (ck, cv)
+        # Attend over the whole cache; entries past cache_len+s are masked
+        # by the causal offset (q_offset = cache_len). Grouped formulation:
+        # no KV expansion, S stays sequence-sharded.
+        out = attn_grouped(q, ck, cv, causal=True, q_offset=cache_len)
+    else:
+        kv_out = (key, val)
+        if impl == "chunked" and s > q_chunk:
+            out = attn_chunked(q, key, val, causal=causal and memory is None,
+                               q_chunk=q_chunk, kv_chunk=kv_chunk)
+        else:
+            out = attn_naive(q, key, val, causal=causal and memory is None)
+
+    out = out.reshape(b, s, h * hd) @ p["wo"].astype(x.dtype)
+    return out, kv_out
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d_model: int, d_ff: int, dtype) -> Params:
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": _dense_init(ks[0], d_model, d_ff, dtype),
+        "w_up": _dense_init(ks[1], d_model, d_ff, dtype),
+        "w_down": _dense_init(ks[2], d_ff, d_model, dtype),
+    }
+
+
+def mlp(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    dt = x.dtype
+    g = x @ p["w_gate"].astype(dt)
+    u = x @ p["w_up"].astype(dt)
+    return (jax.nn.silu(g.astype(jnp.float32)).astype(dt) * u) @ p[
+        "w_down"
+    ].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def init_embedding(key, vocab: int, d_model: int, dtype) -> jnp.ndarray:
+    return (jax.random.normal(key, (vocab, d_model)) * 0.02).astype(dtype)
+
+
+def embed(table: jnp.ndarray, tokens: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed(table_or_head: jnp.ndarray, x: jnp.ndarray, *, transpose: bool
+            ) -> jnp.ndarray:
+    """Logits in f32. ``transpose``: table is (V, D) tied embedding."""
+    w = table_or_head.astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    return xf @ (w.T if transpose else w)

@@ -1,0 +1,776 @@
+"""Top-level language models for every assigned family.
+
+One ``LM`` class drives five block stacks (dense / moe / ssm / hybrid /
+encdec) behind a uniform API:
+
+  init(key)                                  -> params
+  forward(params, batch)                     -> hidden states (B, S, D)
+  loss(params, batch)                        -> (scalar CE, metrics)
+  init_cache(batch, seq_len)                 -> decode cache
+  prefill(params, batch, cache)              -> (last-token logits, cache)
+  decode_step(params, cache, token, pos)     -> (logits, cache)
+
+Design notes (all driven by the 40 dry-run cells):
+  * Layers are stacked (leading L dim) and driven by lax.scan — HLO size
+    stays O(1) in depth, which is what makes 64-layer x 512-device lowering
+    tractable.
+  * Logits are never materialized (B, S, V): the loss contracts hidden
+    states against the vocab table in sequence chunks (``vocab_chunk``),
+    bounding the f32 logits tile.
+  * Attention picks ``attn_chunked`` for long sequences (exact-causal
+    online softmax, see models/layers.py) and naive scores otherwise.
+  * Modality frontends are stubs per the assignment: batches carry
+    precomputed ``prefix_embeds`` (vision) or ``enc_embeds`` (audio).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers, moe, ssm
+
+Params = dict
+
+
+@dataclasses.dataclass(frozen=True)
+class Batch:
+    """Uniform input bundle (any field may be None depending on family)."""
+
+    tokens: jnp.ndarray  # (B, S_text) i32
+    labels: Optional[jnp.ndarray] = None  # (B, S_text) i32; -1 = masked
+    prefix_embeds: Optional[jnp.ndarray] = None  # (B, S_prefix, D)
+    enc_embeds: Optional[jnp.ndarray] = None  # (B, S_enc, D)
+
+
+jax.tree_util.register_dataclass(
+    Batch,
+    data_fields=["tokens", "labels", "prefix_embeds", "enc_embeds"],
+    meta_fields=[],
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodeCache:
+    """Decode-time state. Fields unused by a family are None.
+
+    k/v:            (L, B, S_max, Hkv, Dh) self-attention cache
+    cross_k/v:      (L, B, S_enc, Hkv, Dh) encdec cross-attention cache
+    conv/ssm_state: (L, B, K-1, C) / (L, B, H, P, N) mamba recurrent state
+    hyb_k/v:        (Sites, B, S_max, Hkv, Dh) hybrid shared-attn caches
+    """
+
+    k: Any = None
+    v: Any = None
+    cross_k: Any = None
+    cross_v: Any = None
+    conv: Any = None
+    ssm_state: Any = None
+    hyb_k: Any = None
+    hyb_v: Any = None
+
+
+jax.tree_util.register_dataclass(
+    DecodeCache,
+    data_fields=["k", "v", "cross_k", "cross_v", "conv", "ssm_state",
+                 "hyb_k", "hyb_v"],
+    meta_fields=[],
+)
+
+
+def _stack_init(init_fn, key, n: int):
+    """vmap an init over n layer keys -> stacked params (leading dim n)."""
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+class LM:
+    def __init__(self, cfg: ModelConfig, *, attn_impl: str = "auto",
+                 q_chunk: int = 2048, kv_chunk: int = 2048,
+                 ssd_chunk: int = 256, vocab_chunk: int = 512,
+                 moe_capacity_factor: float = 1.25,
+                 remat: str = "none", mesh_axes: tuple = (),
+                 moe_dispatch: str = "sort", moe_groups: int = 1):
+        self.cfg = cfg
+        self.attn_impl = attn_impl
+        self.q_chunk = q_chunk
+        self.kv_chunk = kv_chunk
+        self.ssd_chunk = ssd_chunk
+        self.vocab_chunk = vocab_chunk
+        self.moe_cf = moe_capacity_factor
+        self.remat = remat
+        # Beyond-paper §Perf knobs (baseline keeps both off/default):
+        #   mesh_axes: non-empty enables explicit activation-sharding
+        #   constraints — (B over dp, heads/hidden over model) — which pin
+        #   GSPMD away from partial-sum attention schedules (EXPERIMENTS.md
+        #   §Perf iteration 2). Must be lowered inside `with mesh:`.
+        #   moe_dispatch: "sort" (distributed argsort) | "cumsum"
+        #   (sort-free capacity assignment, §Perf iteration on the MoE cell)
+        self.mesh_axes = tuple(mesh_axes)
+        self.moe_dispatch = moe_dispatch
+        self.moe_groups = moe_groups
+        if mesh_axes:
+            dp = tuple(a for a in mesh_axes if a in ("pod", "data"))
+            self._dp = dp if len(dp) > 1 else dp[0]
+        else:
+            self._dp = None
+
+    def _constrain(self, x, *spec):
+        """with_sharding_constraint if mesh_axes configured, else no-op."""
+        if self._dp is None or x is None:
+            return x
+        from jax.sharding import PartitionSpec as P
+
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+
+    def shard_hidden(self, x):
+        return self._constrain(x, self._dp, None, None)
+
+    def shard_heads(self, x):
+        """(B, S, H, D): batch over dp, heads over model."""
+        return self._constrain(x, self._dp, None, "model", None)
+
+    def shard_group(self, x):
+        """MoE per-group buffers: leading group dim over dp."""
+        return self._constrain(x, self._dp, *((None,) * (x.ndim - 1)))
+
+    def _moe_kwargs(self) -> dict:
+        return dict(
+            capacity_factor=self.moe_cf, dispatch=self.moe_dispatch,
+            groups=self.moe_groups,
+            shard_group=(self.shard_group if self._dp is not None
+                         and self.moe_groups > 1 else None),
+        )
+
+    # ------------------------------------------------------------------ init
+
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        dt = cfg.jnp_dtype
+        keys = jax.random.split(key, 8)
+        p: Params = {
+            "embed": layers.init_embedding(
+                keys[0], cfg.vocab_padded, cfg.d_model, dt
+            ),
+            "final_norm": layers.init_rmsnorm(cfg.d_model, dt),
+        }
+        if not cfg.tie_embeddings:
+            p["lm_head"] = layers.init_embedding(
+                keys[1], cfg.vocab_padded, cfg.d_model, dt
+            )
+
+        def dense_layer(k):
+            k1, k2 = jax.random.split(k)
+            return {
+                "attn": layers.init_attention(k1, cfg),
+                "mlp": layers.init_mlp(k2, cfg.d_model, cfg.d_ff, dt),
+                "norm1": layers.init_rmsnorm(cfg.d_model, dt),
+                "norm2": layers.init_rmsnorm(cfg.d_model, dt),
+            }
+
+        def moe_layer(k):
+            k1, k2 = jax.random.split(k)
+            return {
+                "attn": layers.init_attention(k1, cfg),
+                "moe": moe.init_moe(k2, cfg),
+                "norm1": layers.init_rmsnorm(cfg.d_model, dt),
+                "norm2": layers.init_rmsnorm(cfg.d_model, dt),
+            }
+
+        def mamba_layer(k):
+            return {
+                "mamba": ssm.init_mamba(k, cfg),
+                "norm": layers.init_rmsnorm(cfg.d_model, dt),
+            }
+
+        def dec_layer(k):
+            k1, k2, k3 = jax.random.split(k, 3)
+            return {
+                "self_attn": layers.init_attention(k1, cfg),
+                "cross_attn": layers.init_attention(k2, cfg),
+                "mlp": layers.init_mlp(k3, cfg.d_model, cfg.d_ff, dt),
+                "norm1": layers.init_rmsnorm(cfg.d_model, dt),
+                "norm2": layers.init_rmsnorm(cfg.d_model, dt),
+                "norm3": layers.init_rmsnorm(cfg.d_model, dt),
+            }
+
+        fam = cfg.family
+        if fam == "dense":
+            p["layers"] = _stack_init(dense_layer, keys[2], cfg.n_layers)
+        elif fam == "moe":
+            p["layers"] = _stack_init(moe_layer, keys[2], cfg.n_layers)
+        elif fam == "ssm":
+            p["layers"] = _stack_init(mamba_layer, keys[2], cfg.n_layers)
+        elif fam == "hybrid":
+            p["layers"] = _stack_init(mamba_layer, keys[2], cfg.n_layers)
+            p["shared_attn"] = dense_layer(keys[3])  # ONE param set, reused
+        elif fam == "encdec":
+            p["enc_layers"] = _stack_init(dense_layer, keys[2], cfg.enc_layers)
+            p["layers"] = _stack_init(dec_layer, keys[3], cfg.n_layers)
+            p["enc_final_norm"] = layers.init_rmsnorm(cfg.d_model, dt)
+        else:
+            raise ValueError(f"unknown family {fam}")
+        return p
+
+    # ----------------------------------------------------------- embeddings
+
+    def _embed_inputs(self, params: Params, batch: Batch) -> jnp.ndarray:
+        x = layers.embed(params["embed"], batch.tokens)
+        if batch.prefix_embeds is not None:
+            x = jnp.concatenate(
+                [batch.prefix_embeds.astype(x.dtype), x], axis=1
+            )
+        return x
+
+    def _maybe_remat(self, fn):
+        if self.remat == "none":
+            return fn
+        policy = {
+            "full": None,
+            "dots": jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+        }[self.remat]
+        return jax.checkpoint(fn, policy=policy)
+
+    def _attn_kwargs(self, seq: int) -> dict:
+        impl = self.attn_impl
+        if impl == "auto":
+            impl = "chunked" if seq > 2 * self.q_chunk else "naive"
+        return dict(impl=impl, q_chunk=self.q_chunk, kv_chunk=self.kv_chunk)
+
+    # ---------------------------------------------------------- block bodies
+
+    def _dense_block(self, lp: Params, x, positions, *, causal=True,
+                     collect_kv=False, seq=None):
+        cfg = self.cfg
+        x = self.shard_hidden(x)
+        h, kv = layers.attention(
+            lp["attn"], cfg, layers.rmsnorm(lp["norm1"], x, cfg.norm_eps),
+            positions=positions, causal=causal,
+            shard_heads=(self.shard_heads if self._dp is not None
+                         else None),
+            **self._attn_kwargs(seq or x.shape[1]),
+        )
+        x = x + h
+        mlp_in = layers.rmsnorm(lp["norm2"], x, cfg.norm_eps)
+        if "moe" in lp:
+            y, aux = moe.moe_mlp(lp["moe"], cfg, mlp_in,
+                                 **self._moe_kwargs())
+        else:
+            y, aux = layers.mlp(lp["mlp"], mlp_in), jnp.float32(0)
+        return x + y, aux
+
+    def _mamba_block(self, lp: Params, x):
+        cfg = self.cfg
+        y = ssm.mamba_forward(
+            lp["mamba"], cfg,
+            layers.rmsnorm(lp["norm"], x, cfg.norm_eps),
+            chunk=self.ssd_chunk,
+        )
+        return x + y
+
+    # -------------------------------------------------------------- forward
+
+    def forward(self, params: Params, batch: Batch) -> jnp.ndarray:
+        """Hidden states after final norm, (B, S, D)."""
+        cfg = self.cfg
+        fam = cfg.family
+        x = self._embed_inputs(params, batch)
+        s = x.shape[1]
+        positions = jnp.arange(s)
+
+        if fam in ("dense", "moe"):
+            def body(carry, lp):
+                x, aux = carry
+                x, a = self._dense_block(lp, x, positions, seq=s)
+                return (x, aux + a), None
+
+            body = self._maybe_remat(body)
+            (x, aux), _ = jax.lax.scan(
+                body, (x, jnp.float32(0)), params["layers"]
+            )
+            self._last_aux = aux / cfg.n_layers
+        elif fam == "ssm":
+            def body(x, lp):
+                return self._mamba_block(lp, x), None
+
+            body = self._maybe_remat(body)
+            x, _ = jax.lax.scan(body, x, params["layers"])
+        elif fam == "hybrid":
+            x = self._hybrid_forward(params, x, positions)
+        elif fam == "encdec":
+            memory = self._encode(params, batch)
+            x = self._decode_stack(params, x, positions, memory)
+        x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        return x
+
+    def _hybrid_groups(self):
+        """[(site_before?, start, end)] mamba layer groups (static)."""
+        cfg = self.cfg
+        step = cfg.attn_every
+        groups = []
+        for start in range(0, cfg.n_layers, step):
+            groups.append((start, min(start + step, cfg.n_layers)))
+        return groups
+
+    def _hybrid_forward(self, params, x, positions):
+        cfg = self.cfg
+        s = x.shape[1]
+        for (start, end) in self._hybrid_groups():
+            # Weight-shared attention block before each group (zamba2).
+            x, _ = self._dense_block(
+                params["shared_attn"], x, positions, seq=s
+            )
+
+            def body(x, lp):
+                return self._mamba_block(lp, x), None
+
+            body = self._maybe_remat(body)
+            grp = jax.tree.map(lambda a: a[start:end], params["layers"])
+            x, _ = jax.lax.scan(body, x, grp)
+        return x
+
+    def _encode(self, params, batch: Batch) -> jnp.ndarray:
+        cfg = self.cfg
+        mem = batch.enc_embeds.astype(cfg.jnp_dtype)
+        pos = jnp.arange(mem.shape[1])
+
+        def body(x, lp):
+            x, _ = self._dense_block(lp, x, pos, causal=False,
+                                     seq=mem.shape[1])
+            return x, None
+
+        body = self._maybe_remat(body)
+        mem, _ = jax.lax.scan(body, mem, params["enc_layers"])
+        return layers.rmsnorm(params["enc_final_norm"], mem, cfg.norm_eps)
+
+    def _decode_stack(self, params, x, positions, memory):
+        cfg = self.cfg
+        s = x.shape[1]
+
+        def body(x, lp):
+            h, _ = layers.attention(
+                lp["self_attn"], cfg,
+                layers.rmsnorm(lp["norm1"], x, cfg.norm_eps),
+                positions=positions, causal=True, shard_heads=(self.shard_heads if self._dp is not None
+                             else None),
+                **self._attn_kwargs(s),
+            )
+            x = x + h
+            h, _ = layers.attention(
+                lp["cross_attn"], cfg,
+                layers.rmsnorm(lp["norm2"], x, cfg.norm_eps),
+                positions=positions, memory=memory,
+                **self._attn_kwargs(s),
+            )
+            x = x + h
+            x = x + layers.mlp(
+                lp["mlp"], layers.rmsnorm(lp["norm3"], x, cfg.norm_eps)
+            )
+            return x, None
+
+        body = self._maybe_remat(body)
+        x, _ = jax.lax.scan(body, x, params["layers"])
+        return x
+
+    # ------------------------------------------------------------------ loss
+
+    def loss(self, params: Params, batch: Batch):
+        """Chunked-vocab causal LM loss. Labels -1 are masked out."""
+        cfg = self.cfg
+        h = self.forward(params, batch)  # (B, S, D)
+        if batch.prefix_embeds is not None:
+            h = h[:, batch.prefix_embeds.shape[1]:]  # loss on text only
+        labels = batch.labels
+        b, s, d = h.shape
+        table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+
+        c = min(self.vocab_chunk, s)
+        while s % c:
+            c -= 1
+        ns = s // c
+        hc = jnp.moveaxis(h.reshape(b, ns, c, d), 1, 0)  # (ns, B, c, D)
+        yc = jnp.moveaxis(labels.reshape(b, ns, c), 1, 0)
+
+        vpad = cfg.vocab_padded
+
+        def body(carry, inp):
+            tot, cnt = carry
+            hs, ys = inp
+            logits = layers.unembed(table, hs, transpose=True)  # (B,c,Vp) f32
+            if vpad != cfg.vocab:  # mask padded vocab rows out of the lse
+                pad_mask = jnp.arange(vpad) >= cfg.vocab
+                logits = jnp.where(pad_mask, -jnp.inf, logits)
+            lse = jax.scipy.special.logsumexp(logits, axis=-1)
+            mask = ys >= 0
+            safe = jnp.maximum(ys, 0)
+            ll = jnp.take_along_axis(
+                logits, safe[..., None], axis=-1
+            )[..., 0]
+            tot = tot + jnp.sum(jnp.where(mask, lse - ll, 0.0))
+            cnt = cnt + jnp.sum(mask)
+            return (tot, cnt), None
+
+        (tot, cnt), _ = jax.lax.scan(
+            body, (jnp.float32(0), jnp.int32(0)), (hc, yc)
+        )
+        ce = tot / jnp.maximum(cnt, 1)
+        metrics = {"ce": ce, "tokens": cnt}
+        aux = getattr(self, "_last_aux", None)
+        if cfg.family == "moe" and aux is not None:
+            metrics["aux"] = aux
+            return ce + 0.01 * aux, metrics
+        return ce, metrics
+
+    def logits(self, params: Params, batch: Batch) -> jnp.ndarray:
+        """Full logits — small models / tests only."""
+        cfg = self.cfg
+        h = self.forward(params, batch)
+        table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+        return layers.unembed(table, h, transpose=True)[..., : cfg.vocab]
+
+    # ----------------------------------------------------------------- cache
+
+    def init_cache(self, batch_size: int, seq_len: int,
+                   enc_len: int = 0) -> DecodeCache:
+        cfg = self.cfg
+        dt = cfg.jnp_dtype
+        l, kvh, hd = cfg.n_layers, cfg.n_kv, cfg.head_dim
+        kv_shape = (l, batch_size, seq_len, kvh, hd)
+        fam = cfg.family
+        if fam in ("dense", "moe"):
+            return DecodeCache(k=jnp.zeros(kv_shape, dt),
+                               v=jnp.zeros(kv_shape, dt))
+        if fam == "ssm":
+            return DecodeCache(
+                conv=jnp.zeros(
+                    (l, batch_size, cfg.d_conv - 1,
+                     cfg.d_inner + 2 * cfg.ssm_state), dt),
+                ssm_state=jnp.zeros(
+                    (l, batch_size, cfg.ssm_heads, cfg.ssm_head_dim,
+                     cfg.ssm_state), jnp.float32),
+            )
+        if fam == "hybrid":
+            sites = len(self._hybrid_groups())
+            return DecodeCache(
+                conv=jnp.zeros(
+                    (l, batch_size, cfg.d_conv - 1,
+                     cfg.d_inner + 2 * cfg.ssm_state), dt),
+                ssm_state=jnp.zeros(
+                    (l, batch_size, cfg.ssm_heads, cfg.ssm_head_dim,
+                     cfg.ssm_state), jnp.float32),
+                hyb_k=jnp.zeros((sites, batch_size, seq_len, kvh, hd), dt),
+                hyb_v=jnp.zeros((sites, batch_size, seq_len, kvh, hd), dt),
+            )
+        if fam == "encdec":
+            return DecodeCache(
+                k=jnp.zeros(kv_shape, dt), v=jnp.zeros(kv_shape, dt),
+                cross_k=jnp.zeros((l, batch_size, enc_len, kvh, hd), dt),
+                cross_v=jnp.zeros((l, batch_size, enc_len, kvh, hd), dt),
+            )
+        raise ValueError(fam)
+
+    # --------------------------------------------------------------- prefill
+
+    def prefill(self, params: Params, batch: Batch, cache: DecodeCache):
+        """Process the prompt, fill the cache, return last-token logits.
+
+        Works per-family; the returned cache is positioned at
+        pos = prompt length (callers pass it to decode_step).
+        """
+        cfg = self.cfg
+        x = self._embed_inputs(params, batch)
+        b, s, d = x.shape
+        positions = jnp.arange(s)
+        fam = cfg.family
+
+        if fam in ("dense", "moe"):
+            def body(x, lp):
+                h, (key, val) = layers.attention(
+                    lp["attn"], cfg,
+                    layers.rmsnorm(lp["norm1"], x, cfg.norm_eps),
+                    positions=positions, causal=True,
+                    shard_heads=(self.shard_heads if self._dp is not None
+                             else None),
+                **self._attn_kwargs(s),
+                )
+                x = x + h
+                mlp_in = layers.rmsnorm(lp["norm2"], x, cfg.norm_eps)
+                if "moe" in lp:
+                    y, _ = moe.moe_mlp(lp["moe"], cfg, mlp_in,
+                                       **self._moe_kwargs())
+                else:
+                    y = layers.mlp(lp["mlp"], mlp_in)
+                return x + y, (key, val)
+
+            x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
+            smax = cache.k.shape[2]
+            pad = smax - s
+            ks = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+            vs = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+            cache = dataclasses.replace(cache, k=ks.astype(cache.k.dtype),
+                                        v=vs.astype(cache.v.dtype))
+        elif fam == "ssm":
+            def body(x, lp):
+                y, conv, st = ssm.mamba_forward(
+                    lp["mamba"], cfg,
+                    layers.rmsnorm(lp["norm"], x, cfg.norm_eps),
+                    chunk=self.ssd_chunk, return_state=True,
+                )
+                return x + y, (conv, st)
+
+            x, (convs, states) = jax.lax.scan(body, x, params["layers"])
+            cache = dataclasses.replace(
+                cache, conv=convs.astype(cache.conv.dtype), ssm_state=states
+            )
+        elif fam == "hybrid":
+            cache = self._hybrid_prefill(params, batch, cache)
+            return cache  # (logits, cache) packed inside
+        elif fam == "encdec":
+            return self._encdec_prefill(params, batch, cache)
+        else:
+            raise ValueError(fam)
+
+        x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        last = x[:, -1]
+        table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+        logits = layers.unembed(table, last[:, None], transpose=True)[:, 0][:, : cfg.vocab]
+        return logits, cache
+
+    def _hybrid_prefill(self, params, batch: Batch, cache: DecodeCache):
+        cfg = self.cfg
+        x = self._embed_inputs(params, batch)
+        b, s, _ = x.shape
+        positions = jnp.arange(s)
+        convs, states, hks, hvs = [], [], [], []
+        for gi, (start, end) in enumerate(self._hybrid_groups()):
+            lp = params["shared_attn"]
+            h, (key, val) = layers.attention(
+                lp["attn"], cfg,
+                layers.rmsnorm(lp["norm1"], x, cfg.norm_eps),
+                positions=positions, causal=True, shard_heads=(self.shard_heads if self._dp is not None
+                             else None),
+                **self._attn_kwargs(s),
+            )
+            hks.append(key)
+            hvs.append(val)
+            x = x + h
+            x = x + layers.mlp(
+                lp["mlp"], layers.rmsnorm(lp["norm2"], x, cfg.norm_eps)
+            )
+
+            def body(x, lpm):
+                y, conv, st = ssm.mamba_forward(
+                    lpm["mamba"], cfg,
+                    layers.rmsnorm(lpm["norm"], x, cfg.norm_eps),
+                    chunk=self.ssd_chunk, return_state=True,
+                )
+                return x + y, (conv, st)
+
+            grp = jax.tree.map(lambda a: a[start:end], params["layers"])
+            x, (cv, st) = jax.lax.scan(body, x, grp)
+            convs.append(cv)
+            states.append(st)
+
+        smax = cache.hyb_k.shape[2]
+        pad = smax - s
+        hk = jnp.pad(jnp.stack(hks), ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        hv = jnp.pad(jnp.stack(hvs), ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        cache = dataclasses.replace(
+            cache,
+            conv=jnp.concatenate(convs).astype(cache.conv.dtype),
+            ssm_state=jnp.concatenate(states),
+            hyb_k=hk.astype(cache.hyb_k.dtype),
+            hyb_v=hv.astype(cache.hyb_v.dtype),
+        )
+        x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+        logits = layers.unembed(table, x[:, -1:], transpose=True)[:, 0][:, : cfg.vocab]
+        return logits, cache
+
+    def _encdec_prefill(self, params, batch: Batch, cache: DecodeCache):
+        cfg = self.cfg
+        memory = self._encode(params, batch)
+        b = memory.shape[0]
+
+        # Precompute cross-attention K/V once per layer.
+        def cross_kv(lp):
+            key = (memory @ lp["cross_attn"]["wk"].astype(memory.dtype)
+                   ).reshape(b, -1, cfg.n_kv, cfg.head_dim)
+            val = (memory @ lp["cross_attn"]["wv"].astype(memory.dtype)
+                   ).reshape(b, -1, cfg.n_kv, cfg.head_dim)
+            return key, val
+
+        cks, cvs = jax.vmap(cross_kv)(params["layers"])
+
+        x = layers.embed(params["embed"], batch.tokens)
+        s = x.shape[1]
+        positions = jnp.arange(s)
+
+        def body(x, inp):
+            lp, ck, cv = inp
+            h, (key, val) = layers.attention(
+                lp["self_attn"], cfg,
+                layers.rmsnorm(lp["norm1"], x, cfg.norm_eps),
+                positions=positions, causal=True, shard_heads=(self.shard_heads if self._dp is not None
+                             else None),
+                **self._attn_kwargs(s),
+            )
+            x = x + h
+            h2 = layers.attn_naive(
+                (layers.rmsnorm(lp["norm2"], x, cfg.norm_eps)
+                 @ lp["cross_attn"]["wq"].astype(x.dtype)
+                 ).reshape(b, s, cfg.n_heads, cfg.head_dim),
+                ck, cv, causal=False,
+            ).reshape(b, s, cfg.n_heads * cfg.head_dim)
+            x = x + h2 @ lp["cross_attn"]["wo"].astype(x.dtype)
+            x = x + layers.mlp(
+                lp["mlp"], layers.rmsnorm(lp["norm3"], x, cfg.norm_eps)
+            )
+            return x, (key, val)
+
+        x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], cks, cvs))
+        smax = cache.k.shape[2]
+        pad = smax - s
+        ks = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        vs = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        cache = dataclasses.replace(
+            cache, k=ks.astype(cache.k.dtype), v=vs.astype(cache.v.dtype),
+            cross_k=cks.astype(cache.cross_k.dtype),
+            cross_v=cvs.astype(cache.cross_v.dtype),
+        )
+        x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+        logits = layers.unembed(table, x[:, -1:], transpose=True)[:, 0][:, : cfg.vocab]
+        return logits, cache
+
+    # ------------------------------------------------------------ decode step
+
+    def decode_step(self, params: Params, cache: DecodeCache,
+                    token: jnp.ndarray, pos: jnp.ndarray):
+        """One token for the whole batch. token (B,) i32, pos () i32.
+
+        Returns (logits (B, V) f32, updated cache).
+        """
+        cfg = self.cfg
+        fam = cfg.family
+        x = layers.embed(params["embed"], token)[:, None, :]  # (B, 1, D)
+        positions = pos[None] if pos.ndim == 0 else pos
+
+        if fam in ("dense", "moe"):
+            def body(x, inp):
+                lp, ck, cv = inp
+                h, kv = layers.attention(
+                    lp["attn"], cfg,
+                    layers.rmsnorm(lp["norm1"], x, cfg.norm_eps),
+                    positions=positions, kv_cache=(ck, cv), cache_len=pos,
+                )
+                x = x + h
+                mlp_in = layers.rmsnorm(lp["norm2"], x, cfg.norm_eps)
+                if "moe" in lp:
+                    y, _ = moe.moe_mlp(lp["moe"], cfg, mlp_in,
+                                       **self._moe_kwargs())
+                else:
+                    y = layers.mlp(lp["mlp"], mlp_in)
+                return x + y, kv
+
+            x, (ks, vs) = jax.lax.scan(
+                body, x, (params["layers"], cache.k, cache.v)
+            )
+            cache = dataclasses.replace(cache, k=ks, v=vs)
+        elif fam == "ssm":
+            def body(x, inp):
+                lp, conv, st = inp
+                y, conv, st = ssm.mamba_decode_step(
+                    lp["mamba"], cfg,
+                    layers.rmsnorm(lp["norm"], x, cfg.norm_eps), conv, st,
+                )
+                return x + y, (conv, st)
+
+            x, (convs, states) = jax.lax.scan(
+                body, x, (params["layers"], cache.conv, cache.ssm_state)
+            )
+            cache = dataclasses.replace(cache, conv=convs, ssm_state=states)
+        elif fam == "hybrid":
+            x, cache = self._hybrid_decode(params, cache, x, positions, pos)
+        elif fam == "encdec":
+            def body(x, inp):
+                lp, ck, cv, xk, xv = inp
+                h, kv = layers.attention(
+                    lp["self_attn"], cfg,
+                    layers.rmsnorm(lp["norm1"], x, cfg.norm_eps),
+                    positions=positions, kv_cache=(ck, cv), cache_len=pos,
+                )
+                x = x + h
+                b = x.shape[0]
+                q = (layers.rmsnorm(lp["norm2"], x, cfg.norm_eps)
+                     @ lp["cross_attn"]["wq"].astype(x.dtype)).reshape(
+                    b, 1, cfg.n_heads, cfg.head_dim
+                )
+                h2 = layers.attn_grouped(q, xk, xv, causal=False).reshape(
+                    b, 1, cfg.n_heads * cfg.head_dim
+                )
+                x = x + h2 @ lp["cross_attn"]["wo"].astype(x.dtype)
+                x = x + layers.mlp(
+                    lp["mlp"], layers.rmsnorm(lp["norm3"], x, cfg.norm_eps)
+                )
+                return x, kv
+
+            x, (ks, vs) = jax.lax.scan(
+                body, x,
+                (params["layers"], cache.k, cache.v, cache.cross_k,
+                 cache.cross_v),
+            )
+            cache = dataclasses.replace(cache, k=ks, v=vs)
+        else:
+            raise ValueError(fam)
+
+        x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+        logits = layers.unembed(table, x, transpose=True)[:, 0][:, : cfg.vocab]
+        return logits, cache
+
+    def _hybrid_decode(self, params, cache, x, positions, pos):
+        cfg = self.cfg
+        new_hk, new_hv, new_conv, new_st = [], [], [], []
+        for gi, (start, end) in enumerate(self._hybrid_groups()):
+            lp = params["shared_attn"]
+            h, kv = layers.attention(
+                lp["attn"], cfg,
+                layers.rmsnorm(lp["norm1"], x, cfg.norm_eps),
+                positions=positions,
+                kv_cache=(cache.hyb_k[gi], cache.hyb_v[gi]), cache_len=pos,
+            )
+            new_hk.append(kv[0])
+            new_hv.append(kv[1])
+            x = x + h
+            x = x + layers.mlp(
+                lp["mlp"], layers.rmsnorm(lp["norm2"], x, cfg.norm_eps)
+            )
+
+            def body(x, inp):
+                lpm, conv, st = inp
+                y, conv, st = ssm.mamba_decode_step(
+                    lpm["mamba"], cfg,
+                    layers.rmsnorm(lpm["norm"], x, cfg.norm_eps), conv, st,
+                )
+                return x + y, (conv, st)
+
+            grp = jax.tree.map(lambda a: a[start:end], params["layers"])
+            x, (cv, st) = jax.lax.scan(
+                body, x, (grp, cache.conv[start:end],
+                          cache.ssm_state[start:end])
+            )
+            new_conv.append(cv)
+            new_st.append(st)
+        cache = dataclasses.replace(
+            cache,
+            hyb_k=jnp.stack(new_hk), hyb_v=jnp.stack(new_hv),
+            conv=jnp.concatenate(new_conv),
+            ssm_state=jnp.concatenate(new_st),
+        )
+        return x, cache

@@ -1,0 +1,210 @@
+"""Mamba2 / SSD (state-space duality) block.
+
+Forward (train/prefill) uses the chunked SSD algorithm: quadratic
+attention-like work *within* a chunk (MXU-friendly batched matmuls), a
+linear recurrence *between* chunks (one lax.scan over chunk states). Decode
+is the O(1) recurrent update. ``ssd_sequential_reference`` is the
+step-by-step oracle the chunked path is tested against.
+
+Recurrence (per head h, with dt folded in):
+    H_t = exp(dt_t * A_h) * H_{t-1} + dt_t * B_t x_t^T      (P x N state)
+    y_t = C_t . H_t + D_h x_t
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+
+Params = dict
+
+
+def init_mamba(key, cfg: ModelConfig) -> Params:
+    dt = cfg.jnp_dtype
+    d = cfg.d_model
+    di = cfg.d_inner
+    n = cfg.ssm_state
+    nh = cfg.ssm_heads
+    conv_ch = di + 2 * n  # x, B, C all pass the causal conv
+    ks = jax.random.split(key, 4)
+    # dt bias init so softplus(dt_bias) spans [1e-3, 1e-1] (mamba2 default).
+    u = jax.random.uniform(ks[2], (nh,), minval=math.log(1e-3),
+                           maxval=math.log(1e-1))
+    dt_bias = jnp.log(jnp.expm1(jnp.exp(u)))  # inverse softplus
+    return {
+        "in_proj": layers._dense_init(ks[0], d, 2 * di + 2 * n + nh, dt),
+        "conv_w": (jax.random.normal(ks[1], (cfg.d_conv, conv_ch))
+                   * (1.0 / math.sqrt(cfg.d_conv))).astype(dt),
+        "conv_b": jnp.zeros((conv_ch,), dt),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "A_log": jnp.log(
+            jnp.arange(1, nh + 1, dtype=jnp.float32)
+        ),  # A = -exp(A_log): distinct negative eigenvalues per head
+        "D": jnp.ones((nh,), jnp.float32),
+        "norm": layers.init_rmsnorm(di, dt),
+        "out_proj": layers._dense_init(ks[3], di, d, dt),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jnp.ndarray):
+    di, n, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di: 2 * di + 2 * n]
+    dt = zxbcdt[..., 2 * di + 2 * n:]
+    assert dt.shape[-1] == nh
+    return z, xbc, dt
+
+
+def causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                prev: jnp.ndarray | None = None):
+    """Depthwise causal conv1d. xbc (B, S, C); w (K, C). Returns (y, tail).
+
+    ``prev`` (B, K-1, C): trailing context from the previous segment (decode
+    cache); zeros when None. ``tail`` is the new trailing context.
+    """
+    k = w.shape[0]
+    bsz, s, c = xbc.shape
+    if prev is None:
+        prev = jnp.zeros((bsz, k - 1, c), xbc.dtype)
+    full = jnp.concatenate([prev, xbc], axis=1)  # (B, K-1+S, C)
+    y = jnp.zeros((bsz, s, c), jnp.float32)
+    for i in range(k):  # K is tiny (4): unrolled taps
+        y = y + full[:, i: i + s].astype(jnp.float32) * w[i].astype(
+            jnp.float32
+        )
+    y = jax.nn.silu(y + b.astype(jnp.float32))
+    tail = full[:, -(k - 1):] if k > 1 else jnp.zeros((bsz, 0, c), xbc.dtype)
+    return y.astype(xbc.dtype), tail
+
+
+def ssd_chunked(x, dt, a_neg, bmat, cmat, *, chunk: int):
+    """Chunked SSD. x (B,S,H,P); dt (B,S,H); a_neg (H,); B/C (B,S,N) f32.
+
+    Returns (y (B,S,H,P) f32, final_state (B,H,P,N) f32).
+    """
+    b, s, h, p = x.shape
+    n = bmat.shape[-1]
+    chunk = min(chunk, s)
+    if s % chunk:
+        raise ValueError(f"seq {s} not divisible by chunk {chunk}")
+    c = s // chunk
+
+    xe = (x * dt[..., None]).reshape(b, c, chunk, h, p)  # dt-folded input
+    da = (dt * a_neg[None, None, :]).reshape(b, c, chunk, h)  # log-decay
+    bm = bmat.reshape(b, c, chunk, n)
+    cm = cmat.reshape(b, c, chunk, n)
+
+    acs = jnp.cumsum(da, axis=2)  # (b,c,l,h) inclusive
+    # Intra-chunk: L[l,m] = exp(acs[l]-acs[m]) for l>=m (decay m+1..l).
+    diff = acs[:, :, :, None, :] - acs[:, :, None, :, :]  # (b,c,l,m,h)
+    ltri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay_lm = jnp.where(ltri[None, None, :, :, None], jnp.exp(diff), 0.0)
+    scores = jnp.einsum("bcln,bcmn->bclm", cm, bm)  # (b,c,l,m)
+    y_diag = jnp.einsum(
+        "bclm,bclmh,bcmhp->bclhp", scores, decay_lm, xe
+    )
+
+    # Chunk-final states: sum_m exp(acs[-1]-acs[m]) * B_m (x) xe_m.
+    decay_end = jnp.exp(acs[:, :, -1:, :] - acs)  # (b,c,l,h)
+    states = jnp.einsum("bcln,bclh,bclhp->bchpn", bm, decay_end, xe)
+
+    # Inter-chunk recurrence (the only sequential part).
+    chunk_decay = jnp.exp(acs[:, :, -1, :])  # (b,c,h)
+
+    def scan_fn(carry, inp):
+        st, dec = inp  # (b,h,p,n), (b,h)
+        new = carry * dec[:, :, None, None] + st
+        return new, carry  # emit the state *entering* this chunk
+
+    st_c = jnp.moveaxis(states, 1, 0)  # (c,b,h,p,n)
+    dec_c = jnp.moveaxis(chunk_decay, 1, 0)  # (c,b,h)
+    final_state, prev_states = jax.lax.scan(
+        scan_fn, jnp.zeros((b, h, p, n), jnp.float32), (st_c, dec_c)
+    )
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # (b,c,h,p,n)
+
+    # Contribution of the carried-in state: C_l . (decay(start..l) * H_in).
+    decay_in = jnp.exp(acs)  # (b,c,l,h)
+    y_prev = jnp.einsum(
+        "bcln,bclh,bchpn->bclhp", cm, decay_in, prev_states
+    )
+    y = (y_diag + y_prev).reshape(b, s, h, p)
+    return y, final_state
+
+
+def ssd_sequential_reference(x, dt, a_neg, bmat, cmat):
+    """Step-by-step oracle of the same recurrence. Returns (y, final_state)."""
+    b, s, h, p = x.shape
+    n = bmat.shape[-1]
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp  # (b,h,p),(b,h),(b,n),(b,n)
+        dec = jnp.exp(dtt * a_neg[None, :])  # (b,h)
+        upd = jnp.einsum("bn,bhp->bhpn", bt, xt * dtt[..., None])
+        state = state * dec[:, :, None, None] + upd
+        y = jnp.einsum("bn,bhpn->bhp", ct, state)
+        return state, y
+
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(bmat, 1, 0), jnp.moveaxis(cmat, 1, 0))
+    final, ys = jax.lax.scan(step, jnp.zeros((b, h, p, n), jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 1), final
+
+
+def mamba_forward(p: Params, cfg: ModelConfig, x: jnp.ndarray, *,
+                  chunk: int = 256,
+                  conv_state: jnp.ndarray | None = None,
+                  ssm_state: jnp.ndarray | None = None,
+                  return_state: bool = False):
+    """Full Mamba2 block forward. x (B, S, D) -> (B, S, D) [+ states]."""
+    bsz, s, _ = x.shape
+    di, n, nh, hp = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    zxbcdt = x @ p["in_proj"].astype(x.dtype)
+    z, xbc, dt_raw = _split_proj(cfg, zxbcdt)
+    xbc, conv_tail = causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xs = xbc[..., :di]
+    bmat = xbc[..., di: di + n].astype(jnp.float32)
+    cmat = xbc[..., di + n:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    a_neg = -jnp.exp(p["A_log"])  # (H,)
+
+    xh = xs.reshape(bsz, s, nh, hp).astype(jnp.float32)
+    if ssm_state is None:
+        y, final = ssd_chunked(xh, dt, a_neg, bmat, cmat, chunk=chunk)
+    else:
+        # Continue from a carried state: fold it in as chunk 0's carry by
+        # running the sequential path (used for short continuation segments).
+        def step(state, inp):
+            xt, dtt, bt, ct = inp
+            dec = jnp.exp(dtt * a_neg[None, :])
+            upd = jnp.einsum("bn,bhp->bhpn", bt, xt * dtt[..., None])
+            state = state * dec[:, :, None, None] + upd
+            return state, jnp.einsum("bn,bhpn->bhp", ct, state)
+
+        xs_seq = (jnp.moveaxis(xh, 1, 0), jnp.moveaxis(dt, 1, 0),
+                  jnp.moveaxis(bmat, 1, 0), jnp.moveaxis(cmat, 1, 0))
+        final, ys = jax.lax.scan(step, ssm_state, xs_seq)
+        y = jnp.moveaxis(ys, 0, 1)
+
+    y = y + xh * p["D"][None, None, :, None]
+    y = y.reshape(bsz, s, di).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)  # gate
+    y = layers.rmsnorm(p["norm"], y, cfg.norm_eps)
+    out = y @ p["out_proj"].astype(x.dtype)
+    if return_state:
+        return out, conv_tail, final
+    return out
+
+
+def mamba_decode_step(p: Params, cfg: ModelConfig, x: jnp.ndarray,
+                      conv_state: jnp.ndarray, ssm_state: jnp.ndarray):
+    """One-token recurrent update. x (B, 1, D). Returns (y, conv, ssm)."""
+    return mamba_forward(
+        p, cfg, x, conv_state=conv_state, ssm_state=ssm_state,
+        return_state=True,
+    )

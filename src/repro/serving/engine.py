@@ -1,0 +1,259 @@
+"""Serving engine: continuous batching on FastFabric principles.
+
+Paper mapping (DESIGN.md §5):
+  * O-I  metadata-plane scheduling — admission control orders fixed-width
+    request IDs only (core.orderer.consensus_order); prompt payloads stay in
+    the local queue and are joined back at slot-assignment time.
+  * P-I  world state — the slot table is the core in-memory hash table:
+    key = request id, value = (slot, steps, done), version-bumped on every
+    transition. Exactly-once slot commit is checked the way MVCC checks
+    read/write versions.
+  * P-II role separation — prefill (endorser) and decode (committer) are
+    separate jit programs; on the production mesh they run on disjoint
+    mesh slices (launch/serve.py), here sequentially on one device.
+  * P-III decode-once — prompts are tokenized/prefilled exactly once; the
+    KV cache slot is the unmarshal-cache analogue (cyclic slot reuse, a
+    slot is only overwritten after its request retires).
+
+The engine is CPU-runnable with smoke configs (examples/fabric_serve.py)
+and lowers for the production mesh via launch/serve.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hashing, orderer
+from repro.core import world_state as ws
+from repro.models import layers
+from repro.models.lm import LM, Batch, DecodeCache
+
+U32 = jnp.uint32
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # (P,) int32
+    max_new: int
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+# ---------------------------------------------------------------------------
+# Batched decode with per-slot positions (continuous batching core).
+# ---------------------------------------------------------------------------
+
+
+def decode_step_slots(model: LM, params, cache: DecodeCache,
+                      token: jnp.ndarray, pos_b: jnp.ndarray,
+                      active: jnp.ndarray):
+    """One decode step with per-slot positions.
+
+    token (B,) i32; pos_b (B,) i32 — each slot's current length; active (B,)
+    bool — inactive slots compute but commit nothing (their cache rows are
+    masked out of the scatter), the Fabric invalid-tx-stays-in-block rule.
+    Dense/MoE families only (recurrent families have no position concept
+    beyond the state itself).
+    """
+    cfg = model.cfg
+    x = layers.embed(params["embed"], token)[:, None, :]
+    bsz = token.shape[0]
+    brange = jnp.arange(bsz)
+
+    def body(x, inp):
+        lp, ck, cv = inp
+        nrm = layers.rmsnorm(lp["norm1"], x, cfg.norm_eps)
+        h_dim = cfg.n_heads * cfg.head_dim
+
+        def proj(w, b, nh):
+            y = nrm @ w.astype(nrm.dtype)
+            if b is not None:
+                y = y + b.astype(y.dtype)
+            return y.reshape(bsz, 1, nh, cfg.head_dim)
+
+        q = proj(lp["attn"]["wq"], lp["attn"].get("bq"), cfg.n_heads)
+        k = proj(lp["attn"]["wk"], lp["attn"].get("bk"), cfg.n_kv)
+        v = proj(lp["attn"]["wv"], lp["attn"].get("bv"), cfg.n_kv)
+        if cfg.qk_norm:
+            q = layers.rmsnorm(lp["attn"]["q_norm"], q, cfg.norm_eps)
+            k = layers.rmsnorm(lp["attn"]["k_norm"], k, cfg.norm_eps)
+        q = layers.apply_rope(q, pos_b[:, None], cfg.rope_theta)
+        k = layers.apply_rope(k, pos_b[:, None], cfg.rope_theta)
+
+        # Per-slot scatter of the new K/V row (masked for inactive slots).
+        upd_k = jnp.where(active[:, None, None], k[:, 0], ck[brange, pos_b])
+        upd_v = jnp.where(active[:, None, None], v[:, 0], cv[brange, pos_b])
+        ck = ck.at[brange, pos_b].set(upd_k.astype(ck.dtype))
+        cv = cv.at[brange, pos_b].set(upd_v.astype(cv.dtype))
+
+        # Attention over each slot's prefix (mask by per-slot position).
+        smax = ck.shape[1]
+        mask = jnp.arange(smax)[None, :] <= pos_b[:, None]  # (B, S)
+        hkv = cfg.n_kv
+        g = cfg.n_heads // hkv
+        qg = q.reshape(bsz, 1, hkv, g, cfg.head_dim).astype(jnp.float32)
+        scores = jnp.einsum(
+            "bqhgd,bkhd->bhgqk", qg, ck.astype(jnp.float32)
+        ) / jnp.sqrt(jnp.float32(cfg.head_dim))
+        scores = jnp.where(mask[:, None, None, None, :], scores, -jnp.inf)
+        probs = jax.nn.softmax(scores, axis=-1)
+        att = jnp.einsum("bhgqk,bkhd->bqhgd", probs,
+                         cv.astype(jnp.float32))
+        att = att.reshape(bsz, 1, h_dim).astype(x.dtype)
+        x = x + att @ lp["attn"]["wo"].astype(x.dtype)
+
+        mlp_in = layers.rmsnorm(lp["norm2"], x, cfg.norm_eps)
+        if "moe" in lp:
+            from repro.models import moe as moe_mod
+            y, _ = moe_mod.moe_mlp(lp["moe"], cfg, mlp_in,
+                                   capacity_factor=model.moe_cf)
+        else:
+            y = layers.mlp(lp["mlp"], mlp_in)
+        return x + y, (ck, cv)
+
+    x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], cache.k, cache.v))
+    cache = dataclasses.replace(cache, k=ks, v=vs)
+    x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = layers.unembed(table, x, transpose=True)[:, 0][:, : cfg.vocab]
+    return logits, cache
+
+
+def insert_prefill(cache: DecodeCache, slot_cache: DecodeCache,
+                   slot: int) -> DecodeCache:
+    """Copy a single-request prefill cache (B=1) into batch slot ``slot``."""
+    def ins(big, small):
+        if big is None:
+            return None
+        # (L, B, S, H, D) <- (L, 1, Sp, H, D) at [:, slot, :Sp]
+        pad = big.shape[2] - small.shape[2]
+        smallp = jnp.pad(
+            small, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))
+        )
+        return big.at[:, slot].set(smallp[:, 0].astype(big.dtype))
+
+    return dataclasses.replace(
+        cache, k=ins(cache.k, slot_cache.k), v=ins(cache.v, slot_cache.v)
+    )
+
+
+# ---------------------------------------------------------------------------
+# The engine
+# ---------------------------------------------------------------------------
+
+
+class ServeEngine:
+    """Slot-based continuous batching with fabric-style bookkeeping."""
+
+    def __init__(self, model: LM, params, *, slots: int = 4,
+                 max_len: int = 256, greedy: bool = True):
+        self.model = model
+        self.params = params
+        self.n_slots = slots
+        self.max_len = max_len
+        self.greedy = greedy
+        self.cache = model.init_cache(slots, max_len)
+        self.pos = np.zeros((slots,), np.int32)
+        self.slot_req: list[Optional[Request]] = [None] * slots
+        self.queue: list[Request] = []
+        # P-I world state: request ledger (rid -> slot/steps), versioned.
+        self.state = ws.create(n_buckets=256, slots=8, value_width=4)
+        self.decode_fn = jax.jit(
+            partial(decode_step_slots, self.model), donate_argnums=(1,)
+        )
+        self.prefill_fn = jax.jit(self.model.prefill)
+        self.steps = 0
+        self.tokens_out = 0
+
+    # ---- fabric bookkeeping ----
+
+    def _rid_key(self, rid: int) -> jnp.ndarray:
+        h1, h2 = hashing.hash_pair(jnp.uint32(rid))
+        return jnp.stack([hashing.nonzero_key(h1), h2])[None]  # (1, 2)
+
+    def _commit_state(self, rid: int, slot: int, steps: int, done: int):
+        val = jnp.asarray([[slot, steps, done, 0]], U32)
+        res = ws.commit_vectorized(
+            self.state, self._rid_key(rid)[:, None, :], val[:, None, :],
+            jnp.ones((1,), bool),
+        )
+        self.state = res.state
+
+    def request_version(self, rid: int) -> int:
+        return int(ws.lookup(self.state, self._rid_key(rid)).versions[0])
+
+    # ---- admission (O-I): order IDs, payloads join at assignment ----
+
+    def submit(self, requests: list[Request]) -> None:
+        ids = jnp.asarray(
+            [hashing.hash_pair(jnp.uint32(r.rid)) for r in requests],
+            U32,
+        ).reshape(len(requests), 2)
+        order = np.asarray(orderer.consensus_order(ids))
+        self.queue.extend(requests[i] for i in order)
+
+    # ---- scheduling loop ----
+
+    def _assign_free_slots(self) -> None:
+        for s in range(self.n_slots):
+            if self.slot_req[s] is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            prompt = jnp.asarray(req.prompt, jnp.int32)[None]
+            small = self.model.init_cache(1, int(prompt.shape[1]))
+            logits, small = self.prefill_fn(
+                self.params, Batch(tokens=prompt), small
+            )
+            self.cache = insert_prefill(self.cache, small, s)
+            tok = int(jnp.argmax(logits[0][: self.model.cfg.vocab]))
+            req.out.append(tok)
+            self.slot_req[s] = req
+            self.pos[s] = len(req.prompt)
+            self._commit_state(req.rid, s, 1, 0)
+
+    def step(self) -> int:
+        """One engine step: assign slots, one batched decode. Returns the
+        number of active slots."""
+        self._assign_free_slots()
+        active_mask = np.asarray(
+            [r is not None and not r.done for r in self.slot_req]
+        )
+        if not active_mask.any():
+            return 0
+        last_tok = np.asarray(
+            [(r.out[-1] if r is not None and r.out else 0)
+             for r in self.slot_req], np.int32,
+        )
+        logits, self.cache = self.decode_fn(
+            self.params, self.cache, jnp.asarray(last_tok),
+            jnp.asarray(self.pos), jnp.asarray(active_mask),
+        )
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        self.steps += 1
+        for s, r in enumerate(self.slot_req):
+            if r is None or not active_mask[s]:
+                continue
+            r.out.append(int(nxt[s]))
+            self.pos[s] += 1
+            self.tokens_out += 1
+            if (len(r.out) >= r.max_new
+                    or self.pos[s] >= self.max_len - 1):
+                r.done = True
+                self._commit_state(r.rid, s, len(r.out), 1)
+                self.slot_req[s] = None  # slot freed (cyclic reuse)
+        return int(active_mask.sum())
+
+    def run(self, requests: list[Request], *, max_steps: int = 10_000
+            ) -> list[Request]:
+        self.submit(requests)
+        for _ in range(max_steps):
+            if not self.step() and not self.queue:
+                break
+        return requests

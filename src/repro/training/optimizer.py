@@ -1,0 +1,111 @@
+"""AdamW from scratch (no optax): f32 moments, decoupled weight decay.
+
+Moments are f32 regardless of param dtype; the update upcasts params to
+f32, applies the step, and casts back — the production pattern when bf16
+params are trained without a separate master copy. Under the launcher the
+moment pytrees take the *param* sharding plus an extra ZeRO-1 shard over
+the ``data`` axis (see launch/sharding.py) when enabled.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray  # () i32
+    m: dict
+    v: dict
+
+
+class AdamWConfig(NamedTuple):
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def init(params) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+    )
+
+
+def schedule(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    """Linear warmup + cosine decay to min_lr_frac."""
+    s = step.astype(jnp.float32)
+    warm = s / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip(
+        (s - cfg.warmup_steps)
+        / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog)
+    )
+    return cfg.lr * jnp.minimum(warm, cos)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    sq = jax.tree.map(
+        lambda g: jnp.sum(g.astype(jnp.float32) ** 2), tree
+    )
+    return jnp.sqrt(jax.tree.reduce(jnp.add, sq, jnp.float32(0)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), tree), norm
+
+
+def apply(cfg: AdamWConfig, state: AdamWState, params, grads,
+          *, skip: jnp.ndarray | None = None):
+    """One AdamW step. ``skip``: () bool — when True (e.g. non-finite grads
+    detected by the grad-commit pipeline) moments and params pass through
+    unchanged but the step counter still advances.
+    """
+    step = state.step + 1
+    lr = schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+    no_skip = (jnp.logical_not(skip) if skip is not None
+               else jnp.asarray(True))
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m2 = b1 * m + (1 - b1) * gf
+        v2 = b2 * v + (1 - b2) * gf * gf
+        mhat = m2 / bc1
+        vhat = v2 / bc2
+        pf = p.astype(jnp.float32)
+        step_vec = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * pf
+        p2 = pf - lr * step_vec
+        keep = no_skip
+        return (
+            jnp.where(keep, p2, pf).astype(p.dtype),
+            jnp.where(keep, m2, m),
+            jnp.where(keep, v2, v),
+        )
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(step=step, m=new_m, v=new_v), lr

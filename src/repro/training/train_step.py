@@ -1,0 +1,177 @@
+"""Training step: CE loss -> grads -> AdamW, with the FastFabric
+endorse->order->commit pipeline applied to gradient blocks.
+
+Paper integration (DESIGN.md §5): a microbatch's gradient is a
+*transaction* —
+  endorse  — per-microbatch finiteness + norm checks ("business rules"),
+             plus a content digest (the MAC analogue) for the audit chain;
+  order    — microbatches are combined in a deterministic order (the scan),
+             so every replica commits the same update: the optimizer state
+             is the world state;
+  commit   — AdamW applies only endorsed microbatches; a failed endorsement
+             (NaN/inf from a bad node) is *flagged and skipped* without
+             stalling the step — Fabric's invalid-transaction semantics —
+             and the step digest is chained into a ledger head that
+             checkpoints verify against.
+
+``make_train_step`` builds the jit-able function; grad accumulation is a
+lax.scan over microbatches (activation memory ~ one microbatch).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hashing, ledger
+from repro.models.lm import LM, Batch
+from repro.training import optimizer
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: optimizer.AdamWState
+    ledger_head: jnp.ndarray  # (2,) u32 — chained step digests
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    opt: optimizer.AdamWConfig = optimizer.AdamWConfig()
+    clip_norm: float = 1.0
+    microbatches: int = 1  # grad accumulation steps (endorse per microbatch)
+    endorse_grads: bool = True  # finite-check each microbatch (fabric mode)
+    accum_dtype: str = "float32"  # grad-accumulator dtype (bf16 for the
+    # biggest archs: halves the accumulator footprint; see launch/dryrun.py)
+
+
+def init_state(model: LM, key) -> TrainState:
+    params = model.init(key)
+    return TrainState(
+        params=params,
+        opt=optimizer.init(params),
+        ledger_head=jnp.zeros((2,), jnp.uint32),
+    )
+
+
+def grad_digest(grads) -> jnp.ndarray:
+    """Cheap content digest of a gradient pytree, (2,) u32.
+
+    Hashes per-leaf f32 sums (bitcast) — an integrity stamp for the ledger
+    chain, not a cryptographic commitment (crypto cost model lives in
+    core.crypto).
+    """
+    sums = jnp.stack(
+        [jnp.sum(g.astype(jnp.float32)) for g in jax.tree.leaves(grads)]
+    )
+    words = jax.lax.bitcast_convert_type(sums, jnp.uint32)[None, :]
+    return jnp.stack([
+        hashing.hash_words(words, seed=hashing.SEED_A)[0],
+        hashing.hash_words(words, seed=hashing.SEED_B)[0],
+    ])
+
+
+def _split_batch(batch: Batch, n: int) -> Batch:
+    """(B, ...) -> (n, B/n, ...) for scan over microbatches."""
+    def r(x):
+        if x is None:
+            return None
+        b = x.shape[0]
+        return x.reshape(n, b // n, *x.shape[1:])
+
+    return Batch(tokens=r(batch.tokens), labels=r(batch.labels),
+                 prefix_embeds=r(batch.prefix_embeds),
+                 enc_embeds=r(batch.enc_embeds))
+
+
+def _index_batch(batch: Batch, i) -> Batch:
+    g = lambda x: None if x is None else x[i]
+    return Batch(tokens=g(batch.tokens), labels=g(batch.labels),
+                 prefix_embeds=g(batch.prefix_embeds),
+                 enc_embeds=g(batch.enc_embeds))
+
+
+def make_train_step(model: LM, cfg: TrainConfig) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics). jit-able."""
+
+    def loss_fn(params, mb: Batch):
+        loss, metrics = model.loss(params, mb)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def endorse(grads, loss):
+        """Per-microbatch endorsement: all-finite AND loss finite."""
+        finite = jnp.isfinite(loss)
+        for g in jax.tree.leaves(grads):
+            finite = finite & jnp.all(jnp.isfinite(g))
+        return finite
+
+    def train_step(state: TrainState, batch: Batch):
+        n_mb = cfg.microbatches
+        if n_mb == 1:
+            (loss, metrics), grads = grad_fn(state.params, batch)
+            ok = (endorse(grads, loss) if cfg.endorse_grads
+                  else jnp.asarray(True))
+            n_ok = ok.astype(jnp.float32)
+            grads = jax.tree.map(
+                lambda g: jnp.where(ok, g, jnp.zeros_like(g)), grads
+            )
+        else:
+            mbs = _split_batch(batch, n_mb)
+            acc_dt = jnp.dtype(cfg.accum_dtype)
+
+            def body(carry, i):
+                acc, loss_acc, nok = carry
+                mb = _index_batch(mbs, i)
+                (loss, _), grads = grad_fn(state.params, mb)
+                ok = (endorse(grads, loss) if cfg.endorse_grads
+                      else jnp.asarray(True))
+                okf = ok.astype(jnp.float32)
+                acc = jax.tree.map(
+                    lambda a, g: a + jnp.where(ok, g, 0).astype(acc_dt),
+                    acc, grads,
+                )
+                return (acc, loss_acc + okf * loss, nok + okf), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, acc_dt), state.params
+            )
+            (grads, loss_sum, n_ok), _ = jax.lax.scan(
+                body, (zeros, jnp.float32(0), jnp.float32(0)),
+                jnp.arange(n_mb),
+            )
+            denom = jnp.maximum(n_ok, 1.0)
+            grads = jax.tree.map(
+                lambda g: (g / denom.astype(g.dtype)).astype(g.dtype), grads
+            )
+            loss = loss_sum / denom
+            metrics = {"ce": loss}
+
+        grads, gnorm = optimizer.clip_by_global_norm(grads, cfg.clip_norm)
+        # Commit: skip the whole block only if *no* microbatch endorsed.
+        skip = n_ok < 0.5
+        params, opt, lr = optimizer.apply(
+            cfg.opt, state.opt, state.params, grads, skip=skip
+        )
+        # Ledger append: chain the step digest (audit for checkpoints).
+        digest = grad_digest(grads)
+        head = ledger.append_hash(
+            state.ledger_head, state.opt.step.astype(jnp.uint32), digest
+        )
+        out_metrics = {
+            "loss": loss,
+            "grad_norm": gnorm,
+            "lr": lr,
+            "endorsed_mb": n_ok,
+            "skipped": skip.astype(jnp.int32),
+        }
+        out_metrics.update(
+            {k: v for k, v in metrics.items() if k not in out_metrics}
+        )
+        return TrainState(params, opt, head), out_metrics
+
+    return train_step

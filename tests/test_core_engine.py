@@ -1,0 +1,143 @@
+"""End-to-end fabric engine: the paper's plug-and-play invariant — every
+optimization config must produce byte-identical ledger semantics."""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import committer, engine, orderer, types, unmarshal
+from repro.core import world_state as ws
+
+CONFIGS = {
+    "fabric-1.2": engine.FABRIC_V12,
+    "O-I only": engine.EngineConfig(
+        orderer=orderer.OrdererConfig(separate_metadata=True,
+                                      pipelined=False, block_size=50),
+        peer=committer.FABRIC_V12_PEER,
+    ),
+    "P-I only": engine.EngineConfig(
+        orderer=orderer.OrdererConfig(separate_metadata=False,
+                                      pipelined=False, block_size=50),
+        peer=committer.OPT_P1,
+    ),
+    "fastfabric": engine.FASTFABRIC,
+}
+
+
+def _run(cfg, n=200, seed=0):
+    cfg = dataclasses.replace(
+        cfg, orderer=dataclasses.replace(cfg.orderer, block_size=50)
+    )
+    eng = engine.FabricEngine(cfg)
+    stats = eng.run_round(eng.make_proposals(n, seed=seed))
+    return eng, stats
+
+
+def test_all_configs_agree():
+    """Same proposals through every config -> same valid count and same
+    world-state digest (the optimizations are semantics-preserving)."""
+    digests, valids = {}, {}
+    for name, cfg in CONFIGS.items():
+        eng, stats = _run(cfg)
+        assert stats.n_valid == 200, name
+        if cfg.peer.hash_state:
+            digests[name] = np.asarray(
+                ws.state_digest(eng.peer_state.hash_state)
+            )
+        valids[name] = stats.n_valid
+    assert len(set(valids.values())) == 1
+    ds = list(digests.values())
+    for d in ds[1:]:
+        np.testing.assert_array_equal(ds[0], d)
+
+
+def test_chain_verify_and_replay():
+    eng, _ = _run(engine.FASTFABRIC, n=100)
+    out = eng.verify()
+    assert out == {"chain_ok": True, "replica_ok": True, "replay_ok": True}
+    eng.store.close()
+
+
+def test_tampered_block_detected():
+    eng, _ = _run(engine.FASTFABRIC, n=100)
+    eng.store.drain()
+    sb = eng.store.chain[1]
+    tampered = sb._replace(wire=sb.wire.copy())
+    tampered.wire[0, 8] ^= 0xFF
+    eng.store.chain[1] = tampered
+    assert not eng.store.verify_chain()
+
+
+def test_conflicting_workload_flagged_not_dropped():
+    """Conflicting txs are flagged invalid but stay in their block."""
+    cfg = engine.FASTFABRIC
+    eng = engine.FabricEngine(cfg)
+    props = eng.make_proposals(100, seed=1)
+    # Make 30 txs reuse tx0's source account -> intra-block conflicts.
+    src = np.asarray(props.src).copy()
+    src[1:31] = src[0]
+    props = props._replace(src=jnp.asarray(src))
+    stats = eng.run_round(props)
+    assert stats.n_txs == 100  # all stayed in blocks
+    assert stats.n_valid < 100  # conflicts flagged
+    assert eng.verify()["chain_ok"]
+
+
+def test_double_spend_across_blocks_via_versions():
+    """A replayed (stale-version) round must be fully invalidated."""
+    eng = engine.FabricEngine(engine.FASTFABRIC)
+    props = eng.make_proposals(100, seed=2)
+    s1 = eng.run_round(props)
+    assert s1.n_valid == 100
+    # Re-endorsing against the *updated* replica gives fresh versions ->
+    # valid; replaying the identical old round must fail version checks.
+    stale = eng.run_round(props)  # same proposals, stale read versions? No:
+    # endorsement re-executes against the updated replica, so versions are
+    # fresh and the transfer commits again.
+    assert stale.n_valid == 100
+    # Now simulate a truly stale client: reuse a pre-built wire block by
+    # committing it twice at the peer.
+    txb = eng.make_proposals(50, seed=3)
+    from repro.core import endorser as endo
+    endorsed = endo.execute_and_endorse(eng.endorser_state, txb, eng.cfg.dims)
+    wire = unmarshal.marshal(endorsed, eng.cfg.dims)
+    r1 = committer.commit_block(eng.peer_state, wire, eng.cfg.dims,
+                                eng.cfg.peer)
+    assert int(r1.valid.sum()) == 50
+    r2 = committer.commit_block(r1.state, wire, eng.cfg.dims, eng.cfg.peer)
+    assert int(r2.valid.sum()) == 0  # every replayed tx is stale
+
+
+def test_unmarshal_roundtrip_and_cache():
+    dims = types.TEST_DIMS
+    txb = types.make_transfer_batch(dims, 32, seed=5)
+    wire = unmarshal.marshal(txb, dims)
+    dec = unmarshal.unmarshal(wire, dims)
+    assert bool(dec.checksum_ok.all())
+    for a, b in zip(dec.txb, txb):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # Corruption flips the checksum flag.
+    bad = wire.at[3, 40].add(1)
+    assert not bool(unmarshal.unmarshal(bad, dims).checksum_ok[3])
+    # The P-III cyclic cache: hit on same block_no, evict on reuse.
+    cache = unmarshal.UnmarshalCache(depth=2)
+    d0 = cache.get(0, wire, dims)
+    assert cache.get(0, wire, dims) is d0 and cache.hits == 1
+    cache.get(2, wire, dims)  # same slot as 0 -> overwritten
+    cache.get(0, wire, dims)
+    assert cache.misses == 3
+
+
+def test_prefix_unmarshal_matches_struct_fields():
+    dims = types.TEST_DIMS
+    txb = types.make_transfer_batch(dims, 8, seed=6)
+    wire = unmarshal.marshal(txb, dims)
+    words = jnp.asarray(
+        np.frombuffer(np.asarray(wire).tobytes(), dtype=np.uint32)
+    ).reshape(8, dims.payload_words)
+    spw = unmarshal.struct_prefix_words(dims)
+    got = unmarshal.unmarshal_prefix(words[:, :spw], dims)
+    for a, b in zip(got, txb):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

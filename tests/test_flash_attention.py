@@ -1,0 +1,59 @@
+"""Flash-attention Pallas kernel vs naive oracle: shape/dtype sweeps."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import kernel, ops, ref
+
+RNG = np.random.default_rng(11)
+
+
+def _qkv(b, s, h, kv, d, dtype):
+    q = jnp.asarray(RNG.normal(size=(b, s, h, d)), dtype)
+    k = jnp.asarray(RNG.normal(size=(b, s, kv, d)), dtype)
+    v = jnp.asarray(RNG.normal(size=(b, s, kv, d)), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("b,s,h,kv,d,qb,kb", [
+    (2, 64, 4, 2, 16, 16, 16),   # GQA, square blocks
+    (2, 64, 4, 4, 32, 32, 16),   # MHA, rectangular blocks
+    (1, 128, 8, 2, 16, 32, 32),  # longer sequence
+    (2, 64, 4, 1, 16, 16, 32),   # MQA, kv block > q block
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_matches_naive(b, s, h, kv, d, qb, kb, causal):
+    q, k, v = _qkv(b, s, h, kv, d, jnp.float32)
+    got = kernel.flash_attention(q, k, v, causal=causal, q_block=qb,
+                                 kv_block=kb, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=1e-5)
+
+
+def test_bf16():
+    q, k, v = _qkv(1, 64, 2, 1, 16, jnp.bfloat16)
+    got = kernel.flash_attention(q, k, v, causal=True, q_block=16,
+                                 kv_block=16, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        atol=3e-2, rtol=3e-2,
+    )
+    assert got.dtype == jnp.bfloat16
+
+
+def test_ops_dispatch_cpu_path():
+    q, k, v = _qkv(1, 32, 2, 2, 16, jnp.float32)
+    got = ops.attention(q, k, v, causal=True, use_pallas=False)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=1e-5)
+
+
+def test_rejects_bad_blocks():
+    q, k, v = _qkv(1, 60, 2, 2, 16, jnp.float32)
+    with pytest.raises(ValueError):
+        kernel.flash_attention(q, k, v, q_block=16, kv_block=16,
+                               interpret=True)

@@ -1,0 +1,84 @@
+"""Fault tolerance: failure detection, elastic membership, stragglers."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.ft.membership import (ElasticPlan, HeartbeatMonitor,
+                                 StragglerPolicy, rendezvous_assign)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_heartbeat_detects_silence():
+    clk = FakeClock()
+    mon = HeartbeatMonitor(range(4), timeout_s=10, clock=clk)
+    clk.t = 5
+    mon.beat(0)
+    mon.beat(1)
+    mon.beat(2)  # worker 3 silent
+    clk.t = 12
+    assert mon.check() == {3}
+    assert mon.live == [0, 1, 2]
+    # Dead workers' late beats are ignored until rejoin.
+    mon.beat(3)
+    clk.t = 30
+    assert 3 not in mon.live
+    mon.rejoin(3)
+    assert 3 in mon.live
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 16), st.integers(8, 64))
+def test_rendezvous_minimal_churn(n_workers, n_shards):
+    """Removing one worker moves ONLY that worker's shards (HRW)."""
+    workers = list(range(n_workers))
+    before = rendezvous_assign(range(n_shards), workers)
+    after = rendezvous_assign(range(n_shards), workers[:-1])
+    for s in range(n_shards):
+        if before[s] != workers[-1]:
+            assert after[s] == before[s]
+
+
+def test_rendezvous_deterministic_and_balanced():
+    a = rendezvous_assign(range(256), range(8))
+    b = rendezvous_assign(range(256), range(8))
+    assert a == b
+    counts = np.bincount(list(a.values()), minlength=8)
+    assert counts.min() > 0  # every worker gets work
+
+
+def test_straggler_policy():
+    pol = StragglerPolicy(beta=2.0, window=8)
+    for _ in range(8):
+        pol.observe(1.0)
+    assert not pol.should_backup(1.5)
+    assert pol.should_backup(2.5)
+    # Window rolls: a regime change updates the median.
+    for _ in range(8):
+        pol.observe(4.0)
+    assert not pol.should_backup(6.0)
+
+
+def test_elastic_plan():
+    clk = FakeClock()
+    mon = HeartbeatMonitor(range(4), timeout_s=10, clock=clk)
+    clk.t = 20
+    mon.beat(0)
+    clk.t = 25
+    mon.check()
+    plan = ElasticPlan.make(mon, n_shards=16, resume_step=42)
+    assert plan.survivors == [0]
+    assert set(plan.assignment.values()) == {0}
+    assert plan.resume_step == 42
+
+
+def test_rendezvous_no_workers_raises():
+    with pytest.raises(ValueError):
+        rendezvous_assign(range(4), [])

@@ -1,0 +1,147 @@
+"""Per-kernel allclose sweeps: Pallas (interpret=True) vs pure-jnp oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import crypto, types
+from repro.kernels.hash_table import kernel as htk, ref as htr
+from repro.kernels.mvcc_validate import kernel as mvk, ref as mvr
+from repro.kernels.sig_mac import kernel as smk, ref as smr
+
+RNG = np.random.default_rng(7)
+
+
+def _rand_table(nb, s, vw, fill: float):
+    """A table pre-filled via the oracle so contents are consistent."""
+    tkeys = jnp.zeros((nb, s, 2), jnp.uint32)
+    tvers = jnp.zeros((nb, s), jnp.uint32)
+    tvals = jnp.zeros((nb, s, vw), jnp.uint32)
+    n = int(nb * s * fill)
+    if n:
+        wk = jnp.asarray(RNG.integers(1, 1 << 32, (n, 2), dtype=np.uint32))
+        wv = jnp.asarray(RNG.integers(0, 1 << 32, (n, vw), dtype=np.uint32))
+        tkeys, tvers, tvals, _ = htr.commit_ref(
+            tkeys, tvers, tvals, wk, wv, jnp.ones((n,), bool)
+        )
+    return tkeys, tvers, tvals
+
+
+class TestHashTableKernel:
+    @pytest.mark.parametrize("nb,s,vw,q", [
+        (16, 4, 1, 8), (64, 8, 4, 100), (128, 8, 2, 257), (32, 16, 8, 64),
+    ])
+    def test_lookup_matches_ref(self, nb, s, vw, q):
+        tkeys, tvers, tvals = _rand_table(nb, s, vw, 0.3)
+        # Half hits (existing keys), half random probes.
+        occ = np.argwhere(np.asarray(tkeys[..., 0]) != 0)
+        hits = occ[RNG.integers(0, len(occ), q // 2)]
+        qk_hit = np.asarray(tkeys)[hits[:, 0], hits[:, 1]]
+        qk_miss = RNG.integers(1, 1 << 32, (q - q // 2, 2), dtype=np.uint32)
+        queries = jnp.asarray(np.concatenate([qk_hit, qk_miss]))
+        got = htk.lookup(tkeys, tvers, tvals, queries, interpret=True,
+                         q_tile=32)
+        want = htr.lookup_ref(tkeys, tvers, tvals, queries)
+        for g, w in zip(got, want):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+    @pytest.mark.parametrize("nb,s,vw,k", [
+        (16, 4, 1, 10), (64, 8, 4, 128), (32, 8, 2, 77),
+    ])
+    def test_commit_matches_ref(self, nb, s, vw, k):
+        tkeys, tvers, tvals = _rand_table(nb, s, vw, 0.2)
+        wk = jnp.asarray(RNG.integers(1, 1 << 32, (k, 2), dtype=np.uint32))
+        # include updates to existing keys
+        occ = np.argwhere(np.asarray(tkeys[..., 0]) != 0)
+        if len(occ):
+            upd = occ[RNG.integers(0, len(occ), k // 4)]
+            wk_np = np.asarray(wk).copy()
+            wk_np[: len(upd)] = np.asarray(tkeys)[upd[:, 0], upd[:, 1]]
+            wk = jnp.asarray(wk_np)
+        wv = jnp.asarray(RNG.integers(0, 1 << 32, (k, vw), dtype=np.uint32))
+        act = jnp.asarray(RNG.random(k) < 0.85)
+        got = htk.commit(tkeys, tvers, tvals, wk, wv, act, interpret=True)
+        want = htr.commit_ref(tkeys, tvers, tvals, wk, wv, act)
+        for g, w in zip(got, want):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+    def test_overflow_flag(self):
+        nb, s, vw = 2, 2, 1
+        tkeys = jnp.zeros((nb, s, 2), jnp.uint32)
+        tvers = jnp.zeros((nb, s), jnp.uint32)
+        tvals = jnp.zeros((nb, s, vw), jnp.uint32)
+        # 5 distinct keys into 2 buckets x 2 slots must overflow.
+        wk = jnp.asarray([[2 * i + 2, i + 1] for i in range(5)],
+                         jnp.uint32)
+        wv = jnp.ones((5, vw), jnp.uint32)
+        *_, ovf_k = htk.commit(tkeys, tvers, tvals, wk, wv,
+                               jnp.ones((5,), bool), interpret=True)
+        *_, ovf_r = htr.commit_ref(tkeys, tvers, tvals, wk, wv,
+                                   jnp.ones((5,), bool))
+        assert bool(ovf_k) == bool(ovf_r) is True
+
+
+class TestMvccKernel:
+    @pytest.mark.parametrize("b,conflict", [(8, 0.0), (32, 0.3), (64, 0.8),
+                                            (16, 1.0)])
+    def test_matches_ref(self, b, conflict):
+        txb = types.make_transfer_batch(
+            types.TEST_DIMS, b, conflict_rate=conflict, seed=b
+        )
+        cur = jnp.zeros((b, types.TEST_DIMS.rk), jnp.uint32)
+        ok0 = jnp.asarray(RNG.random(b) < 0.9)
+        got = mvk.validate_blocks(
+            txb.read_keys[None], txb.read_vers[None], txb.write_keys[None],
+            cur[None], ok0[None], interpret=True,
+        )[0]
+        want = mvr.validate_ref(
+            txb.read_keys, txb.read_vers, txb.write_keys, cur, ok0
+        )
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_multi_block_grid(self):
+        nb, b = 3, 16
+        txbs = [types.make_transfer_batch(types.TEST_DIMS, b,
+                                          conflict_rate=0.5, seed=i)
+                for i in range(nb)]
+        rk = jnp.stack([t.read_keys for t in txbs])
+        rv = jnp.stack([t.read_vers for t in txbs])
+        wk = jnp.stack([t.write_keys for t in txbs])
+        cur = jnp.zeros((nb, b, types.TEST_DIMS.rk), jnp.uint32)
+        ok0 = jnp.ones((nb, b), bool)
+        got = mvk.validate_blocks(rk, rv, wk, cur, ok0, interpret=True)
+        for i in range(nb):
+            want = mvr.validate_ref(rk[i], rv[i], wk[i], cur[i], ok0[i])
+            np.testing.assert_array_equal(np.asarray(got[i]),
+                                          np.asarray(want))
+
+
+class TestSigMacKernel:
+    @pytest.mark.parametrize("b,w,ne,tile", [
+        (8, 4, 1, 8), (100, 21, 3, 32), (257, 16, 5, 64), (64, 64, 2, 64),
+    ])
+    def test_matches_ref(self, b, w, ne, tile):
+        msg = jnp.asarray(RNG.integers(0, 1 << 32, (b, w), dtype=np.uint32))
+        rs, ss = crypto.endorser_keys(ne)
+        got = smk.mac_many(msg, rs, ss, tx_tile=tile, interpret=True)
+        want = smr.mac_many_ref(msg, rs, ss)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(0, 2**32 - 1), st.integers(0, 2**32 - 1))
+    def test_mulmod31_property(self, a, b):
+        p = (1 << 31) - 1
+        am, bm = a % p, b % p
+        got = crypto.mulmod31(jnp.uint32(am), jnp.uint32(bm))
+        assert int(got) == (am * bm) % p
+
+    def test_forgery_fails(self):
+        """Flipping any message word must change the tag (w.h.p.)."""
+        msg = jnp.asarray(RNG.integers(0, 1 << 32, (4, 8), dtype=np.uint32))
+        rs, ss = crypto.endorser_keys(1)
+        tag = smr.mac_many_ref(msg, rs, ss)
+        forged = msg.at[:, 3].add(1)
+        tag2 = smr.mac_many_ref(forged, rs, ss)
+        assert not np.any(np.asarray(tag) == np.asarray(tag2))

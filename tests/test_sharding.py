@@ -1,0 +1,87 @@
+"""Sharding rules: divisibility fallbacks and spec structure (no multi-
+device runtime needed — specs are pure functions of shapes)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import base
+from repro.launch import sharding, specs as specs_lib
+from repro.models.lm import LM
+
+
+def _full_param_shapes(arch):
+    cfg = base.get(arch)
+    model = LM(cfg)
+    return cfg, jax.eval_shape(model.init, jax.random.PRNGKey(0))
+
+
+@pytest.mark.parametrize("arch", base.ARCH_IDS)
+def test_specs_divisible_everywhere(arch):
+    """Every sharded dim must divide by the model-axis width (16)."""
+    cfg, shapes = _full_param_shapes(arch)
+    pspecs = sharding.param_specs(shapes)  # default msize=16
+
+    def check(path, leaf, spec):
+        for dim, entry in zip(leaf.shape, tuple(spec) + (None,) * leaf.ndim):
+            if entry == "model":
+                assert dim % 16 == 0, (path, leaf.shape, spec)
+
+    jax.tree_util.tree_map_with_path(
+        lambda p, l, s: check(p, l, s), shapes, pspecs,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )
+
+
+def test_vocab_padded_shards():
+    for arch in ("mamba2-2.7b", "seamless-m4t-medium"):
+        cfg, shapes = _full_param_shapes(arch)
+        assert shapes["embed"].shape[0] % 256 == 0
+        pspecs = sharding.param_specs(shapes)
+        assert pspecs["embed"] == P("model", None)
+
+
+def test_moe_ep_vs_tp_fallback():
+    # moonshot: 64 experts % 16 == 0 -> EP on the expert dim.
+    _, shapes = _full_param_shapes("moonshot-v1-16b-a3b")
+    sp = sharding.param_specs(shapes)
+    assert sp["layers"]["moe"]["w_gate"] == P(None, "model", None, None)
+    # qwen2-moe: 60 experts % 16 != 0 -> TP inside experts.
+    _, shapes = _full_param_shapes("qwen2-moe-a2.7b")
+    sp = sharding.param_specs(shapes)
+    assert sp["layers"]["moe"]["w_gate"] == P(None, None, None, "model")
+    assert sp["layers"]["moe"]["w_down"] == P(None, None, "model", None)
+
+
+def test_attention_col_row_split():
+    _, shapes = _full_param_shapes("qwen2-7b")
+    sp = sharding.param_specs(shapes)
+    att = sp["layers"]["attn"]
+    assert att["wq"] == P(None, None, "model")
+    assert att["wo"] == P(None, "model", None)
+    assert att["bq"] == P(None, "model")
+    assert sp["layers"]["mlp"]["w_down"] == P(None, "model", None)
+    assert sp["final_norm"]["scale"] == P(None)
+
+
+def test_zero1_adds_data_axis():
+    spec = sharding.zero1_pspec(
+        P(None, None, "model"), (28, 3584, 18944), ("data",), 16
+    )
+    assert spec == P(None, "data", "model")
+    # No divisible replicated dim -> unchanged.
+    spec2 = sharding.zero1_pspec(P("model"), (80,), ("data",), 16)
+    assert spec2 == P("model")
+
+
+def test_input_specs_shapes():
+    cfg = base.get("llava-next-34b")
+    b = specs_lib.batch_specs(cfg, 4096, 256, with_labels=True)
+    assert b.tokens.shape == (256, 4096 - cfg.n_prefix)
+    assert b.prefix_embeds.shape == (256, cfg.n_prefix, cfg.d_model)
+    cfg2 = base.get("seamless-m4t-medium")
+    b2 = specs_lib.batch_specs(cfg2, 4096, 256, with_labels=True)
+    assert b2.enc_embeds.shape == (256, 1024, cfg2.d_model)
+    assert b2.tokens.shape == (256, 4096)

@@ -1,0 +1,158 @@
+"""Training integration: learning, grad endorsement, checkpoint/restart."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.configs import base
+from repro.data import pipeline
+from repro.models.lm import LM, Batch
+from repro.training import optimizer, train_step as ts_lib
+
+
+def _setup(arch="qwen2-7b", seq=32, batch=8, lr=1e-3, steps=60, mb=1,
+           data_vocab=None):
+    cfg = base.get_smoke(arch)
+    model = LM(cfg, vocab_chunk=16, moe_capacity_factor=2.0)
+    tcfg = ts_lib.TrainConfig(
+        opt=optimizer.AdamWConfig(lr=lr, warmup_steps=5, total_steps=steps),
+        microbatches=mb,
+    )
+    dcfg = pipeline.DataConfig(vocab=data_vocab or cfg.vocab, seq_len=seq,
+                               global_batch=batch)
+    step = jax.jit(ts_lib.make_train_step(model, tcfg), donate_argnums=(0,))
+    return model, step, dcfg
+
+
+def _batch(dcfg, step):
+    b = pipeline.global_batch_for_step(dcfg, step)
+    return jax.tree.map(lambda x: None if x is None else jnp.asarray(x), b,
+                        is_leaf=lambda x: x is None)
+
+
+def test_loss_decreases_on_affine_task():
+    model, step, dcfg = _setup(steps=120, lr=3e-3, data_vocab=64)
+    state = ts_lib.init_state(model, jax.random.PRNGKey(0))
+    first = None
+    for i in range(120):
+        state, m = step(state, _batch(dcfg, i))
+        if first is None:
+            first = float(m["loss"])
+    last = float(m["loss"])
+    assert last < first - 1.0, (first, last)
+
+
+def test_nan_microbatch_endorsement_skips_without_stall():
+    """A poisoned microbatch (NaN tokens -> NaN grads analogue) must be
+    flagged and excluded; the other microbatches still commit."""
+    model, _, dcfg = _setup(mb=4)
+    tcfg = ts_lib.TrainConfig(microbatches=4, endorse_grads=True)
+    step = jax.jit(ts_lib.make_train_step(model, tcfg))
+    state = ts_lib.init_state(model, jax.random.PRNGKey(0))
+    batch = _batch(dcfg, 0)
+    # Poison microbatch 0 via prefix embeds? Simplest: poison params copy
+    # is global; instead poison one microbatch's labels to be valid but set
+    # an embed row to inf so only sequences using that token blow up.
+    # Deterministic poison: token 0 embedding = inf, microbatch 0 tokens=0.
+    toks = np.asarray(batch.tokens).copy()
+    toks = toks % 254 + 1  # keep the poisoned token id 0 out of all rows
+    toks[0:2] = 0  # first microbatch (B=8, mb=4 -> 2 rows each)
+    params = state.params
+    poisoned = dict(params)
+    poisoned["embed"] = params["embed"].at[0].set(jnp.inf)
+    state = state._replace(params=poisoned)
+    state2, m = step(state, ts_lib.Batch(
+        tokens=jnp.asarray(toks), labels=batch.labels,
+        prefix_embeds=None, enc_embeds=None,
+    ))
+    assert float(m["endorsed_mb"]) == 3.0  # one microbatch flagged
+    assert int(m["skipped"]) == 0  # block still committed
+    assert np.isfinite(float(m["loss"]))
+
+
+def test_all_microbatches_bad_skips_commit():
+    model, _, dcfg = _setup(mb=2)
+    tcfg = ts_lib.TrainConfig(microbatches=2, endorse_grads=True)
+    step = jax.jit(ts_lib.make_train_step(model, tcfg))
+    state = ts_lib.init_state(model, jax.random.PRNGKey(0))
+    batch = _batch(dcfg, 0)
+    toks = np.zeros_like(np.asarray(batch.tokens))
+    poisoned = dict(state.params)
+    poisoned["embed"] = state.params["embed"].at[0].set(jnp.inf)
+    state = state._replace(params=poisoned)
+    m0 = jax.tree.map(lambda x: np.asarray(x), state.opt.m)
+    state2, m = step(state, ts_lib.Batch(
+        tokens=jnp.asarray(toks), labels=batch.labels,
+        prefix_embeds=None, enc_embeds=None,
+    ))
+    assert int(m["skipped"]) == 1
+    # Optimizer moments unchanged (commit skipped), step still advanced.
+    for a, b in zip(jax.tree.leaves(m0), jax.tree.leaves(state2.opt.m)):
+        np.testing.assert_array_equal(a, np.asarray(b))
+    assert int(state2.opt.step) == 1
+
+
+def test_checkpoint_restart_bit_exact(tmp_path):
+    """Train 6 steps straight vs 3 + crash + restore + 3: identical state
+    (the ledger/replay property from the paper applied to training)."""
+    model, step, dcfg = _setup(steps=10)
+    s_a = ts_lib.init_state(model, jax.random.PRNGKey(0))
+    for i in range(6):
+        s_a, _ = step(s_a, _batch(dcfg, i))
+
+    ck = Checkpointer(str(tmp_path / "ck"))
+    s_b = ts_lib.init_state(model, jax.random.PRNGKey(0))
+    for i in range(3):
+        s_b, _ = step(s_b, _batch(dcfg, i))
+    ck.save(3, s_b, blocking=True)
+    del s_b  # "crash"
+    like = ts_lib.init_state(model, jax.random.PRNGKey(0))
+    s_c, start = ck.restore(like)
+    assert start == 3 and ck.verify_chain()
+    for i in range(start, 6):
+        s_c, _ = step(s_c, _batch(dcfg, i))
+    for a, b in zip(jax.tree.leaves(s_a.params),
+                    jax.tree.leaves(s_c.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(s_a.ledger_head),
+                                  np.asarray(s_c.ledger_head))
+    ck.close()
+
+
+def test_checkpoint_corruption_detected(tmp_path):
+    model, step, dcfg = _setup()
+    state = ts_lib.init_state(model, jax.random.PRNGKey(0))
+    ck = Checkpointer(str(tmp_path / "ck"))
+    ck.save(1, state, blocking=True)
+    # Corrupt the arrays file.
+    path = tmp_path / "ck" / "step_00000001" / "arrays.npz"
+    data = path.read_bytes()
+    path.write_bytes(data[:-100] + bytes(100))
+    with pytest.raises(Exception):
+        ck.restore(state)
+    ck.close()
+
+
+def test_grad_accumulation_equivalence():
+    """mb=2 accumulation == mb=1 on the same global batch (f32 accum,
+    modulo bf16 rounding — smoke configs are f32 so exact-ish)."""
+    model, _, dcfg = _setup()
+    batch = _batch(dcfg, 0)
+    s1 = ts_lib.init_state(model, jax.random.PRNGKey(0))
+    s2 = ts_lib.init_state(model, jax.random.PRNGKey(0))
+    step1 = jax.jit(ts_lib.make_train_step(
+        model, ts_lib.TrainConfig(microbatches=1)))
+    step2 = jax.jit(ts_lib.make_train_step(
+        model, ts_lib.TrainConfig(microbatches=2)))
+    s1, m1 = step1(s1, batch)
+    s2, m2 = step2(s2, batch)
+    # Losses match to accumulation rounding.
+    assert float(m1["loss"]) == pytest.approx(float(m2["loss"]), rel=1e-5)
+    for a, b in zip(jax.tree.leaves(s1.params), jax.tree.leaves(s2.params)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   atol=5e-5, rtol=1e-4)
