@@ -1,0 +1,104 @@
+"""Fig 9 (beyond-paper) — crash-recovery time vs chain length.
+
+The durability argument of P-I/P-II (drop the database, store blocks off
+the critical path) makes restart cost the new bottleneck: rebuilding world
+state by full chain replay is O(chain length). The storage/ subsystem's
+snapshot + journal-suffix path is O(blocks since last snapshot).
+
+Measured here, per chain length:
+  * ``full_replay``   — verify + replay the whole block chain (BlockStore);
+  * ``snap+journal``  — verify snapshot digest + journal chain, replay only
+    the suffix (storage/recovery.recover).
+Plus the commit-path cost of carrying the journal head at all:
+  * ``journal on/off`` — engine TPS with PeerConfig.journal toggled.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from benchmarks import common
+from repro.core import committer, engine
+from repro.core import world_state as ws
+from repro.storage import recovery
+
+
+def _timed_once(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    jax.block_until_ready(out.state.keys)
+    return out, time.perf_counter() - t0
+
+
+def run_recovery(round_txs: int, rounds_list: list[int],
+                 snapshot_every: int) -> None:
+    for n_rounds in rounds_list:
+        # prune_chain=False keeps the full chain so both paths are
+        # measurable on the same engine.
+        cfg = engine.EngineConfig(
+            snapshot_every_blocks=snapshot_every, prune_chain=False
+        )
+        eng = engine.FabricEngine(cfg)
+        for i in range(n_rounds):
+            eng.run_round(eng.make_proposals(round_txs, seed=i))
+        eng.store.drain()
+        n_blocks = len(eng.store.chain)
+        live = np.asarray(ws.state_digest(eng.peer_state.hash_state))
+
+        full, t_full = _timed_once(
+            lambda: recovery.full_replay(
+                eng.store, cfg.dims, n_buckets=cfg.n_buckets, slots=cfg.slots
+            )
+        )
+        fast, t_fast = _timed_once(eng.recover)
+        assert np.array_equal(full.state_digest, live)
+        assert np.array_equal(fast.state_digest, live)
+
+        common.row(
+            "fig9", f"full_replay/blocks={n_blocks}", recovery_s=t_full,
+            blocks_replayed=full.replayed_records,
+        )
+        common.row(
+            "fig9", f"snap+journal/blocks={n_blocks}", recovery_s=t_fast,
+            blocks_replayed=fast.replayed_records, speedup=t_full / t_fast,
+        )
+        eng.store.close()
+
+
+def run_journal_overhead(round_txs: int, iters: int) -> None:
+    tps = {}
+    for on in (True, False):
+        cfg = engine.EngineConfig(
+            peer=dataclasses.replace(committer.FASTFABRIC_PEER, journal=on),
+            store_blocks=False,  # isolate the commit path
+        )
+        eng = engine.FabricEngine(cfg)
+        eng.run_round(eng.make_proposals(round_txs, seed=99))  # compile
+        samples = [
+            eng.run_round(eng.make_proposals(round_txs, seed=i)).tps
+            for i in range(iters)
+        ]
+        tps[on] = float(np.median(samples))
+        common.row("fig9", f"journal={'on' if on else 'off'}", tps=tps[on])
+    common.row("fig9", "journal_overhead", ratio=tps[False] / tps[True])
+
+
+def main(argv: list[str] | None = None) -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--round-txs", type=int, default=500)
+    p.add_argument("--rounds-list", type=int, nargs="+", default=[2, 4, 8])
+    p.add_argument("--snapshot-every", type=int, default=4)
+    p.add_argument("--overhead-iters", type=int, default=5)
+    args = p.parse_args(argv)
+    run_recovery(args.round_txs, args.rounds_list, args.snapshot_every)
+    run_journal_overhead(args.round_txs, args.overhead_iters)
+
+
+if __name__ == "__main__":
+    main()
+    common.print_csv()

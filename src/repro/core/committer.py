@@ -38,6 +38,7 @@ import jax.numpy as jnp
 
 from repro.core import crypto, hashing, ledger, mvcc, types, unmarshal
 from repro.core import world_state as ws
+from repro.storage import journal as state_journal
 
 U32 = jnp.uint32
 
@@ -52,6 +53,11 @@ class PeerConfig:
     sequential_commit: bool = False  # paper-faithful serial state update
     pipeline_depth: int = 8  # blocks in flight (P-II)
     tx_par: int = 0  # 0 = whole block at once; else tile width (Fig 7 knob)
+    # Authenticated state-journal head on the commit path (storage/journal).
+    # Off for the paper-faithful baseline (its durability is the database);
+    # on from P-I up, where dropping the database makes the journal the
+    # restart story.
+    journal: bool = True
 
     @property
     def name(self) -> str:
@@ -69,21 +75,27 @@ class PeerConfig:
 
 FABRIC_V12_PEER = PeerConfig(
     hash_state=False, parallel=False, cache=False, sequential_commit=True,
-    pipeline_depth=1,
+    pipeline_depth=1, journal=False,
 )
-OPT_P1 = dataclasses.replace(FABRIC_V12_PEER, hash_state=True)
+OPT_P1 = dataclasses.replace(FABRIC_V12_PEER, hash_state=True, journal=True)
 OPT_P2 = dataclasses.replace(OPT_P1, parallel=True, pipeline_depth=8)
 OPT_P3 = dataclasses.replace(OPT_P2, cache=True, sequential_commit=False)
 FASTFABRIC_PEER = OPT_P3
 
 
 class PeerState(NamedTuple):
-    """World state + ledger head, threaded through block commits."""
+    """World state + authentication heads, threaded through block commits.
+
+    ``journal_head`` is the state-journal's running digest (storage/journal):
+    the commit path folds each block's validated write sets into it, so the
+    peer always carries the head that the off-path journal must reproduce.
+    """
 
     hash_state: ws.HashState
     sorted_state: ws.SortedState
     ledger_head: jnp.ndarray  # (2,) u32
     block_no: jnp.ndarray  # () u32
+    journal_head: jnp.ndarray  # (2,) u32
 
 
 def create_peer_state(
@@ -101,6 +113,7 @@ def create_peer_state(
         # peer state, and donating a shared module-level array would delete it.
         ledger_head=jnp.zeros((2,), U32),
         block_no=jnp.uint32(0),
+        journal_head=jnp.zeros((2,), U32),
     )
 
 
@@ -158,7 +171,7 @@ def stage_endorse(wire, dims: types.FabricDims, parallel: bool, tx_par: int):
 
 @functools.partial(
     jax.jit,
-    static_argnames=("dims", "hash_state", "sequential_commit"),
+    static_argnames=("dims", "hash_state", "sequential_commit", "journal"),
     donate_argnames=("state",),
 )
 def stage_mvcc_commit(
@@ -169,6 +182,7 @@ def stage_mvcc_commit(
     dims: types.FabricDims,
     hash_state: bool,
     sequential_commit: bool,
+    journal: bool,
 ):
     """Stages 3+4: MVCC validation + state commit + ledger append."""
     dec = unmarshal.unmarshal(wire, dims)  # baseline: third decode
@@ -197,13 +211,28 @@ def stage_mvcc_commit(
 
     digest = ledger.block_body_digest(wire, res.valid)
     bh = ledger.append_hash(state.ledger_head, state.block_no, digest)
+    jh = _advance_journal_head(state, txb, res.valid, journal)
     new_state = PeerState(
         hash_state=hstate,
         sorted_state=sstate,
         ledger_head=bh,
         block_no=state.block_no + 1,
+        journal_head=jh,
     )
     return new_state, res.valid, bh, overflow
+
+
+def _advance_journal_head(state: PeerState, txb: types.TxBatch, valid,
+                          journal: bool):
+    """Fold this block's validated write sets into the journal head (the
+    jit-able on-path half of storage/journal; overhead measured by fig9)."""
+    if not journal:
+        return state.journal_head
+    return state_journal.update_head(
+        state.journal_head,
+        state.block_no,
+        state_journal.write_set_digest(txb.write_keys, txb.write_vals, valid),
+    )
 
 
 @functools.partial(
@@ -242,11 +271,13 @@ def commit_block_fused(
 
     digest = ledger.block_body_digest(wire, res.valid)
     bh = ledger.append_hash(state.ledger_head, state.block_no, digest)
+    jh = _advance_journal_head(state, txb, res.valid, cfg.journal)
     new_state = PeerState(
         hash_state=hstate,
         sorted_state=sstate,
         ledger_head=bh,
         block_no=state.block_no + 1,
+        journal_head=jh,
     )
     return new_state, res.valid, bh, overflow
 
@@ -269,7 +300,7 @@ def commit_block(
         endorse_ok = stage_endorse(wire, dims, cfg.parallel, cfg.tx_par)
         new_state, valid, bh, ovf = stage_mvcc_commit(
             state, wire, checksum_ok, endorse_ok, dims,
-            cfg.hash_state, cfg.sequential_commit,
+            cfg.hash_state, cfg.sequential_commit, cfg.journal,
         )
     return BlockResult(state=new_state, valid=valid, block_hash=bh,
                        overflow=ovf)

@@ -32,6 +32,8 @@ from repro.core import (
     unmarshal,
 )
 from repro.core import world_state as ws
+from repro.storage import journal as state_journal
+from repro.storage import recovery, snapshot
 
 U32 = jnp.uint32
 
@@ -45,6 +47,16 @@ class EngineConfig:
     slots: int = 8
     n_endorsers: int = 3
     store_blocks: bool = True
+    # Durability layer (storage/): snapshot every N committed blocks
+    # (0 = off), optionally persisted to snapshot_dir; journal_dir spills
+    # journal records for cold-start recovery (StateJournal.load);
+    # prune_chain compacts the block chain + journal up to each snapshot
+    # (the statejournal storage win — history before a snapshot is no
+    # longer replayed).
+    snapshot_every_blocks: int = 0
+    snapshot_dir: str | None = None
+    journal_dir: str | None = None
+    prune_chain: bool = True
 
     @property
     def name(self) -> str:
@@ -77,13 +89,38 @@ class FabricEngine:
     exercised at scale by the mesh-role dry-run)."""
 
     def __init__(self, cfg: EngineConfig):
+        if cfg.snapshot_every_blocks and not (
+            cfg.store_blocks and cfg.peer.journal and cfg.peer.hash_state
+        ):
+            raise ValueError(
+                "snapshot_every_blocks requires store_blocks=True and a "
+                "peer config with journal=True and hash_state=True (P-I): "
+                "snapshots cover the hash-table state and recovery replays "
+                "the journal the storage role materializes"
+            )
         self.cfg = cfg
         self.peer_state = committer.create_peer_state(
             cfg.dims, n_buckets=cfg.n_buckets, slots=cfg.slots
         )
         self.endorser_state = ws.create(cfg.n_buckets, cfg.slots, cfg.dims.vw)
         self.log_head = jnp.zeros((2,), U32)
-        self.store = ledger.BlockStore() if cfg.store_blocks else None
+        # Journal materialization rides the storage role's writer thread —
+        # attached only when the durability layer is configured (a snapshot
+        # cadence or an on-disk journal), so engines that never asked for a
+        # restart story keep the seed's storage-role cost and memory profile.
+        # The commit-path head (PeerConfig.journal) is independent and cheap.
+        self.journal = (
+            state_journal.StateJournal(cfg.dims, spill_dir=cfg.journal_dir)
+            if (cfg.store_blocks and cfg.peer.journal
+                and (cfg.snapshot_every_blocks > 0
+                     or cfg.journal_dir is not None))
+            else None
+        )
+        self.store = (
+            ledger.BlockStore(journal=self.journal)
+            if cfg.store_blocks else None
+        )
+        self.snapshots: list[snapshot.Snapshot] = []
         self.total_valid = 0
         self.total_txs = 0
         self._next_block_no = 0
@@ -176,6 +213,7 @@ class FabricEngine:
             )
             n_valid += int(valid.sum())
 
+        self._maybe_snapshot()
         self.total_valid += n_valid
         self.total_txs += n
         return RoundStats(
@@ -189,16 +227,72 @@ class FabricEngine:
             self.store.submit(bno, prev_head, block_hash, wire_b, valid)
         return wire_b, valid
 
+    # -- durability layer (storage/) -------------------------------------------
+
+    def _maybe_snapshot(self) -> None:
+        """Snapshot cadence: dump world state every ``snapshot_every_blocks``
+        committed blocks; prune chain + journal with a one-snapshot lag (the
+        previous snapshot stays fully recoverable even if the newest one is
+        lost or torn)."""
+        cfg = self.cfg
+        if not cfg.snapshot_every_blocks:
+            return
+        last = self.snapshots[-1].block_no if self.snapshots else -1
+        tip = self._next_block_no - 1  # last committed block
+        if tip - last < cfg.snapshot_every_blocks:
+            return
+        self.store.drain()  # journal must cover every shipped block
+        snap = snapshot.take(
+            self.peer_state.hash_state,
+            block_no=tip,
+            journal_head=self.peer_state.journal_head,
+            ledger_head=self.peer_state.ledger_head,
+        )
+        self.snapshots.append(snap)
+        if cfg.snapshot_dir is not None:
+            snapshot.save(cfg.snapshot_dir, snap)
+            snapshot.gc(cfg.snapshot_dir, keep=2)
+        if cfg.prune_chain and len(self.snapshots) >= 2:
+            base = self.snapshots[-2].block_no
+            self.store.prune_upto(base)
+            self.journal.prune_upto(base)
+            self.snapshots = self.snapshots[-2:]
+
+    def recover(self) -> recovery.RecoveryResult:
+        """Cold-start recovery from the latest snapshot + journal suffix."""
+        if self.journal is None:
+            raise recovery.RecoveryError("engine has no journal")
+        self.store.drain()
+        return recovery.recover(
+            self.journal,
+            snapshot=self.snapshots[-1] if self.snapshots else None,
+            n_buckets=self.cfg.n_buckets,
+            slots=self.cfg.slots,
+            value_width=self.cfg.dims.vw,
+        )
+
     # -- durability checks (used by tests/examples) ----------------------------
 
     def verify(self) -> dict:
-        """Drain storage, verify the chain, check replica consistency."""
-        out = {"chain_ok": True, "replica_ok": True, "replay_ok": True}
+        """Drain storage, verify the chain, check replica consistency, and
+        prove the recovery path reproduces the live peer."""
+        out = {"chain_ok": True, "replica_ok": True, "replay_ok": True,
+               "recovery_ok": True}
         if self.store is not None:
             self.store.drain()
             out["chain_ok"] = self.store.verify_chain()
+            start = None
+            if self.store.base_block_no >= 0:
+                # Chain pruned at a snapshot boundary: replay resumes from
+                # the snapshot that covers the compacted prefix.
+                base = next(
+                    s for s in self.snapshots
+                    if s.block_no == self.store.base_block_no
+                )
+                start = snapshot.to_state(base)
             replayed = self.store.replay_state(
-                self.cfg.dims, self.cfg.n_buckets, self.cfg.slots
+                self.cfg.dims, self.cfg.n_buckets, self.cfg.slots,
+                start_state=start,
             )
             out["replay_ok"] = bool(
                 np.array_equal(
@@ -206,6 +300,23 @@ class FabricEngine:
                     np.asarray(ws.state_digest(self.peer_state.hash_state)),
                 )
             ) if self.cfg.peer.hash_state else True
+        if self.journal is not None and self.cfg.peer.hash_state:
+            try:
+                rec = self.recover()
+                out["recovery_ok"] = bool(
+                    np.array_equal(
+                        rec.state_digest,
+                        np.asarray(
+                            ws.state_digest(self.peer_state.hash_state)
+                        ),
+                    )
+                    and np.array_equal(
+                        rec.journal_head,
+                        np.asarray(self.peer_state.journal_head),
+                    )
+                )
+            except recovery.RecoveryError:
+                out["recovery_ok"] = False
         if self.cfg.peer.hash_state:
             out["replica_ok"] = bool(
                 np.array_equal(

@@ -73,12 +73,23 @@ class BlockStore:
     (the 'remote gRPC call' of §III-F) and appends to an in-memory chain
     [+ optional directory spill]. ``verify_chain`` / ``replay_state`` give
     the durability guarantee that justifies P-I.
+
+    When a ``journal`` (storage/journal.StateJournal) is attached, the same
+    writer thread also emits each block's validated write sets into it —
+    journal materialization rides the storage role, off the commit path.
+    ``prune_upto`` compacts the chain up to the last snapshot: pruned
+    history stays authenticated because the chain re-anchors at the hash of
+    the last pruned block (``base_hash``), which the covering snapshot's
+    recovery path cross-checks.
     """
 
-    def __init__(self, spill_dir: str | None = None):
+    def __init__(self, spill_dir: str | None = None, *, journal=None):
         self._q: "queue.Queue" = queue.Queue()
         self.chain: list[StoredBlock] = []
+        self.base_block_no = -1
+        self.base_hash = np.zeros(2, np.uint32)
         self._spill_dir = spill_dir
+        self._journal = journal
         self._err: Exception | None = None
         self._t = threading.Thread(target=self._run, daemon=True)
         self._t.start()
@@ -101,6 +112,8 @@ class BlockStore:
                         f"{self._spill_dir}/block_{int(bno):08d}.npz",
                         prev_hash=prev, block_hash=bh, wire=wire, valid=valid,
                     )
+                if self._journal is not None:
+                    self._journal.append_block(int(bno), wire, valid)
             except Exception as e:  # surfaced on close()
                 self._err = e
             finally:
@@ -118,10 +131,32 @@ class BlockStore:
         if self._err is not None:
             raise self._err
 
+    # --- Compaction (snapshot-covered prefix) ----------------------------
+
+    def prune_upto(self, block_no: int) -> int:
+        """Drop blocks <= ``block_no`` (covered by a snapshot) from memory
+        and from the spill directory. Returns the number dropped. Call only
+        with the writer drained."""
+        import os
+
+        dropped = [sb for sb in self.chain if sb.block_no <= block_no]
+        if dropped:
+            self.chain = [sb for sb in self.chain if sb.block_no > block_no]
+            self.base_block_no = dropped[-1].block_no
+            self.base_hash = dropped[-1].block_hash
+            if self._spill_dir is not None:
+                for sb in dropped:
+                    path = os.path.join(
+                        self._spill_dir, f"block_{sb.block_no:08d}.npz"
+                    )
+                    if os.path.exists(path):
+                        os.remove(path)
+        return len(dropped)
+
     # --- Durability guarantees -------------------------------------------
 
     def verify_chain(self) -> bool:
-        prev = np.zeros(2, np.uint32)
+        prev = self.base_hash
         for sb in self.chain:
             if not np.array_equal(sb.prev_hash, prev):
                 return False
@@ -137,10 +172,16 @@ class BlockStore:
         return True
 
     def replay_state(
-        self, dims: types.FabricDims, n_buckets: int, slots: int
+        self, dims: types.FabricDims, n_buckets: int, slots: int,
+        start_state: world_state.HashState | None = None,
     ) -> world_state.HashState:
-        """Rebuild world state from the chain (crash recovery for P-I)."""
-        st = world_state.create(n_buckets, slots, dims.vw)
+        """Rebuild world state from the chain (crash recovery for P-I).
+
+        ``start_state``: when the prefix was pruned, replay resumes from the
+        covering snapshot's state instead of genesis.
+        """
+        st = (world_state.create(n_buckets, slots, dims.vw)
+              if start_state is None else start_state)
         for sb in self.chain:
             dec = unmarshal.unmarshal(jnp.asarray(sb.wire), dims)
             st = world_state.commit_vectorized(

@@ -37,6 +37,14 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+try:  # jax >= 0.6: public API, replication check kwarg is `check_vma`
+    _shard_map = jax.shard_map
+    _SHARD_MAP_NO_CHECK = {"check_vma": False}
+except AttributeError:  # jax 0.4.x/0.5.x: experimental, kwarg is `check_rep`
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    _SHARD_MAP_NO_CHECK = {"check_rep": False}
+
 from repro.core import crypto, hashing, mvcc, orderer, types, unmarshal
 from repro.core import world_state as ws
 
@@ -197,14 +205,14 @@ def make_fabric_step(dims: types.FabricDims, cfg: "FabricStepConfig", mesh):
 
     cspec = state_specs(mesh)
     io_spec = P("data", "model", None)
-    step = jax.shard_map(
+    step = _shard_map(
         step_local,
         mesh=mesh,
         in_specs=(cspec.keys, cspec.versions, cspec.values,
                   cspec.log_head, cspec.ledger_head, io_spec, io_spec),
         out_specs=(cspec.keys, cspec.versions, cspec.values, cspec.log_head,
                    cspec.ledger_head, P("data", "model")),
-        check_vma=False,
+        **_SHARD_MAP_NO_CHECK,
     )
 
     def apply(state: FabricMeshState, wire, ids):

@@ -1,0 +1,17 @@
+"""Authenticated state-journal + snapshot storage (the durability layer).
+
+FastFabric's P-I drops the state database and P-II moves block storage off
+the critical path, so a restarted peer must rebuild world state from the
+chain — O(chain length) from genesis. This package gives the peer a restart
+story that is O(journal suffix) instead:
+
+  * :mod:`repro.storage.journal`  — append-only, digest-chained journal of
+    per-block validated write sets (statejournal's "update a hash function
+    with the stream of state updates" instead of a Merkle tree);
+  * :mod:`repro.storage.snapshot` — periodic compact world-state snapshots
+    (device→host dump + content digest, ``.npz`` persisted);
+  * :mod:`repro.storage.recovery` — cold start: latest snapshot + journal
+    suffix, with the digest chain verified end to end.
+"""
+
+from repro.storage import journal, recovery, snapshot  # noqa: F401

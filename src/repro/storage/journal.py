@@ -1,0 +1,281 @@
+"""Append-only, digest-chained journal of validated write sets.
+
+The statejournal idea (SNIPPETS.md): instead of maintaining a Merkle-style
+authenticated structure over the world state, *update a running hash with
+the stream of state updates* and write the updates to a journal. The latest
+state stays in the plain hash table (core/world_state.py); authentication
+comes from the journal's digest chain.
+
+Two halves, mirroring core/ledger.py's ``append_hash`` / ``BlockStore``
+split:
+
+  * ``write_set_digest`` + ``update_head`` — the on-critical-path part:
+    a (2,) u32 authentication head folded over each block's write sets and
+    validity flags. Tiny, jit-able; the committer threads it through
+    ``PeerState.journal_head`` so every commit program also advances the
+    journal head (core/committer.py).
+  * ``StateJournal`` — the off-path materialization: receives validated
+    blocks from the storage role (BlockStore's writer thread), decodes the
+    write sets, recomputes the head chain host-side, and keeps the records
+    [+ optional ``.npz`` spill]. Recovery replays a suffix of these records
+    onto a snapshot (storage/recovery.py).
+
+The head chain is domain-separated from the ledger chain (``_JOURNAL_TAG``)
+so a journal head can never be confused with a block hash.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hashing, types, unmarshal
+from repro.core import world_state as ws
+
+U32 = jnp.uint32
+
+GENESIS_HEAD = np.zeros((2,), np.uint32)
+
+# Domain separation word folded into every head update.
+_JOURNAL_TAG = jnp.uint32(0x4A524E4C)  # "JRNL"
+
+
+def write_set_digest(write_keys: jnp.ndarray, write_vals: jnp.ndarray,
+                     valid: jnp.ndarray) -> jnp.ndarray:
+    """Content digest of a block's write sets + validity flags, (2,) u32.
+
+    Order-dependent over transactions (the journal is a totally ordered
+    stream), mirroring ``ledger.block_body_digest`` but over the *decoded*
+    write sets rather than the wire bytes.
+    """
+    n = write_keys.shape[0]
+    words = jnp.concatenate(
+        [write_keys.reshape(n, -1), write_vals.reshape(n, -1)], axis=1
+    ).astype(U32)
+    d1 = hashing.hash_words(words, seed=hashing.SEED_A)  # (N,)
+    d2 = hashing.hash_words(words, seed=hashing.SEED_B)
+    v = valid.astype(U32)
+    h1 = hashing.hash_words((d1 ^ v)[None, :], seed=hashing.SEED_A)[0]
+    h2 = hashing.hash_words((d2 ^ (v << 1))[None, :], seed=hashing.SEED_B)[0]
+    return jnp.stack([h1, h2])
+
+
+def update_head(prev_head: jnp.ndarray, block_no: jnp.ndarray,
+                ws_digest: jnp.ndarray) -> jnp.ndarray:
+    """Chain: H(tag || prev || block_no || write-set digest). (2,) u32."""
+    words = jnp.concatenate(
+        [
+            jnp.atleast_1d(_JOURNAL_TAG),
+            prev_head,
+            jnp.atleast_1d(block_no).astype(U32),
+            ws_digest,
+        ]
+    )[None, :]
+    return jnp.stack(
+        [
+            hashing.hash_words(words, seed=hashing.SEED_A)[0],
+            hashing.hash_words(words, seed=hashing.SEED_B)[0],
+        ]
+    )
+
+
+@jax.jit
+def journal_head_update(prev_head, block_no, write_keys, write_vals, valid):
+    """One fused head update — what the commit path executes per block."""
+    return update_head(
+        prev_head, block_no, write_set_digest(write_keys, write_vals, valid)
+    )
+
+
+# One decode program per dims, shared by every StateJournal instance.
+_decode_jit = jax.jit(unmarshal.unmarshal, static_argnames="dims")
+
+
+class JournalRecord(NamedTuple):
+    """One journaled block: its validated write sets + the head chain link.
+
+    All arrays are host-side numpy (the journal is the durable, off-device
+    artifact); ``head == update_head(prev_head, block_no, digest(writes))``.
+    """
+
+    block_no: int
+    write_keys: np.ndarray  # (B, WK, 2) u32
+    write_vals: np.ndarray  # (B, WK, VW) u32
+    valid: np.ndarray  # (B,) bool
+    prev_head: np.ndarray  # (2,) u32
+    head: np.ndarray  # (2,) u32
+
+
+class StateJournal:
+    """Host-side journal store: ordered records + running head.
+
+    Appends happen on the storage role's writer thread (off the critical
+    path); reads happen after ``BlockStore.drain()``. ``spill_dir`` persists
+    one ``journal_XXXXXXXX.npz`` per record (same pattern as BlockStore
+    block spill), which ``StateJournal.load`` can rebuild for a cold start.
+    """
+
+    def __init__(self, dims: types.FabricDims, *, spill_dir: str | None = None):
+        if spill_dir is not None:
+            import os
+
+            os.makedirs(spill_dir, exist_ok=True)
+        self.dims = dims
+        self.records: list[JournalRecord] = []
+        self.head = GENESIS_HEAD.copy()
+        # Pruning base: records up to base_block_no were compacted away and
+        # are covered by a snapshot; the chain re-anchors at base_head.
+        self.base_block_no = -1
+        self.base_head = GENESIS_HEAD.copy()
+        self._spill_dir = spill_dir
+
+    # --- append path (storage-role thread) --------------------------------
+
+    def append_block(self, block_no: int, wire, valid) -> JournalRecord:
+        """Decode a validated block's write sets and journal them."""
+        dec = _decode_jit(jnp.asarray(wire), dims=self.dims)
+        return self.append_writes(
+            block_no, dec.txb.write_keys, dec.txb.write_vals, valid
+        )
+
+    def append_writes(self, block_no: int, write_keys, write_vals,
+                      valid) -> JournalRecord:
+        prev = self.head
+        head = np.asarray(
+            journal_head_update(
+                jnp.asarray(prev), jnp.uint32(block_no),
+                jnp.asarray(write_keys), jnp.asarray(write_vals),
+                jnp.asarray(valid),
+            )
+        )
+        rec = JournalRecord(
+            block_no=int(block_no),
+            write_keys=np.asarray(jax.device_get(write_keys)),
+            write_vals=np.asarray(jax.device_get(write_vals)),
+            valid=np.asarray(jax.device_get(valid)).astype(bool),
+            prev_head=prev,
+            head=head,
+        )
+        self.records.append(rec)
+        self.head = head
+        if self._spill_dir is not None:
+            np.savez(
+                f"{self._spill_dir}/journal_{rec.block_no:08d}.npz",
+                block_no=np.uint32(rec.block_no),
+                write_keys=rec.write_keys,
+                write_vals=rec.write_vals,
+                valid=rec.valid,
+                prev_head=rec.prev_head,
+                head=rec.head,
+            )
+        return rec
+
+    # --- authentication ---------------------------------------------------
+
+    def verify_chain(self, *, base_head: np.ndarray | None = None,
+                     after_block_no: int | None = None) -> bool:
+        """Recompute the digest chain over (a suffix of) the records.
+
+        With no arguments, verifies every retained record from the prune
+        base. ``base_head``/``after_block_no`` verify a suffix against a
+        trusted anchor (a snapshot's journal head) — the recovery check.
+        """
+        if after_block_no is None:
+            after_block_no = self.base_block_no
+            prev = self.base_head if base_head is None else base_head
+        else:
+            if base_head is None:
+                raise ValueError("after_block_no requires a base_head anchor")
+            prev = base_head
+        expect_no = after_block_no + 1
+        for rec in self.suffix(after_block_no):
+            if rec.block_no != expect_no:  # gap: records missing
+                return False
+            if not np.array_equal(rec.prev_head, prev):
+                return False
+            recomputed = np.asarray(
+                journal_head_update(
+                    jnp.asarray(prev), jnp.uint32(rec.block_no),
+                    jnp.asarray(rec.write_keys), jnp.asarray(rec.write_vals),
+                    jnp.asarray(rec.valid),
+                )
+            )
+            if not np.array_equal(recomputed, rec.head):
+                return False
+            prev = rec.head
+            expect_no += 1
+        return True
+
+    # --- replay / compaction ----------------------------------------------
+
+    def suffix(self, after_block_no: int) -> list[JournalRecord]:
+        return [r for r in self.records if r.block_no > after_block_no]
+
+    def replay(self, state: ws.HashState, *, after_block_no: int = -1
+               ) -> ws.HashState:
+        """Apply journaled write sets (block order) onto ``state``.
+
+        MVCC guarantees valid write sets within a block are disjoint, so
+        each record is one conflict-free vectorized commit — replay cost is
+        O(suffix), independent of payload size (no unmarshal, no
+        re-validation).
+        """
+        for rec in self.suffix(after_block_no):
+            state = ws.commit_vectorized(
+                state,
+                jnp.asarray(rec.write_keys),
+                jnp.asarray(rec.write_vals),
+                jnp.asarray(rec.valid),
+            ).state
+        return state
+
+    def prune_upto(self, block_no: int) -> int:
+        """Drop records covered by a snapshot at ``block_no`` — from memory
+        and from the spill directory. Returns the number dropped. Call only
+        with the storage role drained."""
+        import os
+
+        dropped = [r for r in self.records if r.block_no <= block_no]
+        if dropped:
+            self.records = self.suffix(block_no)
+            self.base_block_no = dropped[-1].block_no
+            self.base_head = dropped[-1].head
+            if self._spill_dir is not None:
+                for rec in dropped:
+                    path = os.path.join(
+                        self._spill_dir, f"journal_{rec.block_no:08d}.npz"
+                    )
+                    if os.path.exists(path):
+                        os.remove(path)
+        return len(dropped)
+
+    # --- cold-start reload ------------------------------------------------
+
+    @classmethod
+    def load(cls, dims: types.FabricDims, spill_dir: str) -> "StateJournal":
+        """Rebuild a journal from its spill directory (cold start)."""
+        import glob
+        import os
+
+        j = cls(dims, spill_dir=None)
+        paths = sorted(glob.glob(os.path.join(spill_dir, "journal_*.npz")))
+        for p in paths:
+            with np.load(p) as z:
+                rec = JournalRecord(
+                    block_no=int(z["block_no"]),
+                    write_keys=z["write_keys"],
+                    write_vals=z["write_vals"],
+                    valid=z["valid"].astype(bool),
+                    prev_head=z["prev_head"],
+                    head=z["head"],
+                )
+            if not j.records:
+                j.base_block_no = rec.block_no - 1
+                j.base_head = rec.prev_head.copy()
+            j.records.append(rec)
+            j.head = rec.head
+        j._spill_dir = spill_dir
+        return j

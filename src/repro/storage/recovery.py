@@ -1,0 +1,114 @@
+"""Cold-start recovery: latest snapshot + journal suffix, fully verified.
+
+The restart story that lets P-I keep no database: load the most recent
+snapshot (verifying its content digest), verify the journal's digest chain
+from the snapshot's journal head forward, then replay only that suffix of
+write sets — O(blocks since last snapshot) instead of the O(chain length)
+full ``BlockStore.replay_state``. The recovered peer proves it matches the
+crashed one by comparing ``state_digest`` and the terminal journal head
+against the live values (engine.verify's ``recovery_ok``).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+
+from repro.core import types
+from repro.core import world_state as ws
+from repro.storage import journal as journal_mod
+from repro.storage import snapshot as snapshot_mod
+
+
+class RecoveryError(RuntimeError):
+    """Snapshot or journal failed authentication (or coverage is missing)."""
+
+
+class RecoveryResult(NamedTuple):
+    state: ws.HashState  # recovered world state (on device)
+    block_no: int  # last block reflected in ``state``
+    journal_head: np.ndarray  # (2,) u32 — journal head after replay
+    state_digest: np.ndarray  # (2,) u32 — digest of recovered state
+    snapshot_block_no: int  # -1 if recovered from genesis
+    replayed_records: int  # journal suffix length
+
+
+def recover(
+    jrnl: journal_mod.StateJournal,
+    *,
+    snapshot: snapshot_mod.Snapshot | None = None,
+    snapshot_dir: str | None = None,
+    n_buckets: int,
+    slots: int,
+    value_width: int,
+) -> RecoveryResult:
+    """Rebuild world state from ``snapshot`` (or the newest in
+    ``snapshot_dir``, or genesis) + the journal suffix after it.
+
+    Raises :class:`RecoveryError` if the snapshot digest does not match its
+    arrays, the journal chain does not verify from the snapshot's head, or
+    the journal does not cover the suffix (pruned past the snapshot).
+    """
+    if snapshot is None and snapshot_dir is not None:
+        snapshot = snapshot_mod.latest(snapshot_dir)
+
+    if snapshot is not None:
+        if not snapshot_mod.verify(snapshot):
+            raise RecoveryError(
+                f"snapshot at block {snapshot.block_no}: state digest "
+                "mismatch (corrupt or tampered)"
+            )
+        state = snapshot_mod.to_state(snapshot)
+        after = snapshot.block_no
+        anchor = np.asarray(snapshot.journal_head)
+    else:
+        state = ws.create(n_buckets, slots, value_width)
+        after = -1
+        anchor = journal_mod.GENESIS_HEAD
+
+    if jrnl.base_block_no > after:
+        raise RecoveryError(
+            f"journal pruned up to block {jrnl.base_block_no} but recovery "
+            f"needs records after block {after} (no covering snapshot)"
+        )
+    if not jrnl.verify_chain(base_head=anchor, after_block_no=after):
+        raise RecoveryError(
+            f"journal chain does not authenticate after block {after} "
+            "(corrupt, tampered, or missing records)"
+        )
+
+    suffix = jrnl.suffix(after)
+    state = jrnl.replay(state, after_block_no=after)
+    head = suffix[-1].head if suffix else anchor
+    return RecoveryResult(
+        state=state,
+        block_no=suffix[-1].block_no if suffix else after,
+        journal_head=np.asarray(head),
+        state_digest=np.asarray(ws.state_digest(state)),
+        snapshot_block_no=snapshot.block_no if snapshot is not None else -1,
+        replayed_records=len(suffix),
+    )
+
+
+def full_replay(store, dims: types.FabricDims, *, n_buckets: int,
+                slots: int) -> RecoveryResult:
+    """The baseline recovery path: verify + replay the whole block chain
+    (``BlockStore``), for comparison in benchmarks/fig9_recovery.py."""
+    if store.base_block_no >= 0:
+        raise RecoveryError(
+            f"chain pruned up to block {store.base_block_no}: full replay "
+            "from genesis would miss the compacted prefix (recover via "
+            "snapshot + journal instead)"
+        )
+    if not store.verify_chain():
+        raise RecoveryError("block chain does not authenticate")
+    state = store.replay_state(dims, n_buckets, slots)
+    return RecoveryResult(
+        state=state,
+        block_no=store.chain[-1].block_no if store.chain else -1,
+        journal_head=journal_mod.GENESIS_HEAD,
+        state_digest=np.asarray(ws.state_digest(state)),
+        snapshot_block_no=-1,
+        replayed_records=len(store.chain),
+    )

@@ -1,0 +1,125 @@
+"""Compact world-state snapshots: device→host dump + content digest.
+
+A snapshot freezes the peer's hash-table world state (core/world_state.py)
+*as of* a block number, together with the two authentication heads current
+at that block (ledger chain hash, journal head). Persistence is one
+``snapshot_XXXXXXXX.npz`` per snapshot (the BlockStore spill pattern),
+published atomically via tmp-file + rename.
+
+Integrity: ``state_digest`` is the order-independent entry digest from
+``world_state.state_digest`` recomputed over the dumped arrays —
+``verify`` re-derives it, so any tampering with the persisted arrays is
+detected before recovery replays on top of them.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import world_state as ws
+
+
+class Snapshot(NamedTuple):
+    """World state at ``block_no`` (the last applied block), host-side."""
+
+    block_no: int
+    journal_head: np.ndarray  # (2,) u32 — journal head after block_no
+    ledger_head: np.ndarray  # (2,) u32 — chain hash after block_no
+    state_digest: np.ndarray  # (2,) u32 — world_state.state_digest
+    keys: np.ndarray  # (NB, S, 2) u32
+    versions: np.ndarray  # (NB, S) u32
+    values: np.ndarray  # (NB, S, VW) u32
+
+
+def take(state: ws.HashState, *, block_no: int, journal_head,
+         ledger_head) -> Snapshot:
+    """Dump ``state`` to host with its digest (the commit path is not
+    blocked: callers run this between rounds / off the timed window)."""
+    digest = np.asarray(jax.device_get(ws.state_digest(state)))
+    return Snapshot(
+        block_no=int(block_no),
+        journal_head=np.asarray(jax.device_get(journal_head)).astype(np.uint32),
+        ledger_head=np.asarray(jax.device_get(ledger_head)).astype(np.uint32),
+        state_digest=digest,
+        keys=np.asarray(jax.device_get(state.keys)),
+        versions=np.asarray(jax.device_get(state.versions)),
+        values=np.asarray(jax.device_get(state.values)),
+    )
+
+
+def to_state(snap: Snapshot) -> ws.HashState:
+    """Re-place the snapshot arrays on device."""
+    return ws.HashState(
+        keys=jnp.asarray(snap.keys),
+        versions=jnp.asarray(snap.versions),
+        values=jnp.asarray(snap.values),
+    )
+
+
+def verify(snap: Snapshot) -> bool:
+    """Recompute the state digest over the (possibly reloaded) arrays."""
+    got = np.asarray(ws.state_digest(to_state(snap)))
+    return bool(np.array_equal(got, snap.state_digest))
+
+
+def path_for(directory: str, block_no: int) -> str:
+    return os.path.join(directory, f"snapshot_{block_no:08d}.npz")
+
+
+def save(directory: str, snap: Snapshot) -> str:
+    """Persist atomically: write to a tmp name, then rename-publish."""
+    os.makedirs(directory, exist_ok=True)
+    final = path_for(directory, snap.block_no)
+    tmp = final + ".tmp"
+    with open(tmp, "wb") as f:
+        np.savez(
+            f,
+            block_no=np.uint32(snap.block_no),
+            journal_head=snap.journal_head,
+            ledger_head=snap.ledger_head,
+            state_digest=snap.state_digest,
+            keys=snap.keys,
+            versions=snap.versions,
+            values=snap.values,
+        )
+    os.replace(tmp, final)
+    return final
+
+
+def load(path: str) -> Snapshot:
+    with np.load(path) as z:
+        return Snapshot(
+            block_no=int(z["block_no"]),
+            journal_head=z["journal_head"],
+            ledger_head=z["ledger_head"],
+            state_digest=z["state_digest"],
+            keys=z["keys"],
+            versions=z["versions"],
+            values=z["values"],
+        )
+
+
+def list_blocks(directory: str) -> list[int]:
+    if not os.path.isdir(directory):
+        return []
+    out = []
+    for name in os.listdir(directory):
+        if name.startswith("snapshot_") and name.endswith(".npz"):
+            out.append(int(name[len("snapshot_"):-len(".npz")]))
+    return sorted(out)
+
+
+def latest(directory: str) -> Snapshot | None:
+    blocks = list_blocks(directory)
+    return load(path_for(directory, blocks[-1])) if blocks else None
+
+
+def gc(directory: str, *, keep: int = 2) -> None:
+    """Drop all but the newest ``keep`` snapshots."""
+    for bno in list_blocks(directory)[:-keep]:
+        os.remove(path_for(directory, bno))

@@ -56,7 +56,8 @@ def test_all_configs_agree():
 def test_chain_verify_and_replay():
     eng, _ = _run(engine.FASTFABRIC, n=100)
     out = eng.verify()
-    assert out == {"chain_ok": True, "replica_ok": True, "replay_ok": True}
+    assert out == {"chain_ok": True, "replica_ok": True, "replay_ok": True,
+                   "recovery_ok": True}
     eng.store.close()
 
 

@@ -1,0 +1,357 @@
+"""Storage subsystem: journal digest chain, snapshots, crash recovery, and
+the BlockStore spill path the snapshot persistence builds on."""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine, ledger, types, unmarshal
+from repro.core import world_state as ws
+from repro.storage import journal as journal_mod
+from repro.storage import recovery, snapshot
+
+DIMS = types.TEST_DIMS
+
+
+def _journal_with_blocks(n_blocks=3, batch=8, seed=0):
+    j = journal_mod.StateJournal(DIMS)
+    rng = np.random.default_rng(seed)
+    for b in range(n_blocks):
+        wk = jnp.asarray(
+            rng.integers(1, 1 << 30, size=(batch, DIMS.wk, 2), dtype=np.uint32)
+        )
+        wv = jnp.asarray(
+            rng.integers(0, 1 << 30, size=(batch, DIMS.wk, DIMS.vw),
+                         dtype=np.uint32)
+        )
+        valid = jnp.asarray(rng.integers(0, 2, size=batch).astype(bool))
+        j.append_writes(b, wk, wv, valid)
+    return j
+
+
+# --------------------------------------------------------------------- journal
+
+
+def test_journal_chain_verifies_and_heads_link():
+    j = _journal_with_blocks(4)
+    assert j.verify_chain()
+    for prev, rec in zip(j.records, j.records[1:]):
+        np.testing.assert_array_equal(rec.prev_head, prev.head)
+    np.testing.assert_array_equal(j.head, j.records[-1].head)
+
+
+@pytest.mark.parametrize("field", ["write_keys", "write_vals", "valid"])
+def test_journal_tamper_detected(field):
+    j = _journal_with_blocks(4)
+    rec = j.records[2]
+    arr = getattr(rec, field).copy()
+    arr.flat[0] = not arr.flat[0] if field == "valid" else arr.flat[0] ^ 1
+    j.records[2] = rec._replace(**{field: arr})
+    assert not j.verify_chain()
+
+
+def test_journal_missing_record_detected():
+    j = _journal_with_blocks(4)
+    del j.records[1]  # gap in block numbers
+    assert not j.verify_chain()
+
+
+def test_journal_prune_reanchors_chain():
+    j = _journal_with_blocks(5)
+    head = j.head.copy()
+    assert j.prune_upto(2) == 3
+    assert j.base_block_no == 2
+    assert [r.block_no for r in j.records] == [3, 4]
+    assert j.verify_chain()  # re-anchored at base_head
+    np.testing.assert_array_equal(j.head, head)
+
+
+def test_journal_spill_and_cold_load(tmp_path):
+    spill = tmp_path / "journal"
+    spill.mkdir()
+    j = journal_mod.StateJournal(DIMS, spill_dir=str(spill))
+    rng = np.random.default_rng(3)
+    for b in range(3):
+        wk = jnp.asarray(
+            rng.integers(1, 1 << 30, size=(4, DIMS.wk, 2), dtype=np.uint32))
+        wv = jnp.asarray(
+            rng.integers(0, 1 << 30, size=(4, DIMS.wk, DIMS.vw),
+                         dtype=np.uint32))
+        j.append_writes(b, wk, wv, jnp.ones(4, bool))
+    j2 = journal_mod.StateJournal.load(DIMS, str(spill))
+    assert len(j2.records) == 3
+    assert j2.verify_chain()
+    np.testing.assert_array_equal(j2.head, j.head)
+    # Pruning also compacts the spill directory.
+    j2.prune_upto(1)
+    assert sorted(p.name for p in spill.iterdir()) == ["journal_00000002.npz"]
+    j3 = journal_mod.StateJournal.load(DIMS, str(spill))
+    assert [r.block_no for r in j3.records] == [2]
+    assert j3.verify_chain()
+
+
+def test_journal_replay_matches_direct_commits():
+    j = _journal_with_blocks(3)
+    direct = ws.create(256, 8, DIMS.vw)
+    for rec in j.records:
+        direct = ws.commit_vectorized(
+            direct, jnp.asarray(rec.write_keys), jnp.asarray(rec.write_vals),
+            jnp.asarray(rec.valid),
+        ).state
+    replayed = j.replay(ws.create(256, 8, DIMS.vw))
+    np.testing.assert_array_equal(
+        np.asarray(ws.state_digest(replayed)),
+        np.asarray(ws.state_digest(direct)),
+    )
+
+
+# -------------------------------------------------------------------- snapshot
+
+
+def test_snapshot_roundtrip_and_tamper(tmp_path):
+    st = ws.create(64, 4, DIMS.vw)
+    txb = types.make_transfer_batch(DIMS, 16, seed=7)
+    st = ws.commit_vectorized(
+        st, txb.write_keys, txb.write_vals, jnp.ones(16, bool)
+    ).state
+    snap = snapshot.take(
+        st, block_no=5, journal_head=np.arange(2, dtype=np.uint32),
+        ledger_head=np.zeros(2, np.uint32),
+    )
+    assert snapshot.verify(snap)
+    path = snapshot.save(str(tmp_path), snap)
+    loaded = snapshot.load(path)
+    assert loaded.block_no == 5
+    assert snapshot.verify(loaded)
+    np.testing.assert_array_equal(
+        np.asarray(ws.state_digest(snapshot.to_state(loaded))),
+        np.asarray(ws.state_digest(st)),
+    )
+    # latest() picks the highest block number.
+    snapshot.save(str(tmp_path), snap._replace(block_no=2))
+    assert snapshot.latest(str(tmp_path)).block_no == 5
+    # Tampering with the persisted arrays breaks the content digest.
+    bad = loaded._replace(versions=loaded.versions + 1)
+    assert not snapshot.verify(bad)
+    with pytest.raises(recovery.RecoveryError, match="digest mismatch"):
+        recovery.recover(
+            journal_mod.StateJournal(DIMS), snapshot=bad,
+            n_buckets=64, slots=4, value_width=DIMS.vw,
+        )
+
+
+# ------------------------------------------------------- end-to-end recovery
+
+
+def _engine(**kw):
+    cfg = engine.EngineConfig(
+        orderer=dataclasses.replace(
+            engine.FASTFABRIC.orderer, block_size=50
+        ),
+        n_buckets=1 << 10,
+        **kw,
+    )
+    return engine.FabricEngine(cfg)
+
+
+def test_engine_recovery_matches_live_and_full_replay():
+    """Acceptance: >=3 rounds with a snapshot cadence -> recovery from the
+    latest snapshot + journal suffix == live digest == full chain replay."""
+    eng = _engine(snapshot_every_blocks=4, prune_chain=False)
+    for i in range(3):
+        eng.run_round(eng.make_proposals(150, seed=i))  # 3 blocks per round
+    eng.store.drain()
+    assert eng.snapshots, "cadence should have produced a snapshot"
+
+    live = np.asarray(ws.state_digest(eng.peer_state.hash_state))
+    rec = eng.recover()
+    assert rec.snapshot_block_no == eng.snapshots[-1].block_no
+    assert 0 < rec.replayed_records < len(eng.store.chain)
+    np.testing.assert_array_equal(rec.state_digest, live)
+    np.testing.assert_array_equal(
+        rec.journal_head, np.asarray(eng.peer_state.journal_head)
+    )
+
+    full = recovery.full_replay(
+        eng.store, eng.cfg.dims, n_buckets=eng.cfg.n_buckets,
+        slots=eng.cfg.slots,
+    )
+    np.testing.assert_array_equal(full.state_digest, live)
+    assert eng.verify() == {
+        "chain_ok": True, "replica_ok": True, "replay_ok": True,
+        "recovery_ok": True,
+    }
+    eng.store.close()
+
+
+def test_engine_pruned_chain_still_verifies():
+    eng = _engine(snapshot_every_blocks=3)  # prune_chain defaults True
+    for i in range(3):
+        eng.run_round(eng.make_proposals(150, seed=10 + i))
+    eng.store.drain()
+    assert eng.store.base_block_no >= 0  # prefix was compacted
+    assert eng.journal.base_block_no == eng.store.base_block_no
+    # Lag-one pruning: the previous snapshot anchors the compacted prefix.
+    assert eng.store.base_block_no == eng.snapshots[-2].block_no
+    assert len(eng.store.chain) < eng._next_block_no
+    assert all(eng.verify().values())
+    # Full replay from genesis is impossible on a pruned chain — refused,
+    # never silently wrong.
+    with pytest.raises(recovery.RecoveryError, match="pruned"):
+        recovery.full_replay(
+            eng.store, eng.cfg.dims, n_buckets=eng.cfg.n_buckets,
+            slots=eng.cfg.slots,
+        )
+    eng.store.close()
+
+
+def test_engine_rejects_snapshots_without_journal():
+    with pytest.raises(ValueError, match="snapshot_every_blocks"):
+        engine.FabricEngine(
+            engine.EngineConfig(
+                peer=dataclasses.replace(
+                    engine.FASTFABRIC.peer, journal=False
+                ),
+                snapshot_every_blocks=4,
+            )
+        )
+    with pytest.raises(ValueError, match="snapshot_every_blocks"):
+        engine.FabricEngine(
+            dataclasses.replace(engine.FABRIC_V12, snapshot_every_blocks=4)
+        )
+
+
+def test_engine_snapshot_persisted_to_dir(tmp_path):
+    eng = _engine(snapshot_every_blocks=2, snapshot_dir=str(tmp_path))
+    for i in range(2):
+        eng.run_round(eng.make_proposals(100, seed=20 + i))
+    eng.store.drain()
+    blocks = snapshot.list_blocks(str(tmp_path))
+    assert blocks and blocks[-1] == eng.snapshots[-1].block_no
+    loaded = snapshot.latest(str(tmp_path))
+    assert snapshot.verify(loaded)
+    eng.store.close()
+
+
+def test_engine_recovery_detects_journal_tamper():
+    eng = _engine(snapshot_every_blocks=4, prune_chain=False)
+    for i in range(3):
+        eng.run_round(eng.make_proposals(150, seed=30 + i))
+    eng.store.drain()
+    idx = -1  # a record in the post-snapshot suffix
+    rec = eng.journal.records[idx]
+    vals = rec.write_vals.copy()
+    vals[0, 0, 0] ^= 1
+    eng.journal.records[idx] = rec._replace(write_vals=vals)
+    with pytest.raises(recovery.RecoveryError, match="authenticate"):
+        eng.recover()
+    assert eng.verify()["recovery_ok"] is False
+    eng.store.close()
+
+
+def test_engine_recovery_detects_snapshot_tamper():
+    eng = _engine(snapshot_every_blocks=4, prune_chain=False)
+    for i in range(3):
+        eng.run_round(eng.make_proposals(150, seed=40 + i))
+    eng.store.drain()
+    snap = eng.snapshots[-1]
+    keys = snap.keys.copy()
+    keys[0, 0, 0] ^= 1
+    eng.snapshots[-1] = snap._replace(keys=keys)
+    with pytest.raises(recovery.RecoveryError, match="digest mismatch"):
+        eng.recover()
+    assert eng.verify()["recovery_ok"] is False
+    eng.store.close()
+
+
+def test_recovery_refuses_overpruned_journal():
+    eng = _engine(snapshot_every_blocks=4, prune_chain=False)
+    for i in range(2):
+        eng.run_round(eng.make_proposals(150, seed=50 + i))
+    eng.store.drain()
+    eng.journal.prune_upto(eng.journal.records[-1].block_no)
+    eng.snapshots.clear()  # no snapshot covers the pruned prefix
+    with pytest.raises(recovery.RecoveryError, match="pruned"):
+        eng.recover()
+    eng.store.close()
+
+
+# ------------------------------------------------- BlockStore spill coverage
+
+
+def _chain_blocks(n_blocks=2, batch=8):
+    """Consistently hash-chained (wire, valid, prev, hash) tuples."""
+    prev = jnp.zeros((2,), jnp.uint32)
+    out = []
+    for b in range(n_blocks):
+        txb = types.make_transfer_batch(DIMS, batch, seed=60 + b)
+        wire = unmarshal.marshal(txb, DIMS)
+        valid = jnp.ones(batch, bool)
+        digest = ledger.block_body_digest(wire, valid)
+        bh = ledger.append_hash(prev, jnp.uint32(b), digest)
+        out.append((b, prev, bh, wire, valid))
+        prev = bh
+    return out
+
+
+def test_blockstore_spill_writes_npz(tmp_path):
+    store = ledger.BlockStore(spill_dir=str(tmp_path))
+    blocks = _chain_blocks(3)
+    for bno, prev, bh, wire, valid in blocks:
+        store.submit(bno, prev, bh, wire, valid)
+    store.drain()
+    assert store.verify_chain()
+    for bno, prev, bh, wire, valid in blocks:
+        with np.load(tmp_path / f"block_{bno:08d}.npz") as z:
+            np.testing.assert_array_equal(z["prev_hash"], np.asarray(prev))
+            np.testing.assert_array_equal(z["block_hash"], np.asarray(bh))
+            np.testing.assert_array_equal(z["wire"], np.asarray(wire))
+            np.testing.assert_array_equal(z["valid"], np.asarray(valid))
+    # Pruning compacts the spill directory too; the chain re-anchors.
+    store.prune_upto(1)
+    assert sorted(p.name for p in tmp_path.iterdir()) == [
+        "block_00000002.npz"
+    ]
+    assert store.verify_chain()
+    store.close()
+
+
+def test_blockstore_close_surfaces_spill_error(tmp_path):
+    store = ledger.BlockStore(spill_dir=str(tmp_path / "does_not_exist"))
+    bno, prev, bh, wire, valid = _chain_blocks(1)[0]
+    store.submit(bno, prev, bh, wire, valid)
+    with pytest.raises(FileNotFoundError):
+        store.close()
+
+
+def test_blockstore_drain_surfaces_journal_error():
+    class Boom:
+        def append_block(self, *a):
+            raise RuntimeError("journal sink failed")
+
+    store = ledger.BlockStore(journal=Boom())
+    bno, prev, bh, wire, valid = _chain_blocks(1)[0]
+    store.submit(bno, prev, bh, wire, valid)
+    with pytest.raises(RuntimeError, match="journal sink failed"):
+        store.drain()
+
+
+# ----------------------------------------------------------------- benchmark
+
+
+def test_fig9_benchmark_smoke(capsys):
+    from benchmarks import common, fig9_recovery
+
+    common.ROWS.clear()
+    fig9_recovery.main(
+        ["--round-txs", "100", "--rounds-list", "2", "--snapshot-every", "2",
+         "--overhead-iters", "1"]
+    )
+    names = [r["name"] for r in common.ROWS]
+    assert any(n.startswith("full_replay") for n in names)
+    assert any(n.startswith("snap+journal") for n in names)
+    assert any(n.startswith("journal=") for n in names)
+    recs = [r for r in common.ROWS if "recovery_s" in r]
+    assert all(r["recovery_s"] > 0 for r in recs)
