@@ -282,24 +282,39 @@ class FabricEngine:
             self.store.drain()
             out["chain_ok"] = self.store.verify_chain()
             start = None
+            missing_base = False
             if self.store.base_block_no >= 0:
                 # Chain pruned at a snapshot boundary: replay resumes from
-                # the snapshot that covers the compacted prefix.
+                # the snapshot that covers the compacted prefix. The list
+                # may no longer hold it (pruned snapshots, reloaded dir) —
+                # that is a verification failure, not a crash: without the
+                # covering snapshot the compacted prefix cannot be
+                # re-authenticated or replayed.
                 base = next(
-                    s for s in self.snapshots
-                    if s.block_no == self.store.base_block_no
+                    (s for s in self.snapshots
+                     if s.block_no == self.store.base_block_no),
+                    None,
                 )
-                start = snapshot.to_state(base)
-            replayed = self.store.replay_state(
-                self.cfg.dims, self.cfg.n_buckets, self.cfg.slots,
-                start_state=start,
-            )
-            out["replay_ok"] = bool(
-                np.array_equal(
-                    np.asarray(ws.state_digest(replayed)),
-                    np.asarray(ws.state_digest(self.peer_state.hash_state)),
+                if base is None:
+                    missing_base = True
+                else:
+                    start = snapshot.to_state(base)
+            if missing_base:
+                out["chain_ok"] = False
+                out["replay_ok"] = False
+            else:
+                replayed = self.store.replay_state(
+                    self.cfg.dims, self.cfg.n_buckets, self.cfg.slots,
+                    start_state=start,
                 )
-            ) if self.cfg.peer.hash_state else True
+                out["replay_ok"] = bool(
+                    np.array_equal(
+                        np.asarray(ws.state_digest(replayed)),
+                        np.asarray(
+                            ws.state_digest(self.peer_state.hash_state)
+                        ),
+                    )
+                ) if self.cfg.peer.hash_state else True
         if self.journal is not None and self.cfg.peer.hash_state:
             try:
                 rec = self.recover()

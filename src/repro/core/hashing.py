@@ -10,6 +10,7 @@ All functions are shape-polymorphic and jit/vmap/pallas friendly.
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 U32 = jnp.uint32
@@ -76,6 +77,40 @@ def nonzero_key(h):
     """
     h = jnp.where(h == EMPTY_KEY, jnp.uint32(1), h)
     return jnp.where(h == jnp.uint32(0xFFFFFFFF), jnp.uint32(0xFFFFFFFE), h)
+
+
+def lex_searchsorted(s_hi, s_lo, q_hi, q_lo):
+    """Left insertion point of (q_hi, q_lo) pairs in a (hi, lo)-lexsorted
+    store, without u64 (x64 stays disabled).
+
+    Vectorized binary search over the pair order: 32-ish iterations of a
+    branch-free bisection, each comparing (s_hi[mid], s_lo[mid]) against the
+    query pair. Returns (B,) int32 in [0, N] — the *exact* position, so the
+    caller needs a probe window of one: an arbitrarily long run of equal
+    ``hi`` values (u32 birthday collisions at ~100k-element stores) can
+    never push the match out of reach, unlike a fixed window after a
+    searchsorted on ``hi`` alone.
+    """
+    n = s_hi.shape[0]
+    lo = jnp.zeros(q_hi.shape, jnp.int32)
+    hi = jnp.full(q_hi.shape, n, jnp.int32)
+    if n == 0:
+        return lo
+
+    def body(_, carry):
+        lo, hi = carry
+        active = lo < hi  # converged lanes stop moving
+        mid = (lo + hi) >> 1
+        safe = jnp.minimum(mid, n - 1)
+        mh = s_hi[safe]
+        ml = s_lo[safe]
+        less = (mh < q_hi) | ((mh == q_hi) & (ml < q_lo))
+        lo = jnp.where(active & less, mid + 1, lo)
+        hi = jnp.where(active & ~less, mid, hi)
+        return lo, hi
+
+    lo, hi = jax.lax.fori_loop(0, max(1, n.bit_length()), body, (lo, hi))
+    return lo
 
 
 def key_of_string(s: str) -> int:

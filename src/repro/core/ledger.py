@@ -103,33 +103,65 @@ class BlockStore:
             if item is None:
                 self._q.task_done()
                 return
+            if self._err is not None:
+                # Fail-stop: once an append failed, drop everything behind
+                # it. Appending past the failure would leave a silent gap
+                # in whichever sink raised while the others kept growing;
+                # dropping keeps chain and journal consistent up to the
+                # failure point, and the next drain()/close() surfaces the
+                # error (and the gap fails verify_chain if writing resumes).
+                self._q.task_done()
+                continue
+            spill_path = None
             try:
                 bno, prev, bh, wire, valid = jax.device_get(item)
                 sb = StoredBlock(int(bno), prev, bh, wire, valid)
-                self.chain.append(sb)
                 if self._spill_dir is not None:
+                    spill_path = (
+                        f"{self._spill_dir}/block_{int(bno):08d}.npz"
+                    )
                     np.savez(
-                        f"{self._spill_dir}/block_{int(bno):08d}.npz",
+                        spill_path,
                         prev_hash=prev, block_hash=bh, wire=wire, valid=valid,
                     )
                 if self._journal is not None:
                     self._journal.append_block(int(bno), wire, valid)
-            except Exception as e:  # surfaced on close()
+                # Chain append last: a block is in the chain only if every
+                # sink (spill, journal) accepted it, so the sinks can never
+                # silently trail the chain.
+                self.chain.append(sb)
+            except Exception as e:  # surfaced on drain()/close()
                 self._err = e
+                # Un-spill this block so no sink leads the chain: a reader
+                # of the spill directory must never see a block the chain
+                # and journal fail-stopped before.
+                if spill_path is not None:
+                    import os
+
+                    try:
+                        os.remove(spill_path)
+                    except OSError:
+                        pass
             finally:
                 self._q.task_done()
+
+    def _surface_err(self) -> None:
+        """Raise a latched writer error exactly once, then clear it so the
+        store is usable again (the dropped tail is detectable: replays of
+        the gap fail verify_chain)."""
+        if self._err is not None:
+            err, self._err = self._err, None
+            raise err
 
     def close(self) -> None:
         self._q.put(None)
         self._t.join()
-        if self._err is not None:
-            raise self._err
+        self._surface_err()
 
     def drain(self) -> None:
         """Block until everything submitted so far is stored."""
         self._q.join()
-        if self._err is not None:
-            raise self._err
+        self._surface_err()
 
     # --- Compaction (snapshot-covered prefix) ----------------------------
 

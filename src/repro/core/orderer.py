@@ -34,7 +34,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import crypto, hashing, types
+from repro.core import crypto, hashing, types, unmarshal
 
 U32 = jnp.uint32
 
@@ -64,6 +64,7 @@ class OrderedBlocks(NamedTuple):
     tx_ids: jnp.ndarray  # (n_blocks, block_size, 2) u32
     log_head: jnp.ndarray  # (2,) u32 — consensus log chain hash
     auth_ok: jnp.ndarray  # (N,) bool — per-proposal admission flag
+    join_ok: jnp.ndarray  # (N,) bool — ID->payload reassembly hit, in order
 
 
 # Registered clients (membership service provider table size).
@@ -164,11 +165,22 @@ def order_batch(
     order = consensus_order(tx_ids)
     if cfg.separate_metadata:
         ordered_ids = tx_ids[order]
-        idx = hash_join(ordered_ids, tx_ids)  # the paper's reassembly step
-        ordered_wire = wire[idx]
+        join = hash_join(ordered_ids, tx_ids)  # the paper's reassembly step
+        ordered_wire = wire[join.idx]
+        # A reassembly miss must never ship a silently wrong payload: the tx
+        # stays in its block slot (Fabric semantics) but its checksum word
+        # is inverted, so the committer's syntactic stage flags it invalid
+        # deterministically.
+        cb = 4 * unmarshal.CHECKSUM_WORD
+        check = ordered_wire[:, cb:cb + 4]
+        ordered_wire = ordered_wire.at[:, cb:cb + 4].set(
+            jnp.where(join.found[:, None], check, ~check)
+        )
+        join_ok = join.found
     else:
         ordered_wire = wire[order]
         ordered_ids = tx_ids[order]
+        join_ok = jnp.ones((n,), bool)
 
     nb = n // cfg.block_size
     return OrderedBlocks(
@@ -176,27 +188,38 @@ def order_batch(
         tx_ids=ordered_ids.reshape(nb, cfg.block_size, 2),
         log_head=log_head,
         auth_ok=auth_ok,
+        join_ok=join_ok,
     )
 
 
-def hash_join(query_ids: jnp.ndarray, store_ids: jnp.ndarray) -> jnp.ndarray:
+class JoinResult(NamedTuple):
+    idx: jnp.ndarray  # (N,) int32 into the store; slot 0 when not found
+    found: jnp.ndarray  # (N,) bool — query ID present in the store
+
+
+def hash_join(query_ids: jnp.ndarray, store_ids: jnp.ndarray) -> JoinResult:
     """Vectorized join: for each query ID find its row in ``store_ids``.
 
-    Sort store by id[0], searchsorted, bounded window probe on the pair
-    (same collision argument as world_state.sorted_lookup). Returns (N,)
-    int32 indices into the store.
+    Lexsort the store by the paired ID, then an exact lexicographic binary
+    search (hashing.lex_searchsorted) locates each pair. The search is
+    exact, so no run of equal ``id[0]`` values — however long (u32 birthday
+    collisions are expected at ~100k-tx rounds) — can push a present pair
+    outside a probe window. Misses are reported in ``found``, never as an
+    arbitrary store row.
     """
-    order = jnp.argsort(store_ids[:, 0])
+    order = jnp.lexsort((store_ids[:, 1], store_ids[:, 0]))
     s_hi = store_ids[order, 0]
     s_lo = store_ids[order, 1]
-    pos = jnp.searchsorted(s_hi, query_ids[:, 0], side="left")
-    w = 8
-    win = jnp.clip(pos[:, None] + jnp.arange(w)[None, :], 0, s_hi.shape[0] - 1)
-    hit = (s_hi[win] == query_ids[:, None, 0]) & (
-        s_lo[win] == query_ids[:, None, 1]
+    pos = hashing.lex_searchsorted(
+        s_hi, s_lo, query_ids[:, 0], query_ids[:, 1]
     )
-    sel = jnp.take_along_axis(win, jnp.argmax(hit, axis=1)[:, None], axis=1)[:, 0]
-    return order[sel].astype(jnp.int32)
+    sel = jnp.clip(pos, 0, s_hi.shape[0] - 1)
+    found = (
+        (s_hi[sel] == query_ids[:, 0])
+        & (s_lo[sel] == query_ids[:, 1])
+        & (pos < s_hi.shape[0])
+    )
+    return JoinResult(idx=order[sel].astype(jnp.int32), found=found)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))

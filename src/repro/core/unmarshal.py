@@ -57,9 +57,17 @@ def _layout(dims: types.FabricDims):
     return o
 
 
+# Word index of the header checksum — in the fixed, dims-independent header
+# prefix, so derived once here; anything that touches the checksum on the
+# wire (e.g. orderer.order_batch's reassembly-miss poisoning) must use this
+# rather than re-encode the layout.
+CHECKSUM_WORD: int = _layout(types.FabricDims())["checksum"][0]
+
+
 def payload_checksum(words: jnp.ndarray) -> jnp.ndarray:
-    """FNV chain over words[:, 5:] — the 'parse the whole buffer' cost."""
-    return hashing.hash_words(words[:, 5:], seed=_CHECK_SEED)
+    """FNV chain over the words after the checksum — the 'parse the whole
+    buffer' cost."""
+    return hashing.hash_words(words[:, CHECKSUM_WORD + 1:], seed=_CHECK_SEED)
 
 
 def marshal(txb: types.TxBatch, dims: types.FabricDims, *, fill_seed: int = 1
@@ -90,7 +98,7 @@ def marshal(txb: types.TxBatch, dims: types.FabricDims, *, fill_seed: int = 1
             + jnp.uint32(fill_seed)
         )
         words = words.at[:, s:e].set(filler)
-    words = words.at[:, 4].set(payload_checksum(words))
+    words = words.at[:, CHECKSUM_WORD].set(payload_checksum(words))
     return jax.lax.bitcast_convert_type(words, jnp.uint8).reshape(b, -1)
 
 

@@ -59,13 +59,18 @@ class HashState(NamedTuple):
         return self.values.shape[2]
 
 
-def create(n_buckets: int, slots: int, value_width: int) -> HashState:
+def create(n_buckets: int, slots: int, value_width: int,
+           *, n_shards: int = 1) -> HashState:
+    """Empty table. With ``n_shards > 1``, ``n_buckets`` is the GLOBAL
+    bucket count and the returned table is ONE shard's local slice
+    (n_buckets/n_shards buckets — the high-bit partition, see shard_of)."""
     if n_buckets & (n_buckets - 1):
         raise ValueError("n_buckets must be a power of two")
+    nb = shard_buckets(n_buckets, n_shards)
     return HashState(
-        keys=jnp.zeros((n_buckets, slots, 2), U32),
-        versions=jnp.zeros((n_buckets, slots), U32),
-        values=jnp.zeros((n_buckets, slots, value_width), U32),
+        keys=jnp.zeros((nb, slots, 2), U32),
+        versions=jnp.zeros((nb, slots), U32),
+        values=jnp.zeros((nb, slots, value_width), U32),
     )
 
 
@@ -73,6 +78,94 @@ def bucket_of(state_or_nb, keys: jnp.ndarray) -> jnp.ndarray:
     """Bucket index of paired keys (..., 2) -> (...,). Power-of-2 mask."""
     nb = state_or_nb if isinstance(state_or_nb, int) else state_or_nb.n_buckets
     return keys[..., 0] & jnp.uint32(nb - 1)
+
+
+# ---------------------------------------------------------------------------
+# Model-axis sharding: buckets are partitioned across shards by the HIGH
+# bits of the global bucket index. Shard m owns the contiguous bucket range
+# [m * nb_loc, (m+1) * nb_loc), so a global table reshaped to
+# (n_shards, nb_loc, ...) — or split over the mesh `model` axis — is exactly
+# the high-bit partition, and a shard-local probe with nb_loc buckets
+# (bucket_of masks to the LOW bits) lands on the right local bucket.
+# ---------------------------------------------------------------------------
+
+
+def shard_buckets(n_buckets: int, n_shards: int) -> int:
+    """Buckets per shard; validates the (power-of-two) partition."""
+    if n_shards < 1 or n_shards & (n_shards - 1):
+        raise ValueError(f"n_shards={n_shards} must be a power of two")
+    if n_buckets % n_shards:
+        raise ValueError(
+            f"n_buckets={n_buckets} not divisible by n_shards={n_shards}"
+        )
+    nb_loc = n_buckets // n_shards
+    if nb_loc & (nb_loc - 1):
+        raise ValueError("buckets per shard must stay a power of two")
+    return nb_loc
+
+
+def shard_of(n_buckets: int, n_shards: int, keys: jnp.ndarray) -> jnp.ndarray:
+    """Owner shard of paired keys (..., 2) -> (...,) i32: high bucket bits."""
+    nb_loc = shard_buckets(n_buckets, n_shards)
+    gb = bucket_of(n_buckets, keys)
+    return (gb // jnp.uint32(nb_loc)).astype(jnp.int32)
+
+
+def split_table(tkeys, tvers, tvals, n_shards: int):
+    """(NB, ...) table arrays -> (M, NB/M, ...) shard-major views.
+
+    A contiguous reshape IS the high-bit bucket partition: shard m holds
+    buckets [m*nb_loc, (m+1)*nb_loc). Host-side analogue of splitting the
+    bucket dim over the mesh ``model`` axis (launch/state_sharding)."""
+    nb = tkeys.shape[0]
+    nb_loc = shard_buckets(nb, n_shards)
+    return (
+        tkeys.reshape(n_shards, nb_loc, *tkeys.shape[1:]),
+        tvers.reshape(n_shards, nb_loc, *tvers.shape[1:]),
+        tvals.reshape(n_shards, nb_loc, *tvals.shape[1:]),
+    )
+
+
+def merge_table(skeys, svers, svals):
+    """Inverse of split_table: (M, NB/M, ...) -> (NB, ...)."""
+    return (
+        skeys.reshape(-1, *skeys.shape[2:]),
+        svers.reshape(-1, *svers.shape[2:]),
+        svals.reshape(-1, *svals.shape[2:]),
+    )
+
+
+def shards_for_budget(table_bytes: int, budget_bytes: int, n_buckets: int
+                      ) -> int:
+    """Fewest power-of-two shards that bring a table slice under budget."""
+    n = 1
+    while table_bytes > n * budget_bytes and n < n_buckets:
+        n *= 2
+    return n
+
+
+def shard_digest_tree(digests: jnp.ndarray) -> jnp.ndarray:
+    """Deterministic Merkle-style fold of per-shard digests (M, 2) -> (2,).
+
+    The sharded world state's commitment: each shard digests its own bucket
+    range (state_digest), and the tree combines them in shard order. Note
+    the *XOR-fold* state_digest is itself shard-decomposable (XOR of the
+    per-shard digests equals the full-table digest) — tests use that to tie
+    sharded and replicated states together; this tree is the canonical head
+    because it also binds the shard *layout*.
+    """
+    d = digests
+    while d.shape[0] > 1:
+        if d.shape[0] % 2:
+            d = jnp.concatenate([d, d[-1:]])
+        d = jnp.stack(
+            [
+                hashing.combine(d[0::2, 0], d[1::2, 0]),
+                hashing.combine(d[0::2, 1], d[1::2, 1]),
+            ],
+            axis=-1,
+        )
+    return d[0]
 
 
 class Lookup(NamedTuple):
@@ -288,31 +381,26 @@ def sorted_create(capacity: int, value_width: int) -> SortedState:
     )
 
 
-# Probe window for hi-hash collisions in the sorted store. Keys are uniform
-# u32 hashes, so runs of equal key_hi longer than this need an 8-way 32-bit
-# collision — negligible at any realistic store size (documented cost model).
-_PROBE_WINDOW = 8
-
-
 def sorted_lookup(state: SortedState, keys: jnp.ndarray) -> Lookup:
-    """Binary search on key_hi + bounded linear probe for the (hi, lo) pair.
+    """Exact lexicographic binary search for the (hi, lo) pair.
 
     x64 is disabled, so there is no native u64 composite key; the store is
-    lexsorted by (hi, lo) and lookups searchsorted on hi then scan a
-    _PROBE_WINDOW for the exact pair.
+    lexsorted by (hi, lo) and hashing.lex_searchsorted bisects on the pair
+    directly. The position is exact, so arbitrarily long runs of equal
+    key_hi (u32 birthday collisions) cannot hide a present key — no bounded
+    probe window to fall out of.
     """
-    pos = jnp.searchsorted(state.key_hi, keys[:, 0], side="left")
-    win = jnp.clip(
-        pos[:, None] + jnp.arange(_PROBE_WINDOW)[None, :], 0, state.capacity - 1
-    )  # (B, W)
-    hitw = (
-        (state.key_hi[win] == keys[:, None, 0])
-        & (state.key_lo[win] == keys[:, None, 1])
-        & (keys[:, None, 0] != _DEAD)
-        & (keys[:, None, 0] != hashing.EMPTY_KEY)
-    )  # (B, W)
-    hit = hitw.any(axis=1)
-    idx = jnp.take_along_axis(win, jnp.argmax(hitw, axis=1)[:, None], axis=1)[:, 0]
+    pos = hashing.lex_searchsorted(
+        state.key_hi, state.key_lo, keys[:, 0], keys[:, 1]
+    )
+    idx = jnp.clip(pos, 0, state.capacity - 1)
+    hit = (
+        (state.key_hi[idx] == keys[:, 0])
+        & (state.key_lo[idx] == keys[:, 1])
+        & (pos < state.capacity)
+        & (keys[:, 0] != _DEAD)
+        & (keys[:, 0] != hashing.EMPTY_KEY)
+    )
     vers = jnp.where(hit, state.versions[idx], jnp.uint32(0))
     vals = jnp.where(hit[:, None], state.values[idx], jnp.uint32(0))
     return Lookup(found=hit, versions=vers, values=vals, slots=idx.astype(jnp.int32))

@@ -8,10 +8,13 @@ instead of an HBM gather. Random access inside VMEM is cheap; the per-query
 work is a short vector compare over the bucket's slots (VPU lanes).
 
 Sizing rule (ops.py enforces): table bytes = NB*S*(3+VW)*4 must fit the
-VMEM budget (default 8 MiB); larger states are sharded over devices by the
-runtime (the mesh 'model' axis), not over grid steps — the table is mutable
-state, and sharding it across sequential grid steps would re-stream HBM,
-which is exactly what P-I is designed to avoid.
+VMEM budget (default 8 MiB) per kernel invocation; larger states are
+sharded by high bucket bits — over mesh 'model' ranks in the distributed
+step (launch/state_sharding), or by ops.py's per-slice dispatch on a
+single device (one pallas_call per shard, each slice VMEM-resident) —
+never over sequential grid steps, because the table is mutable state and
+grid-step sharding would re-stream HBM, which is exactly what P-I is
+designed to avoid.
 
 Kernels:
   * lookup:  grid over query tiles; table resident; probes are dynamic-slice

@@ -5,7 +5,12 @@ path drops interpret); the default (None) picks Pallas only on TPU backends
 so CPU tests, benchmarks and the dry-run use the XLA reference path while
 kernel tests exercise the Pallas path explicitly.
 
-Also enforces the VMEM-residency sizing rule from kernel.py.
+Also enforces the VMEM-residency sizing rule from kernel.py: a table that
+exceeds the budget is not rejected — it is dispatched through the sharded
+path (launch/state_sharding's high-bit bucket partition), running the
+kernel once per shard with each slice VMEM-resident. Queries/writes route
+to their owner shard by the high bits of the global bucket index, the same
+partition the mesh ``model`` axis uses in launch/fabric_step.py.
 """
 
 from __future__ import annotations
@@ -13,6 +18,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import world_state as ws
 from repro.kernels.hash_table import kernel, ref
 
 VMEM_BUDGET_BYTES = 8 * 1024 * 1024
@@ -27,16 +33,21 @@ def table_bytes(tkeys, tvals) -> int:
     return nb * s * (3 + vw) * 4
 
 
+def _n_shards(tkeys, tvals) -> int:
+    nb = tkeys.shape[0]
+    return ws.shards_for_budget(
+        table_bytes(tkeys, tvals), VMEM_BUDGET_BYTES, nb
+    )
+
+
 def lookup(tkeys, tvers, tvals, queries, *, use_pallas: bool | None = None):
     """(found, versions, values) for a batch of paired-hash queries."""
     if use_pallas is None:
         use_pallas = _on_tpu()
     if use_pallas:
-        if table_bytes(tkeys, tvals) > VMEM_BUDGET_BYTES:
-            raise ValueError(
-                "state shard exceeds the VMEM residency budget; shard the "
-                "table over the mesh 'model' axis (see kernel.py)"
-            )
+        m = _n_shards(tkeys, tvals)
+        if m > 1:
+            return _sharded_lookup(tkeys, tvers, tvals, queries, m)
         return kernel.lookup(
             tkeys, tvers, tvals, queries, interpret=not _on_tpu()
         )
@@ -49,13 +60,59 @@ def commit(tkeys, tvers, tvals, wkeys, wvals, active,
     if use_pallas is None:
         use_pallas = _on_tpu()
     if use_pallas:
-        if table_bytes(tkeys, tvals) > VMEM_BUDGET_BYTES:
-            raise ValueError(
-                "state shard exceeds the VMEM residency budget; shard the "
-                "table over the mesh 'model' axis (see kernel.py)"
-            )
+        m = _n_shards(tkeys, tvals)
+        if m > 1:
+            return _sharded_commit(tkeys, tvers, tvals, wkeys, wvals,
+                                   active, m)
         return kernel.commit(
             tkeys, tvers, tvals, wkeys, wvals, active,
             interpret=not _on_tpu(),
         )
     return ref.commit_ref(tkeys, tvers, tvals, wkeys, wvals, active)
+
+
+# ---------------------------------------------------------------------------
+# Sharded dispatch: one kernel invocation per bucket shard, each slice
+# within the VMEM budget. Results/writes are routed by owner shard.
+# ---------------------------------------------------------------------------
+
+
+def _sharded_lookup(tkeys, tvers, tvals, queries, n_shards: int):
+    nb = tkeys.shape[0]
+    sk, sv, sva = ws.split_table(tkeys, tvers, tvals, n_shards)
+    owner = ws.shard_of(nb, n_shards, queries)  # (Q,)
+    q = queries.shape[0]
+    vw = tvals.shape[2]
+    found = jnp.zeros((q,), bool)
+    vers = jnp.zeros((q,), jnp.uint32)
+    vals = jnp.zeros((q, vw), jnp.uint32)
+    for m in range(n_shards):
+        f, ver, val = kernel.lookup(
+            sk[m], sv[m], sva[m], queries, interpret=not _on_tpu()
+        )
+        mine = owner == m
+        found = jnp.where(mine, f, found)
+        vers = jnp.where(mine, ver, vers)
+        vals = jnp.where(mine[:, None], val, vals)
+    return found, vers, vals
+
+
+def _sharded_commit(tkeys, tvers, tvals, wkeys, wvals, active, n_shards: int):
+    nb = tkeys.shape[0]
+    sk, sv, sva = ws.split_table(tkeys, tvers, tvals, n_shards)
+    owner = ws.shard_of(nb, n_shards, wkeys)  # (K,)
+    ovf = jnp.asarray(False)
+    ks, vs, vls = [], [], []
+    for m in range(n_shards):
+        k, v, vl, o = kernel.commit(
+            sk[m], sv[m], sva[m], wkeys, wvals, active & (owner == m),
+            interpret=not _on_tpu(),
+        )
+        ks.append(k)
+        vs.append(v)
+        vls.append(vl)
+        ovf = ovf | o
+    okeys, overs, ovals = ws.merge_table(
+        jnp.stack(ks), jnp.stack(vs), jnp.stack(vls)
+    )
+    return okeys, overs, ovals, ovf

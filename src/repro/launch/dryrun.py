@@ -342,10 +342,12 @@ def run_fabric_cell(variant: str, mesh_name: str, out_dir: str,
                     *, b_loc: int = 100, force: bool = False) -> dict:
     """Dry-run the paper's own workload: the sharded fabric step.
 
-    ``variant``: "fastfabric" (O-I+O-II+vectorized commit) or "fabric-v12"
-    (full-payload consensus, serial admission + commit). PAPER_DIMS =
-    2.9 KB transactions, one channel per data rank, one orderer-replica /
-    validation worker per model rank, 100 txs/worker/round.
+    ``variant``: "fastfabric" (O-I+O-II+vectorized commit), "fabric-v12"
+    (full-payload consensus, serial admission + commit), or
+    "fastfabric-sharded" (world state bucket-partitioned over the `model`
+    axis — launch/state_sharding). PAPER_DIMS = 2.9 KB transactions, one
+    channel per data rank, one orderer-replica / validation worker per
+    model rank, 100 txs/worker/round.
     """
     from repro.core import types as ftypes  # noqa: PLC0415
     from repro.launch import fabric_step as fs  # noqa: PLC0415
@@ -356,8 +358,11 @@ def run_fabric_cell(variant: str, mesh_name: str, out_dir: str,
             return json.load(f)
     mesh = mesh_lib.make_production_mesh(multi_pod=(mesh_name == "multi"))
     dims = ftypes.PAPER_DIMS
-    cfg = (fs.FASTFABRIC_STEP if variant == "fastfabric"
-           else fs.FABRIC_V12_STEP)
+    cfg = {
+        "fastfabric": fs.FASTFABRIC_STEP,
+        "fabric-v12": fs.FABRIC_V12_STEP,
+        "fastfabric-sharded": fs.FASTFABRIC_SHARDED_STEP,
+    }[variant]
     t0 = time.time()
     try:
         with mesh:
@@ -430,9 +435,10 @@ def main() -> None:
         )
     variant = OPTIMIZED_VARIANT if args.optimized else None
 
-    if args.fabric or (args.arch in ("fastfabric", "fabric-v12")):
-        variants = ([args.arch] if args.arch in ("fastfabric", "fabric-v12")
-                    else ["fastfabric", "fabric-v12"])
+    fabric_variants = ("fastfabric", "fabric-v12", "fastfabric-sharded")
+    if args.fabric or (args.arch in fabric_variants):
+        variants = ([args.arch] if args.arch in fabric_variants
+                    else list(fabric_variants))
         meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
         for v in variants:
             for m in meshes:

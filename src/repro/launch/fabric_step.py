@@ -47,6 +47,7 @@ except AttributeError:  # jax 0.4.x/0.5.x: experimental, kwarg is `check_rep`
 
 from repro.core import crypto, hashing, mvcc, orderer, types, unmarshal
 from repro.core import world_state as ws
+from repro.launch import state_sharding
 
 U32 = jnp.uint32
 
@@ -74,11 +75,17 @@ def create_mesh_state(n_channels: int, dims: types.FabricDims,
     )
 
 
-def state_specs(mesh) -> FabricMeshState:
-    """Channel dim over `data`; replicated over `model` (replica cluster)."""
+def state_specs(mesh, *, shard_state: bool = False) -> FabricMeshState:
+    """Channel dim over `data`. World-state arrays are replicated over
+    `model` (replica cluster) by default; with ``shard_state`` their bucket
+    dim splits over `model` instead — the high-bit bucket partition of
+    launch/state_sharding. Heads stay replicated (identical on every
+    rank)."""
     c = lambda nd: P("data", *((None,) * nd))
+    s = lambda nd: P("data", "model", *((None,) * (nd - 1)))
+    st = s if shard_state else c
     return FabricMeshState(
-        keys=c(3), versions=c(2), values=c(3), log_head=c(1),
+        keys=st(3), versions=st(2), values=st(3), log_head=c(1),
         ledger_head=c(1),
     )
 
@@ -117,8 +124,16 @@ def make_fabric_step(dims: types.FabricDims, cfg: "FabricStepConfig", mesh):
       wire (C, B_round, WB) u8, ids (C, B_round, 2) u32 — B_round is the
       whole channel round; each model rank ingests B_round/model_size.
     Returns (state, valid (C, B_round) bool).
+
+    With ``cfg.shard_state`` the world-state bucket dim is partitioned over
+    ``model`` (each rank holds NB/model_size buckets, the high-bit bucket
+    partition); reads route to their owner rank via masked-psum gather and
+    commits apply only on the owning shard. The replicated path stays as
+    the oracle — both must produce byte-identical validity bits and
+    ledger/log heads.
     """
     spw = unmarshal.struct_prefix_words(dims)
+    msize = mesh.shape["model"]
 
     def step_local(keys, vers, vals, log_head, ledger_head, wire, ids):
         # Shapes inside shard_map: (1, NB, S, 2), ..., (1, B_loc, WB).
@@ -133,7 +148,8 @@ def make_fabric_step(dims: types.FabricDims, cfg: "FabricStepConfig", mesh):
 
         # --- 1. local syntactic verification (P-II: validate-where-ingested)
         checksum_ok = (
-            unmarshal.payload_checksum(words) == words[:, 4]
+            unmarshal.payload_checksum(words)
+            == words[:, unmarshal.CHECKSUM_WORD]
         )
         # Local endorsement verification (worst case: every tag checked).
         txb_loc = unmarshal.unmarshal(wire, dims).txb
@@ -174,16 +190,31 @@ def make_fabric_step(dims: types.FabricDims, cfg: "FabricStepConfig", mesh):
         ok_ord = ok_glob[order]
 
         st = ws.HashState(keys=keys, versions=vers, values=vals)
-        cur = ws.lookup(
-            st, txb.read_keys.reshape(-1, 2)
-        ).versions.reshape(txb.batch, -1)
+        if cfg.shard_state:
+            # Routed path: `st` is this rank's bucket shard; reads gather
+            # (found, version, value) from the owner rank by masked psum.
+            nb_glob = st.n_buckets * msize
+            cur = state_sharding.sharded_lookup(
+                st, txb.read_keys.reshape(-1, 2), nb_glob, msize
+            ).versions.reshape(txb.batch, -1)
+        else:
+            cur = ws.lookup(
+                st, txb.read_keys.reshape(-1, 2)
+            ).versions.reshape(txb.batch, -1)
         res = mvcc.validate(txb, cur, checksum_ok=ok_ord)
 
-        # --- 5. commit (every replica applies the same deltas).
-        cres = ws.commit(
-            st, txb.write_keys, txb.write_vals, res.valid,
-            sequential=cfg.sequential_commit,
-        )
+        # --- 5. commit (sharded: owner ranks only; else every replica
+        # applies the same deltas).
+        if cfg.shard_state:
+            cres = state_sharding.sharded_commit(
+                st, txb.write_keys, txb.write_vals, res.valid,
+                nb_glob, msize, sequential=cfg.sequential_commit,
+            )
+        else:
+            cres = ws.commit(
+                st, txb.write_keys, txb.write_vals, res.valid,
+                sequential=cfg.sequential_commit,
+            )
         st2 = cres.state
 
         # Ledger append over the ordered round (content + validity).
@@ -203,7 +234,7 @@ def make_fabric_step(dims: types.FabricDims, cfg: "FabricStepConfig", mesh):
             log_head[None], led[None], mine[None],
         )
 
-    cspec = state_specs(mesh)
+    cspec = state_specs(mesh, shard_state=cfg.shard_state)
     io_spec = P("data", "model", None)
     step = _shard_map(
         step_local,
@@ -216,6 +247,8 @@ def make_fabric_step(dims: types.FabricDims, cfg: "FabricStepConfig", mesh):
     )
 
     def apply(state: FabricMeshState, wire, ids):
+        if cfg.shard_state:
+            ws.shard_buckets(state.keys.shape[1], msize)  # validate split
         keys, vers, vals, log_head, led, valid = step(
             state.keys, state.versions, state.values, state.log_head,
             state.ledger_head, wire, ids,
@@ -233,14 +266,20 @@ class FabricStepConfig:
     tree_hash: bool = False  # beyond-paper: O(log B) consensus-log fold
     # (replaces the serial 1600-step chain with a Merkle-style pairwise
     # reduction — different but equally deterministic log head; §Perf)
+    shard_state: bool = False  # beyond-paper: world state sharded over
+    # `model` by high bucket bits (launch/state_sharding) — the table grows
+    # model_size x beyond one device's VMEM budget; replicated path is the
+    # oracle (byte-identical validity bits and ledger/log heads).
 
     @property
     def name(self) -> str:
         base = "fastfabric" if self.separate_metadata else "fabric-1.2"
-        return base + ("+tree" if self.tree_hash else "")
+        return (base + ("+tree" if self.tree_hash else "")
+                + ("+shard" if self.shard_state else ""))
 
 
 FASTFABRIC_STEP = FabricStepConfig()
+FASTFABRIC_SHARDED_STEP = FabricStepConfig(shard_state=True)
 FABRIC_V12_STEP = FabricStepConfig(
     separate_metadata=False, pipelined=False, sequential_commit=True
 )

@@ -1,0 +1,108 @@
+"""Model-axis sharded world state: routing, sharded lookup/commit, digests.
+
+FastFabric's P-I in-memory state table is the hot structure every pipeline
+stage touches. The replicated layout (every ``model`` rank holds the whole
+table) caps the table at one device's VMEM budget and wastes memory
+``model_size``-fold. This module partitions the buckets across ``model``
+ranks by the HIGH bits of the global bucket index (core.world_state.shard_of):
+
+  * rank m owns the contiguous bucket range [m*nb_loc, (m+1)*nb_loc), so the
+    global (NB, S, ...) arrays split over the mesh ``model`` axis — or a
+    host-side reshape to (M, nb_loc, S, ...) — ARE the shard layout;
+  * a shard-local probe with nb_loc buckets masks to the LOW bucket bits,
+    which is exactly the local index of an owned key, so the replicated
+    lookup/commit code runs unchanged on the local slice;
+  * lookups route read keys to their owner rank with a masked psum-gather
+    of (found, version, value): every rank probes the (replicated) key
+    batch against its local shard, masks by ownership, and one psum over
+    ``model`` delivers the owner's answer everywhere (each key has exactly
+    one owner, so the sum is a select);
+  * commits apply each block's validated write set only on the owning
+    shard, by blanking non-owned write keys to the EMPTY sentinel before
+    the ordinary commit.
+
+Equivalence: concatenating the shard tables in rank order reproduces the
+replicated table ARRAY-FOR-ARRAY (same buckets, same slot assignment, same
+versions), because same-bucket writes always share an owner, so intra-bucket
+slot ranking sees the same write sequence. Sharded and replicated
+fabric-step configs must therefore produce byte-identical validity bits,
+ledger heads, and state contents — tests/test_state_sharding.py pins this.
+
+The per-shard digests fold into one head with world_state.shard_digest_tree
+(deterministic tree in rank order); the XOR-fold state_digest also
+decomposes across shards (XOR of shard digests == full-table digest).
+
+These helpers run INSIDE shard_map bodies (they use axis primitives); the
+host-side single-device analogues used by kernels/hash_table/ops.py live in
+split_table / merge_table.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import world_state as ws
+
+U32 = jnp.uint32
+
+
+def owned_mask(keys: jnp.ndarray, n_buckets_global: int, n_shards: int,
+               *, axis: str = "model") -> jnp.ndarray:
+    """Mask of paired keys (..., 2) owned by this rank's shard -> (...,)."""
+    rank = jax.lax.axis_index(axis)
+    return ws.shard_of(n_buckets_global, n_shards, keys) == rank
+
+
+def sharded_lookup(local: ws.HashState, keys: jnp.ndarray,
+                   n_buckets_global: int, n_shards: int,
+                   *, axis: str = "model") -> ws.Lookup:
+    """Routed probe: every rank holds the replicated (B, 2) key batch; the
+    owner's local result is gathered with a masked psum. ``slots`` in the
+    result are shard-local (meaningful only on the owner rank)."""
+    mine = owned_mask(keys, n_buckets_global, n_shards, axis=axis)
+    look = ws.lookup(local, keys)  # local bucket = low bits: owned keys land
+    z = jnp.uint32(0)
+    found = jax.lax.psum(
+        jnp.where(mine, look.found, False).astype(U32), axis
+    ) > 0
+    vers = jax.lax.psum(jnp.where(mine, look.versions, z), axis)
+    vals = jax.lax.psum(jnp.where(mine[:, None], look.values, z), axis)
+    return ws.Lookup(found=found, versions=vers, values=vals,
+                     slots=look.slots)
+
+
+def sharded_commit(local: ws.HashState, write_keys: jnp.ndarray,
+                   write_vals: jnp.ndarray, active: jnp.ndarray,
+                   n_buckets_global: int, n_shards: int,
+                   *, axis: str = "model",
+                   sequential: bool = False) -> ws.CommitResult:
+    """Apply a block's validated write set on the owning shards only.
+
+    Non-owned write keys are blanked to the EMPTY sentinel, which the
+    commit's flatten step drops — ``active`` stays per-transaction, so a
+    transaction whose writes straddle shards commits each write on its
+    owner. Overflow is OR-reduced across shards.
+    """
+    mine = owned_mask(write_keys, n_buckets_global, n_shards, axis=axis)
+    wk = jnp.where(mine[..., None], write_keys, jnp.uint32(0))
+    res = ws.commit(local, wk, write_vals, active, sequential=sequential)
+    ovf = jax.lax.psum(res.overflow.astype(U32), axis) > 0
+    return ws.CommitResult(state=res.state, overflow=ovf)
+
+
+def sharded_digest(local: ws.HashState, *, axis: str = "model"
+                   ) -> jnp.ndarray:
+    """(2,) head of the sharded state: deterministic tree over the
+    all-gathered per-shard digests (identical on every rank)."""
+    per_shard = jax.lax.all_gather(ws.state_digest(local), axis)  # (M, 2)
+    return ws.shard_digest_tree(per_shard)
+
+
+# Host-side (single-device) shard views live in core.world_state (they
+# have no mesh dependence; kernels/hash_table/ops.py uses them without
+# importing launch/). Re-exported here because they are the single-device
+# analogue of this module's partition.
+split_table = ws.split_table
+merge_table = ws.merge_table
+shards_for_budget = ws.shards_for_budget

@@ -1,0 +1,121 @@
+"""Adversarial hash-join coverage: u32-prefix collision runs and misses.
+
+Regression for the silent-wrong-row bug: ``argmax`` over an all-False hit
+window used to select slot 0 and return an arbitrary store row, and a fixed
+8-wide probe window could not reach a match behind a longer run of equal
+``id[0]`` words (expected u32 birthday collisions at ~100k-tx rounds).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine, hashing, orderer, types, unmarshal
+
+
+def _join(queries, store):
+    return orderer.hash_join(
+        jnp.asarray(np.asarray(queries, np.uint32)),
+        jnp.asarray(np.asarray(store, np.uint32)),
+    )
+
+
+def test_miss_is_reported_not_slot_zero():
+    store = [[10, 1], [20, 2], [30, 3]]
+    j = _join([[99, 99]], store)
+    assert not bool(j.found[0])
+
+
+def test_long_equal_hi_run_beyond_old_window():
+    """>8 store ids share id[0]; every one of them must still be found."""
+    n = 32
+    store = np.stack(
+        [np.full(n, 0xDEAD, np.uint32), np.arange(n, dtype=np.uint32)],
+        axis=1,
+    )
+    j = _join(store, store)
+    assert bool(np.asarray(j.found).all())
+    np.testing.assert_array_equal(
+        np.asarray(store)[np.asarray(j.idx)], store
+    )
+    # A missing pair inside the same run is a miss, not a neighbor's row.
+    j2 = _join([[0xDEAD, n + 7]], store)
+    assert not bool(j2.found[0])
+
+
+def test_random_permutation_roundtrip():
+    rng = np.random.default_rng(0)
+    store = rng.integers(1, 1 << 32, (500, 2), dtype=np.uint32)
+    perm = rng.permutation(500)
+    j = _join(store[perm], store)
+    assert bool(np.asarray(j.found).all())
+    np.testing.assert_array_equal(np.asarray(j.idx), perm)
+    absent = store.copy()
+    absent[:, 1] ^= 0x80000000  # same hi words, different lo -> all misses
+    j2 = _join(absent, store)
+    assert not bool(np.asarray(j2.found).any())
+
+
+@pytest.mark.parametrize("n", [1, 2, 7, 256])
+def test_lex_searchsorted_matches_numpy_u64_oracle(n):
+    rng = np.random.default_rng(n)
+    s = rng.integers(0, max(n // 2, 2), size=(n, 2)).astype(np.uint32)
+    order = np.lexsort((s[:, 1], s[:, 0]))
+    sh, sl = s[order, 0], s[order, 1]
+    q = rng.integers(0, max(n // 2, 2) + 3, size=(64, 2)).astype(np.uint32)
+    got = np.asarray(
+        hashing.lex_searchsorted(
+            jnp.asarray(sh), jnp.asarray(sl),
+            jnp.asarray(q[:, 0]), jnp.asarray(q[:, 1]),
+        )
+    )
+    want = np.searchsorted(
+        sh.astype(np.uint64) << 32 | sl,
+        q[:, 0].astype(np.uint64) << 32 | q[:, 1],
+        side="left",
+    )
+    np.testing.assert_array_equal(got, want)
+
+
+def test_order_batch_poisons_unjoinable_rows(monkeypatch):
+    """A reassembly miss surfaces as a checksum-invalid tx, never as a
+    silently wrong payload in the block."""
+    dims = types.TEST_DIMS
+    eng = engine.FabricEngine(engine.EngineConfig(dims=dims,
+                                                  store_blocks=False))
+    props = eng.make_proposals(100, seed=0)
+    from repro.core import endorser
+    txb = endorser.execute_and_endorse(eng.endorser_state, props, dims)
+    wire = unmarshal.marshal(txb, dims)
+    cfg = orderer.OrdererConfig(block_size=50)
+
+    blocks = orderer.order_batch(
+        wire, txb.tx_id, txb.client, jnp.zeros((2,), jnp.uint32), cfg
+    )
+    assert bool(np.asarray(blocks.join_ok).all())
+    assert bool(unmarshal.unmarshal(
+        jnp.asarray(np.asarray(blocks.wire).reshape(100, -1)), dims
+    ).checksum_ok.all())
+
+    # Inject a local-store miss (an ordered ID whose payload never arrived
+    # — unreachable through the API since IDs and payloads share a tensor,
+    # so simulate the delivery failure at the join itself).
+    real = orderer.hash_join
+
+    def missing_17(query_ids, store_ids):
+        j = real(query_ids, store_ids)
+        drop = jnp.arange(query_ids.shape[0]) != 17
+        return orderer.JoinResult(j.idx, j.found & drop)
+
+    monkeypatch.setattr(orderer, "hash_join", missing_17)
+    blocks2 = orderer.order_batch(
+        wire, txb.tx_id, txb.client, jnp.zeros((2,), jnp.uint32), cfg
+    )
+    join_ok = np.asarray(blocks2.join_ok)
+    assert join_ok.sum() == 99 and not join_ok[17]
+    # The poisoned slot fails the syntactic checksum downstream — exactly
+    # the missed slot, nothing else.
+    dec = unmarshal.unmarshal(
+        jnp.asarray(np.asarray(blocks2.wire).reshape(100, -1)), dims
+    )
+    np.testing.assert_array_equal(np.asarray(dec.checksum_ok), join_ok)

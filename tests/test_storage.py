@@ -266,6 +266,22 @@ def test_engine_recovery_detects_snapshot_tamper():
     eng.store.close()
 
 
+def test_verify_after_snapshot_list_loss_reports_false_not_crash():
+    """Regression: a pruned chain whose covering snapshot is gone (pruned
+    list, reloaded dir) used to raise StopIteration out of verify()."""
+    eng = _engine(snapshot_every_blocks=3)  # prune_chain defaults True
+    for i in range(3):
+        eng.run_round(eng.make_proposals(150, seed=70 + i))
+    eng.store.drain()
+    assert eng.store.base_block_no >= 0  # prefix was compacted
+    eng.snapshots.clear()  # simulate snapshot loss
+    out = eng.verify()  # must not raise
+    assert out["chain_ok"] is False
+    assert out["replay_ok"] is False
+    assert out["recovery_ok"] is False  # journal pruned, no snapshot
+    eng.store.close()
+
+
 def test_recovery_refuses_overpruned_journal():
     eng = _engine(snapshot_every_blocks=4, prune_chain=False)
     for i in range(2):
@@ -336,6 +352,48 @@ def test_blockstore_drain_surfaces_journal_error():
     store.submit(bno, prev, bh, wire, valid)
     with pytest.raises(RuntimeError, match="journal sink failed"):
         store.drain()
+
+
+def test_blockstore_writer_failure_fail_stop_and_err_cleared(tmp_path):
+    """Regression for error latching: one writer failure used to re-raise
+    from every later drain()/close() forever, while blocks kept flowing
+    into the chain past the failed journal append (silent divergence)."""
+
+    class FlakyJournal:
+        def __init__(self):
+            self.blocks = []
+
+        def append_block(self, bno, wire, valid):
+            if bno == 1:
+                raise RuntimeError("disk full")
+            self.blocks.append(bno)
+
+    j = FlakyJournal()
+    store = ledger.BlockStore(spill_dir=str(tmp_path), journal=j)
+    blocks = _chain_blocks(4)
+    for bno, prev, bh, wire, valid in blocks[:3]:
+        store.submit(bno, prev, bh, wire, valid)
+    with pytest.raises(RuntimeError, match="disk full"):
+        store.drain()
+    # Fail-stop: neither the failed block nor anything behind it was
+    # appended anywhere — chain, journal, AND the spill directory agree
+    # on the tail (the failed block's .npz is unlinked, not orphaned).
+    assert [sb.block_no for sb in store.chain] == [0]
+    assert j.blocks == [0]
+    assert sorted(p.name for p in tmp_path.iterdir()) == [
+        "block_00000000.npz"
+    ]
+    # The error is surfaced exactly once, then cleared.
+    store.drain()  # no raise
+    # The store is usable again; the dropped gap is detectable, never
+    # silent: resuming leaves a hole that fails chain verification.
+    bno, prev, bh, wire, valid = blocks[3]
+    store.submit(bno, prev, bh, wire, valid)
+    store.drain()
+    assert [sb.block_no for sb in store.chain] == [0, 3]
+    assert j.blocks == [0, 3]
+    assert not store.verify_chain()
+    store.close()
 
 
 # ----------------------------------------------------------------- benchmark
