@@ -37,6 +37,30 @@ def print_csv() -> None:
         print(",".join(str(r.get(c, "")) for c in cols))
 
 
+def dump_json(path: str) -> None:
+    """Write the collected rows as JSON (CI uploads these as artifacts so
+    the per-PR perf trajectory is tracked)."""
+    import json
+    import os
+
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+
+    def clean(v):
+        if isinstance(v, (np.integer,)):
+            return int(v)
+        if isinstance(v, (np.floating,)):
+            return float(v)
+        if isinstance(v, (np.bool_,)):
+            return bool(v)
+        return v
+
+    with open(path, "w") as f:
+        json.dump([{k: clean(v) for k, v in r.items()} for r in ROWS],
+                  f, indent=1)
+
+
 def make_endorsed_wire(dims: types.FabricDims, n: int, *, seed: int = 0,
                        state=None):
     """N endorsed transfer txs, marshaled. Returns (wire, tx_ids, clients)."""

@@ -1,0 +1,161 @@
+"""Fig 11 (beyond-paper) — device-side block pipeline scaling.
+
+FastFabric's P-II peer keeps many blocks in flight; the mesh step's
+``pipeline_depth`` (repro/pipeline) takes a window of D blocks per
+invocation, batching the consensus all-gather and the routed cross-shard
+MVCC read-version gather to ONE collective each per window instead of one
+per block, while commits still apply in block order (byte-identical to the
+depth-1 oracle).
+
+Measured per depth D in {1, 2, 4, 8} on replicated and sharded state:
+  * ``repl/d=..`` / ``shard/d=..`` — TPS over a D-block window (depth 1
+    commits the same blocks through D sequential step invocations);
+  * ``coll_per_block`` / ``allreduce_per_block`` / ``allgather_per_block``
+    — collective-instruction counts per block, read from the compiled
+    dry-run HLO with trip counts multiplied out (launch/hlo_cost, the same
+    analyzer roofline.py consumes). The sharded path must show the routed
+    gather amortizing: one all-reduce per *window*, not per block;
+plus an equivalence row: the deepest pipelined config must be
+byte-identical to the depth-1 oracle on validity bits, log/ledger/journal
+heads, and state arrays.
+
+Run with spare host devices to see real routed collectives, e.g.:
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      PYTHONPATH=src python -m benchmarks.fig11_pipeline
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import endorser, engine, types, unmarshal
+from repro.launch import fabric_step as fs
+from repro.launch import hlo_cost
+
+
+def _window_inputs(dims: types.FabricDims, depth: int, b_round: int,
+                   seed: int = 0):
+    """A window of ``depth`` blocks of ``b_round`` endorsed transfers each,
+    endorsed against a shared replica so later blocks are consistent."""
+    eng = engine.FabricEngine(engine.EngineConfig(dims=dims,
+                                                  store_blocks=False))
+    wires, idss = [], []
+    for k in range(depth):
+        props = eng.make_proposals(b_round, seed=seed + 7 * k)
+        txb = endorser.execute_and_endorse(eng.endorser_state, props, dims)
+        wires.append(unmarshal.marshal(txb, dims))
+        idss.append(txb.tx_id)
+    return jnp.stack(wires), jnp.stack(idss)  # (D, B, WB), (D, B, 2)
+
+
+def _coll_counts(jstep, state, wire, ids) -> dict:
+    """Collective-instruction counts of the compiled step (trip-count
+    corrected, so collectives inside scans are multiplied out). Lowering
+    through the same jit wrapper the timing loop uses, so each depth
+    compiles exactly once."""
+    hlo = jstep.lower(state, wire, ids).compile().as_text()
+    colls = hlo_cost.analyze(hlo)["collectives"]
+    return {op: v["count"] for op, v in colls.items()}
+
+
+def _run_depth(dims, mesh, label: str, cfg, depth: int, b_round: int,
+               n_buckets: int, iters: int):
+    wire, ids = _window_inputs(dims, depth, b_round)
+    state = fs.create_mesh_state(1, dims, n_buckets=n_buckets)
+    dcfg = dataclasses.replace(cfg, pipeline_depth=depth)
+    jstep = jax.jit(fs.make_fabric_step(dims, dcfg, mesh))
+    if depth == 1:
+        def run():
+            # Chain the state block-to-block: this is the real sequential
+            # depth-1 path (unchained invocations would be data-independent
+            # and async dispatch could overlap them, flattering the
+            # baseline the pipeline is measured against).
+            st, outs = state, []
+            for k in range(wire.shape[0]):
+                st, v = jstep(st, wire[k][None], ids[k][None])
+                outs.append(v)
+            return st, outs
+
+        colls = _coll_counts(jstep, state, wire[0][None], ids[0][None])
+        n_blocks_compiled = 1
+    else:
+        def run():
+            return jstep(state, wire[None], ids[None])
+
+        colls = _coll_counts(jstep, state, wire[None], ids[None])
+        n_blocks_compiled = depth
+    t = common.timed(run, iters=iters)
+    total = sum(colls.values())
+    common.row(
+        "fig11", f"{label}/d={depth}",
+        tps=depth * b_round / t, window_ms=1e3 * t,
+        coll_per_block=total / n_blocks_compiled,
+        allreduce_per_block=colls.get("all-reduce", 0) / n_blocks_compiled,
+        allgather_per_block=colls.get("all-gather", 0) / n_blocks_compiled,
+    )
+
+
+def _check_equivalence(dims, mesh, cfg, depth: int, b_round: int,
+                       n_buckets: int, label: str) -> None:
+    """Acceptance: pipelined == D sequential depth-1 invocations, byte for
+    byte (validity bits, log/ledger/journal heads, block_no, state)."""
+    wire, ids = _window_inputs(dims, depth, b_round, seed=3)
+    st1 = fs.create_mesh_state(1, dims, n_buckets=n_buckets)
+    step1 = jax.jit(fs.make_fabric_step(
+        dims, dataclasses.replace(cfg, pipeline_depth=1), mesh))
+    valids = []
+    for k in range(depth):
+        st1, v = step1(st1, wire[k][None], ids[k][None])
+        valids.append(np.asarray(v)[0])
+    std = fs.create_mesh_state(1, dims, n_buckets=n_buckets)
+    stepd = jax.jit(fs.make_fabric_step(
+        dims, dataclasses.replace(cfg, pipeline_depth=depth), mesh))
+    std, vd = stepd(std, wire[None], ids[None])
+    same = np.array_equal(np.stack(valids), np.asarray(vd)[0]) and all(
+        np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(st1, std)
+    )
+    assert same, f"pipelined {label} d={depth} diverged from depth-1 oracle"
+    common.row("fig11", f"equivalence/{label}/d={depth}", identical=same)
+
+
+def run(depths: list[int], b_round: int, n_buckets: int, iters: int) -> None:
+    dims = types.TEST_DIMS
+    n_dev = len(jax.devices())
+    m = 1 << (n_dev.bit_length() - 1)  # largest power of two <= n_dev
+    while b_round % m or n_buckets % m:
+        m //= 2
+    mesh = jax.make_mesh((1, m), ("data", "model"))
+    common.row("fig11", "mesh", model_ranks=m, b_round=b_round)
+
+    for label, cfg in (("repl", fs.FASTFABRIC_STEP),
+                       ("shard", fs.FASTFABRIC_SHARDED_STEP)):
+        for d in depths:
+            _run_depth(dims, mesh, label, cfg, d, b_round, n_buckets, iters)
+        _check_equivalence(dims, mesh, cfg, max(depths), b_round, n_buckets,
+                           label)
+
+
+def main(argv: list[str] | None = None) -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--depths", type=int, nargs="+", default=[1, 2, 4, 8])
+    p.add_argument("--b-round", type=int, default=128)
+    p.add_argument("--n-buckets", type=int, default=1 << 12)
+    p.add_argument("--iters", type=int, default=3)
+    p.add_argument("--json", default=None,
+                   help="write the result rows as JSON to this path")
+    args = p.parse_args(argv)
+    run(args.depths, args.b_round, args.n_buckets, args.iters)
+    if args.json:
+        common.dump_json(args.json)
+
+
+if __name__ == "__main__":
+    main()
+    common.print_csv()

@@ -16,6 +16,7 @@ import numpy as np
 
 from benchmarks import common
 from repro.core import committer, types
+from repro.launch import hlo_cost
 
 DIMS = types.PAPER_DIMS
 BS = 100
@@ -50,17 +51,19 @@ def _compiled_flops(pcfg, wire) -> float:
         low = jax.jit(
             lambda s, w: committer.commit_block_fused(s, w, DIMS, pcfg)
         ).lower(state, wire)
-        total += low.compile().cost_analysis().get("flops", 0.0)
+        total += hlo_cost.cost_dict(low.compile()).get("flops", 0.0)
     else:
         for lowered in (
             jax.jit(lambda w: committer.stage_syntax(w, DIMS)).lower(wire),
             jax.jit(lambda w: committer.stage_endorse(
                 w, DIMS, pcfg.parallel, pcfg.tx_par)).lower(wire),
             jax.jit(lambda s, w, a, b: committer.stage_mvcc_commit(
-                s, w, a, b, DIMS, pcfg.hash_state, pcfg.sequential_commit)
+                s, w, a, b, DIMS, pcfg.hash_state, pcfg.sequential_commit,
+                pcfg.journal)
             ).lower(state, wire, ok, ok),
         ):
-            total += lowered.compile().cost_analysis().get("flops", 0.0)
+            total += hlo_cost.cost_dict(
+                lowered.compile()).get("flops", 0.0)
     return total
 
 

@@ -1,9 +1,11 @@
 """Benchmark suite entrypoint — one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--only fig4,table1]
+    PYTHONPATH=src python -m benchmarks.run [--only fig4,table1] \
+        [--json out/bench.json]
 
-Prints per-benchmark rows as they complete and a final CSV. The roofline
-section summarizes the dry-run artifacts if present (run
+Prints per-benchmark rows as they complete and a final CSV (optionally a
+JSON dump — CI uploads it as an artifact to track the perf trajectory per
+PR). The roofline section summarizes the dry-run artifacts if present (run
 ``python -m repro.launch.dryrun --all --fabric`` first to regenerate).
 """
 
@@ -14,13 +16,16 @@ import time
 
 from benchmarks import common
 
-ALL = ("fig3", "fig4", "fig5_6", "fig7", "fig8", "table1", "roofline")
+ALL = ("fig3", "fig4", "fig5_6", "fig7", "fig8", "fig9", "fig10", "fig11",
+       "table1", "roofline")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of: " + ",".join(ALL))
+    ap.add_argument("--json", default=None,
+                    help="write all result rows as JSON to this path")
     args = ap.parse_args()
     which = args.only.split(",") if args.only else list(ALL)
 
@@ -45,6 +50,18 @@ def main() -> None:
         from benchmarks import fig8_blocksize
         print("== Fig 8: block size scan ==")
         fig8_blocksize.run()
+    if "fig9" in which:
+        from benchmarks import fig9_recovery
+        print("== Fig 9: crash recovery (replay vs snapshot+journal) ==")
+        fig9_recovery.main([])
+    if "fig10" in which:
+        from benchmarks import fig10_state_scaling
+        print("== Fig 10: model-axis sharded world state ==")
+        fig10_state_scaling.main([])
+    if "fig11" in which:
+        from benchmarks import fig11_pipeline
+        print("== Fig 11: device-side block pipeline ==")
+        fig11_pipeline.main([])
     if "table1" in which:
         from benchmarks import table1_endtoend
         print("== Table I: end-to-end ==")
@@ -59,6 +76,9 @@ def main() -> None:
 
     print(f"\n== CSV ({time.time() - t0:.0f}s total) ==")
     common.print_csv()
+    if args.json:
+        common.dump_json(args.json)
+        print(f"rows written to {args.json}")
 
 
 if __name__ == "__main__":

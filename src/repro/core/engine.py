@@ -88,7 +88,13 @@ class FabricEngine:
     collapsed onto one device; role separation is preserved logically and
     exercised at scale by the mesh-role dry-run)."""
 
-    def __init__(self, cfg: EngineConfig):
+    def __init__(self, cfg: EngineConfig, *, window_committer=None):
+        if window_committer is not None and cfg.snapshot_every_blocks:
+            raise ValueError(
+                "snapshot_every_blocks is not supported with a window "
+                "committer: snapshots cover the single-host peer state, "
+                "which a mesh-backed committer owns instead"
+            )
         if cfg.snapshot_every_blocks and not (
             cfg.store_blocks and cfg.peer.journal and cfg.peer.hash_state
         ):
@@ -99,6 +105,12 @@ class FabricEngine:
                 "the journal the storage role materializes"
             )
         self.cfg = cfg
+        # Optional device-side block pipeline: an adapter (see
+        # repro/pipeline/engine_bridge.MeshWindowCommitter) that commits a
+        # WINDOW of pipeline-depth blocks per mesh-step invocation instead
+        # of one block per commit_block call. The engine still orders the
+        # round and ships every retired block to the storage role.
+        self.window_committer = window_committer
         self.peer_state = committer.create_peer_state(
             cfg.dims, n_buckets=cfg.n_buckets, slots=cfg.slots
         )
@@ -178,30 +190,38 @@ class FabricEngine:
         )
         self.log_head = blocks.log_head
 
-        # Commit block by block; up to pipeline_depth blocks in flight
-        # (JAX async dispatch = the paper's block-shepherd goroutines).
-        # Note: commits donate the previous peer state, so anything a block
-        # needs after retirement (its number, the pre-commit head) is carried
-        # host-side / copied — the in-flight tuple never references donated
-        # buffers.
-        in_flight = []
-        retired = []
-        for b in range(blocks.wire.shape[0]):
-            bno = int(self._next_block_no)
-            self._next_block_no += 1
-            prev_head = jnp.array(self.peer_state.ledger_head, copy=True)
-            res = committer.commit_block(
-                self.peer_state, blocks.wire[b], cfg.dims, cfg.peer
-            )
-            self.peer_state = res.state
-            in_flight.append((blocks.wire[b], bno, prev_head, res.block_hash,
-                              res.valid))
-            if len(in_flight) >= max(cfg.peer.pipeline_depth, 1):
+        if self.window_committer is not None:
+            # Device-side block pipeline: hand the mesh step a window of
+            # blocks per invocation (depth blocks in flight ON device,
+            # batched consensus + MVCC gathers) instead of per-block
+            # dispatch.
+            retired = self._commit_windows(blocks)
+            self.window_committer.block_until_ready()
+        else:
+            # Commit block by block; up to pipeline_depth blocks in flight
+            # (JAX async dispatch = the paper's block-shepherd goroutines).
+            # Note: commits donate the previous peer state, so anything a
+            # block needs after retirement (its number, the pre-commit
+            # head) is carried host-side / copied — the in-flight tuple
+            # never references donated buffers.
+            in_flight = []
+            retired = []
+            for b in range(blocks.wire.shape[0]):
+                bno = int(self._next_block_no)
+                self._next_block_no += 1
+                prev_head = jnp.array(self.peer_state.ledger_head, copy=True)
+                res = committer.commit_block(
+                    self.peer_state, blocks.wire[b], cfg.dims, cfg.peer
+                )
+                self.peer_state = res.state
+                in_flight.append((blocks.wire[b], bno, prev_head,
+                                  res.block_hash, res.valid))
+                if len(in_flight) >= max(cfg.peer.pipeline_depth, 1):
+                    retired.append(self._ship(*in_flight.pop(0)))
+            while in_flight:
                 retired.append(self._ship(*in_flight.pop(0)))
-        while in_flight:
-            retired.append(self._ship(*in_flight.pop(0)))
 
-        jax.block_until_ready(self.peer_state.ledger_head)
+            jax.block_until_ready(self.peer_state.ledger_head)
         wall = time.perf_counter() - t0
 
         # Post-window: endorser-cluster replica updates (their hardware).
@@ -220,6 +240,26 @@ class FabricEngine:
             n_txs=n, n_blocks=blocks.wire.shape[0], n_valid=n_valid,
             wall_s=wall,
         )
+
+    def _commit_windows(self, blocks) -> list:
+        """Slice the ordered round into pipeline-depth windows and hand
+        each to the window committer; ship every block to the store with
+        the committer's chain hashes. A round tail shorter than the depth
+        becomes one shallower window (compiled once, reused)."""
+        wc = self.window_committer
+        retired = []
+        n_blocks = blocks.wire.shape[0]
+        for lo in range(0, n_blocks, wc.depth):
+            hi = min(lo + wc.depth, n_blocks)
+            res = wc.commit_window(blocks.wire[lo:hi], blocks.tx_ids[lo:hi])
+            for k in range(hi - lo):
+                bno = int(self._next_block_no)
+                self._next_block_no += 1
+                retired.append(self._ship(
+                    blocks.wire[lo + k], bno, res.prev_hash[k],
+                    res.block_hash[k], res.valid[k],
+                ))
+        return retired
 
     def _ship(self, wire_b, bno: int, prev_head, block_hash, valid):
         """Block leaves the pipeline: async handoff to the storage role."""
@@ -273,6 +313,18 @@ class FabricEngine:
 
     # -- durability checks (used by tests/examples) ----------------------------
 
+    def _peer_digest(self) -> np.ndarray:
+        """Digest of the committed world state — from the mesh-backed
+        window committer when one is attached, else the peer state."""
+        if self.window_committer is not None:
+            return self.window_committer.state_digest()
+        return np.asarray(ws.state_digest(self.peer_state.hash_state))
+
+    def _peer_journal_head(self) -> np.ndarray:
+        if self.window_committer is not None:
+            return self.window_committer.journal_head
+        return np.asarray(self.peer_state.journal_head)
+
     def verify(self) -> dict:
         """Drain storage, verify the chain, check replica consistency, and
         prove the recovery path reproduces the live peer."""
@@ -310,24 +362,16 @@ class FabricEngine:
                 out["replay_ok"] = bool(
                     np.array_equal(
                         np.asarray(ws.state_digest(replayed)),
-                        np.asarray(
-                            ws.state_digest(self.peer_state.hash_state)
-                        ),
+                        self._peer_digest(),
                     )
                 ) if self.cfg.peer.hash_state else True
         if self.journal is not None and self.cfg.peer.hash_state:
             try:
                 rec = self.recover()
                 out["recovery_ok"] = bool(
-                    np.array_equal(
-                        rec.state_digest,
-                        np.asarray(
-                            ws.state_digest(self.peer_state.hash_state)
-                        ),
-                    )
+                    np.array_equal(rec.state_digest, self._peer_digest())
                     and np.array_equal(
-                        rec.journal_head,
-                        np.asarray(self.peer_state.journal_head),
+                        rec.journal_head, self._peer_journal_head()
                     )
                 )
             except recovery.RecoveryError:
@@ -336,7 +380,7 @@ class FabricEngine:
             out["replica_ok"] = bool(
                 np.array_equal(
                     np.asarray(ws.state_digest(self.endorser_state)),
-                    np.asarray(ws.state_digest(self.peer_state.hash_state)),
+                    self._peer_digest(),
                 )
             )
         return out

@@ -163,6 +163,26 @@ class BlockStore:
         self._q.join()
         self._surface_err()
 
+    def resume(self) -> int:
+        """Supervised restart after a writer failure.
+
+        The writer fail-stops on the first sink error: the failed block and
+        everything submitted behind it are dropped (never silently
+        appended). ``resume`` reopens the store from the last durably
+        stored block: it waits for the writer to finish discarding the
+        in-flight suffix, clears the latched error, and returns the next
+        block number expected. The supervisor resubmits the dropped suffix
+        from there and the chain continues gap-free — instead of relying
+        on ``verify_chain`` to flag the hole after the fact. Safe to call
+        with no failure latched (it is then just "where do I resume
+        from"). The error is NOT surfaced: resuming is the handled-error
+        path.
+        """
+        self._q.join()
+        self._err = None
+        last = self.chain[-1].block_no if self.chain else self.base_block_no
+        return last + 1
+
     # --- Compaction (snapshot-covered prefix) ----------------------------
 
     def prune_upto(self, block_no: int) -> int:

@@ -65,13 +65,16 @@ def validate(
     *,
     checksum_ok: jnp.ndarray | None = None,
     endorse_ok: jnp.ndarray | None = None,
+    conflict: jnp.ndarray | None = None,
 ) -> MvccResult:
     """Full MVCC validation of one block.
 
     ``current_versions``: (B, RK) committed version of each read key (0 if
     absent), from a world-state lookup. ``checksum_ok``/``endorse_ok`` fold
     the earlier pipeline stages' flags into validity (invalid txs stay in the
-    block, flagged — Fabric semantics).
+    block, flagged — Fabric semantics). ``conflict``: optional precomputed
+    ``conflict_matrix(txb)`` — the block pipeline's prepare stage computes
+    it one step ahead of the commit stage (repro/pipeline/schedule.py).
     """
     active_read = txb.read_keys[..., 0] != hashing.EMPTY_KEY
     vers_ok = jnp.where(
@@ -83,7 +86,7 @@ def validate(
     if endorse_ok is not None:
         ok0 = ok0 & endorse_ok
 
-    conf = conflict_matrix(txb)  # (B, B)
+    conf = conflict_matrix(txb) if conflict is None else conflict  # (B, B)
     bsz = txb.batch
 
     def step(valid_so_far, i):

@@ -15,6 +15,8 @@ partition the mesh ``model`` axis uses in launch/fabric_step.py.
 
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
@@ -72,47 +74,74 @@ def commit(tkeys, tvers, tvals, wkeys, wvals, active,
 
 
 # ---------------------------------------------------------------------------
-# Sharded dispatch: one kernel invocation per bucket shard, each slice
-# within the VMEM budget. Results/writes are routed by owner shard.
+# Sharded dispatch: one jitted lax.scan over the bucket shards, each slice
+# within the VMEM budget (ROADMAP "pipeline slice loads with probes": XLA
+# overlaps the next slice's load with the current probe, and the whole
+# sharded sweep is ONE compiled program instead of n_shards separate
+# dispatches). Results/writes are routed by owner shard.
 # ---------------------------------------------------------------------------
 
 
-def _sharded_lookup(tkeys, tvers, tvals, queries, n_shards: int):
+@functools.partial(jax.jit, static_argnames=("n_shards", "interpret"))
+def _sharded_lookup_scan(tkeys, tvers, tvals, queries, n_shards: int,
+                         interpret: bool):
     nb = tkeys.shape[0]
     sk, sv, sva = ws.split_table(tkeys, tvers, tvals, n_shards)
     owner = ws.shard_of(nb, n_shards, queries)  # (Q,)
     q = queries.shape[0]
     vw = tvals.shape[2]
-    found = jnp.zeros((q,), bool)
-    vers = jnp.zeros((q,), jnp.uint32)
-    vals = jnp.zeros((q, vw), jnp.uint32)
-    for m in range(n_shards):
-        f, ver, val = kernel.lookup(
-            sk[m], sv[m], sva[m], queries, interpret=not _on_tpu()
-        )
+
+    def body(carry, xs):
+        found, vers, vals = carry
+        m, k, v, va = xs
+        f, ver, val = kernel.lookup(k, v, va, queries, interpret=interpret)
         mine = owner == m
-        found = jnp.where(mine, f, found)
-        vers = jnp.where(mine, ver, vers)
-        vals = jnp.where(mine[:, None], val, vals)
+        return (
+            jnp.where(mine, f, found),
+            jnp.where(mine, ver, vers),
+            jnp.where(mine[:, None], val, vals),
+        ), None
+
+    init = (
+        jnp.zeros((q,), bool),
+        jnp.zeros((q,), jnp.uint32),
+        jnp.zeros((q, vw), jnp.uint32),
+    )
+    (found, vers, vals), _ = jax.lax.scan(
+        body, init, (jnp.arange(n_shards), sk, sv, sva)
+    )
     return found, vers, vals
 
 
-def _sharded_commit(tkeys, tvers, tvals, wkeys, wvals, active, n_shards: int):
+def _sharded_lookup(tkeys, tvers, tvals, queries, n_shards: int):
+    return _sharded_lookup_scan(
+        tkeys, tvers, tvals, queries, n_shards, not _on_tpu()
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("n_shards", "interpret"))
+def _sharded_commit_scan(tkeys, tvers, tvals, wkeys, wvals, active,
+                         n_shards: int, interpret: bool):
     nb = tkeys.shape[0]
     sk, sv, sva = ws.split_table(tkeys, tvers, tvals, n_shards)
     owner = ws.shard_of(nb, n_shards, wkeys)  # (K,)
-    ovf = jnp.asarray(False)
-    ks, vs, vls = [], [], []
-    for m in range(n_shards):
-        k, v, vl, o = kernel.commit(
-            sk[m], sv[m], sva[m], wkeys, wvals, active & (owner == m),
-            interpret=not _on_tpu(),
+
+    def body(ovf, xs):
+        m, k, v, va = xs
+        k2, v2, va2, o = kernel.commit(
+            k, v, va, wkeys, wvals, active & (owner == m),
+            interpret=interpret,
         )
-        ks.append(k)
-        vs.append(v)
-        vls.append(vl)
-        ovf = ovf | o
-    okeys, overs, ovals = ws.merge_table(
-        jnp.stack(ks), jnp.stack(vs), jnp.stack(vls)
+        return ovf | o, (k2, v2, va2)
+
+    ovf, (ks, vs, vls) = jax.lax.scan(
+        body, jnp.asarray(False), (jnp.arange(n_shards), sk, sv, sva)
     )
+    okeys, overs, ovals = ws.merge_table(ks, vs, vls)
     return okeys, overs, ovals, ovf
+
+
+def _sharded_commit(tkeys, tvers, tvals, wkeys, wvals, active, n_shards: int):
+    return _sharded_commit_scan(
+        tkeys, tvers, tvals, wkeys, wvals, active, n_shards, not _on_tpu()
+    )

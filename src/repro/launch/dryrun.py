@@ -282,7 +282,7 @@ def run_cell(arch: str, shape: shp.ShapeSpec, mesh_name: str,
             compiled = lowered.compile()
             t_compile = time.time() - t0 - t_lower
             mem = compiled.memory_analysis()
-            cost = compiled.cost_analysis()
+            cost = _cost_dict(compiled)
             hlo_text = compiled.as_text()
             coll = parse_collectives(hlo_text)
             tc_cost = hlo_cost.analyze(hlo_text)  # trip-count-corrected
@@ -324,6 +324,10 @@ def run_cell(arch: str, shape: shp.ShapeSpec, mesh_name: str,
     return rec
 
 
+def _cost_dict(compiled) -> dict:
+    return hlo_cost.cost_dict(compiled)
+
+
 def _save_hlo(json_path: str, hlo_text: str) -> None:
     import gzip
 
@@ -343,11 +347,14 @@ def run_fabric_cell(variant: str, mesh_name: str, out_dir: str,
     """Dry-run the paper's own workload: the sharded fabric step.
 
     ``variant``: "fastfabric" (O-I+O-II+vectorized commit), "fabric-v12"
-    (full-payload consensus, serial admission + commit), or
+    (full-payload consensus, serial admission + commit),
     "fastfabric-sharded" (world state bucket-partitioned over the `model`
-    axis — launch/state_sharding). PAPER_DIMS = 2.9 KB transactions, one
-    channel per data rank, one orderer-replica / validation worker per
-    model rank, 100 txs/worker/round.
+    axis — launch/state_sharding), or "fastfabric-pipelined" (sharded
+    state + the depth-8 device-side block pipeline of repro/pipeline: one
+    consensus gather and one routed MVCC gather per 8-block window).
+    PAPER_DIMS = 2.9 KB transactions, one channel per data rank, one
+    orderer-replica / validation worker per model rank, 100
+    txs/worker/round (per block for the pipelined variant).
     """
     from repro.core import types as ftypes  # noqa: PLC0415
     from repro.launch import fabric_step as fs  # noqa: PLC0415
@@ -362,6 +369,7 @@ def run_fabric_cell(variant: str, mesh_name: str, out_dir: str,
         "fastfabric": fs.FASTFABRIC_STEP,
         "fabric-v12": fs.FABRIC_V12_STEP,
         "fastfabric-sharded": fs.FASTFABRIC_SHARDED_STEP,
+        "fastfabric-pipelined": fs.FASTFABRIC_PIPELINED_STEP,
     }[variant]
     t0 = time.time()
     try:
@@ -371,19 +379,22 @@ def run_fabric_cell(variant: str, mesh_name: str, out_dir: str,
             state_shape = jax.eval_shape(
                 lambda: fs.create_mesh_state(n_ch, dims)
             )
-            wire_s, ids_s = fs.input_specs(mesh, dims, b_loc=b_loc)
+            wire_s, ids_s = fs.input_specs(
+                mesh, dims, b_loc=b_loc,
+                pipeline_depth=cfg.pipeline_depth,
+            )
             fn = jax.jit(step, donate_argnums=(0,))
             lowered = fn.lower(state_shape, wire_s, ids_s)
             t_lower = time.time() - t0
             compiled = lowered.compile()
             t_compile = time.time() - t0 - t_lower
             mem = compiled.memory_analysis()
-            cost = compiled.cost_analysis()
+            cost = _cost_dict(compiled)
             hlo_text = compiled.as_text()
             coll = parse_collectives(hlo_text)
             tc_cost = hlo_cost.analyze(hlo_text)
             _save_hlo(path, hlo_text)
-        txs = n_ch * b_loc * mesh.shape["model"]
+        txs = n_ch * b_loc * mesh.shape["model"] * cfg.pipeline_depth
         rec = {
             "arch": variant, "shape": "step", "step": "fabric",
             "mesh": mesh_name, "n_devices": mesh.size, "status": "ok",
@@ -435,7 +446,8 @@ def main() -> None:
         )
     variant = OPTIMIZED_VARIANT if args.optimized else None
 
-    fabric_variants = ("fastfabric", "fabric-v12", "fastfabric-sharded")
+    fabric_variants = ("fastfabric", "fabric-v12", "fastfabric-sharded",
+                       "fastfabric-pipelined")
     if args.fabric or (args.arch in fabric_variants):
         variants = ([args.arch] if args.arch in fabric_variants
                     else list(fabric_variants))

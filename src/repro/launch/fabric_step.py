@@ -25,12 +25,19 @@ cluster. Per step and channel:
 The collective-byte asymmetry (payload vs structure bytes over the
 ``model`` axis) is the paper's Opt O-I, visible directly in the dry-run
 HLO — benchmarks/fabric_roofline.py reads it out.
+
+With ``FabricStepConfig.pipeline_depth > 1`` the step takes a WINDOW of D
+blocks per invocation and software-pipelines them through the stages
+(repro/pipeline/schedule.py): one consensus all-gather and one routed MVCC
+read-version gather per window instead of one per block, with commits
+still applied in block order. Depth 1 is this module's single-block body
+below — the byte-identical oracle the pipelined path is pinned against
+(tests/test_pipeline.py).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import NamedTuple
 
 import jax
@@ -45,9 +52,10 @@ except AttributeError:  # jax 0.4.x/0.5.x: experimental, kwarg is `check_rep`
 
     _SHARD_MAP_NO_CHECK = {"check_rep": False}
 
-from repro.core import crypto, hashing, mvcc, orderer, types, unmarshal
+from repro.core import orderer, types, unmarshal
 from repro.core import world_state as ws
 from repro.launch import state_sharding
+from repro.pipeline import stages
 
 U32 = jnp.uint32
 
@@ -60,6 +68,8 @@ class FabricMeshState(NamedTuple):
     values: jnp.ndarray  # (C, NB, S, VW)
     log_head: jnp.ndarray  # (C, 2)
     ledger_head: jnp.ndarray  # (C, 2)
+    journal_head: jnp.ndarray  # (C, 2) — state-journal digest chain
+    block_no: jnp.ndarray  # (C,) — next block number (journal chain input)
 
 
 def create_mesh_state(n_channels: int, dims: types.FabricDims,
@@ -72,6 +82,8 @@ def create_mesh_state(n_channels: int, dims: types.FabricDims,
         values=z(n_channels, n_buckets, slots, dims.vw),
         log_head=z(n_channels, 2),
         ledger_head=z(n_channels, 2),
+        journal_head=z(n_channels, 2),
+        block_no=z(n_channels),
     )
 
 
@@ -86,74 +98,48 @@ def state_specs(mesh, *, shard_state: bool = False) -> FabricMeshState:
     st = s if shard_state else c
     return FabricMeshState(
         keys=st(3), versions=st(2), values=st(3), log_head=c(1),
-        ledger_head=c(1),
-    )
-
-
-def _fold_log(head, digests):
-    """Chain per-row digests into the consensus log head (C-free, (2,))."""
-    def fold(h, d):
-        return jnp.stack(
-            [hashing.combine(h[0], d), hashing.combine(h[1], d)]
-        ), None
-
-    head, _ = jax.lax.scan(fold, head, digests)
-    return head
-
-
-def _fold_log_tree(head, digests):
-    """Merkle-style pairwise reduction: O(log B) sequential depth instead
-    of the O(B) chain — the beyond-paper collapse of the last serial stage
-    of consensus (§Perf fabric iteration). Deterministic; head folds in
-    once at the root."""
-    d = digests
-    while d.shape[0] > 1:
-        if d.shape[0] % 2:
-            d = jnp.concatenate([d, d[-1:]])
-        d = hashing.combine(d[0::2], d[1::2])
-    return jnp.stack(
-        [hashing.combine(head[0], d[0]), hashing.combine(head[1], d[0])]
+        ledger_head=c(1), journal_head=c(1), block_no=c(0),
     )
 
 
 def make_fabric_step(dims: types.FabricDims, cfg: "FabricStepConfig", mesh):
     """Build the jit-able sharded step.
 
-    Inputs (global shapes):
+    Inputs (global shapes), with D = ``cfg.pipeline_depth``:
       state: FabricMeshState with C = data axis size
-      wire (C, B_round, WB) u8, ids (C, B_round, 2) u32 — B_round is the
-      whole channel round; each model rank ingests B_round/model_size.
-    Returns (state, valid (C, B_round) bool).
+      depth 1:  wire (C, B_round, WB) u8, ids (C, B_round, 2) u32
+      depth D>1: wire (C, D, B_round, WB) u8, ids (C, D, B_round, 2) u32
+    where B_round is one whole channel block; each model rank ingests
+    B_round/model_size per block. Returns (state, valid) with valid
+    (C, B_round) at depth 1 and (C, D, B_round) at depth D.
 
     With ``cfg.shard_state`` the world-state bucket dim is partitioned over
     ``model`` (each rank holds NB/model_size buckets, the high-bit bucket
     partition); reads route to their owner rank via masked-psum gather and
     commits apply only on the owning shard. The replicated path stays as
     the oracle — both must produce byte-identical validity bits and
-    ledger/log heads.
+    ledger/log heads. Depth D > 1 pipelines the window's blocks
+    (repro/pipeline/schedule.py) and must be byte-identical to D
+    invocations of the depth-1 step.
     """
-    spw = unmarshal.struct_prefix_words(dims)
     msize = mesh.shape["model"]
+    if cfg.pipeline_depth > 1:
+        return _make_pipelined(dims, cfg, mesh, msize)
+    spw = unmarshal.struct_prefix_words(dims)
 
-    def step_local(keys, vers, vals, log_head, ledger_head, wire, ids):
+    def step_local(keys, vers, vals, log_head, ledger_head, journal_head,
+                   block_no, wire, ids):
         # Shapes inside shard_map: (1, NB, S, 2), ..., (1, B_loc, WB).
         keys, vers, vals = keys[0], vers[0], vals[0]
         log_head, ledger_head = log_head[0], ledger_head[0]
+        journal_head, bno = journal_head[0], block_no[0]
         wire, ids = wire[0], ids[0]
-        b_loc, wb = wire.shape
-
-        words = jax.lax.bitcast_convert_type(
-            wire.reshape(b_loc, wb // 4, 4), U32
-        ).reshape(b_loc, wb // 4)
+        b_loc = wire.shape[0]
 
         # --- 1. local syntactic verification (P-II: validate-where-ingested)
-        checksum_ok = (
-            unmarshal.payload_checksum(words)
-            == words[:, unmarshal.CHECKSUM_WORD]
-        )
+        words, txb_loc, checksum_ok = stages.stage_syntax(wire, dims)
         # Local endorsement verification (worst case: every tag checked).
-        txb_loc = unmarshal.unmarshal(wire, dims).txb
-        endorse_ok = crypto.verify_tags(txb_loc)
+        endorse_ok = stages.stage_endorse(txb_loc)
         ok_loc = checksum_ok & endorse_ok
 
         # --- 2. consensus replication over the `model` replica cluster.
@@ -161,17 +147,7 @@ def make_fabric_step(dims: types.FabricDims, cfg: "FabricStepConfig", mesh):
         log_glob = jax.lax.all_gather(
             published, "model", axis=0, tiled=True
         )  # (B_round, spw|W)
-        if cfg.pipelined:
-            digests = hashing.hash_words(log_glob, seed=hashing.SEED_A)
-            fold = _fold_log_tree if cfg.tree_hash else _fold_log
-            log_head = fold(log_head, digests)
-        else:
-            def ser(h, row):
-                d1 = hashing.hash_words(row[None, :], seed=h[0])[0]
-                d2 = hashing.hash_words(row[None, :], seed=h[1])[0]
-                return jnp.stack([d1, d2]), None
-
-            log_head, _ = jax.lax.scan(ser, log_head, log_glob)
+        log_head = stages.fold_log_head(log_head, log_glob, cfg)
 
         # --- 3. deterministic order over the channel round.
         ids_glob = jax.lax.all_gather(ids, "model", axis=0, tiled=True)
@@ -180,13 +156,9 @@ def make_fabric_step(dims: types.FabricDims, cfg: "FabricStepConfig", mesh):
         # --- 4. replicated validation state: flags + structured sets.
         ok_glob = jax.lax.all_gather(ok_loc, "model", axis=0, tiled=True)
         ordered_words = log_glob[order]
-        if cfg.separate_metadata:
-            txb = unmarshal.unmarshal_prefix(ordered_words, dims)
-        else:  # baseline replicated the whole wire; decode it again here
-            wire_glob = jax.lax.bitcast_convert_type(
-                ordered_words, jnp.uint8
-            ).reshape(ordered_words.shape[0], -1)
-            txb = unmarshal.unmarshal(wire_glob, dims).txb
+        txb = stages.decode_published(
+            ordered_words, dims, cfg.separate_metadata
+        )
         ok_ord = ok_glob[order]
 
         st = ws.HashState(keys=keys, versions=vers, values=vals)
@@ -198,40 +170,34 @@ def make_fabric_step(dims: types.FabricDims, cfg: "FabricStepConfig", mesh):
                 st, txb.read_keys.reshape(-1, 2), nb_glob, msize
             ).versions.reshape(txb.batch, -1)
         else:
+            nb_glob = st.n_buckets
             cur = ws.lookup(
                 st, txb.read_keys.reshape(-1, 2)
             ).versions.reshape(txb.batch, -1)
-        res = mvcc.validate(txb, cur, checksum_ok=ok_ord)
 
-        # --- 5. commit (sharded: owner ranks only; else every replica
-        # applies the same deltas).
-        if cfg.shard_state:
-            cres = state_sharding.sharded_commit(
-                st, txb.write_keys, txb.write_vals, res.valid,
-                nb_glob, msize, sequential=cfg.sequential_commit,
-            )
-        else:
-            cres = ws.commit(
-                st, txb.write_keys, txb.write_vals, res.valid,
-                sequential=cfg.sequential_commit,
-            )
-        st2 = cres.state
+        # --- 5. MVCC + commit (sharded: owner ranks only; else every
+        # replica applies the same deltas).
+        st2, valid = stages.stage_mvcc_commit(
+            st, txb, ok_ord, cur, cfg,
+            n_buckets_global=nb_glob, n_shards=msize,
+        )
 
-        # Ledger append over the ordered round (content + validity).
-        d1 = hashing.hash_words(ordered_words, seed=hashing.SEED_A)
-        fold2 = _fold_log_tree if cfg.tree_hash else _fold_log
-        led = fold2(ledger_head, d1 ^ res.valid.astype(U32))
+        # Ledger append over the ordered round (content + validity), and
+        # the state-journal head over the validated write sets.
+        led = stages.fold_ledger_head(ledger_head, ordered_words, valid, cfg)
+        jrn = stages.advance_journal_head(journal_head, bno, txb, valid)
 
         # Un-order validity back to ingest layout, return this rank's slice.
         inv = jnp.argsort(order)
-        valid_ingest = res.valid[inv]
+        valid_ingest = valid[inv]
         rank = jax.lax.axis_index("model")
         mine = jax.lax.dynamic_slice_in_dim(
             valid_ingest, rank * b_loc, b_loc
         )
         return (
             st2.keys[None], st2.versions[None], st2.values[None],
-            log_head[None], led[None], mine[None],
+            log_head[None], led[None], jrn[None],
+            (bno + jnp.uint32(1))[None], mine[None],
         )
 
     cspec = state_specs(mesh, shard_state=cfg.shard_state)
@@ -240,20 +206,69 @@ def make_fabric_step(dims: types.FabricDims, cfg: "FabricStepConfig", mesh):
         step_local,
         mesh=mesh,
         in_specs=(cspec.keys, cspec.versions, cspec.values,
-                  cspec.log_head, cspec.ledger_head, io_spec, io_spec),
+                  cspec.log_head, cspec.ledger_head, cspec.journal_head,
+                  cspec.block_no, io_spec, io_spec),
         out_specs=(cspec.keys, cspec.versions, cspec.values, cspec.log_head,
-                   cspec.ledger_head, P("data", "model")),
+                   cspec.ledger_head, cspec.journal_head, cspec.block_no,
+                   P("data", "model")),
         **_SHARD_MAP_NO_CHECK,
     )
 
     def apply(state: FabricMeshState, wire, ids):
         if cfg.shard_state:
             ws.shard_buckets(state.keys.shape[1], msize)  # validate split
-        keys, vers, vals, log_head, led, valid = step(
+        out = step(
             state.keys, state.versions, state.values, state.log_head,
-            state.ledger_head, wire, ids,
+            state.ledger_head, state.journal_head, state.block_no, wire, ids,
         )
-        return FabricMeshState(keys, vers, vals, log_head, led), valid
+        return FabricMeshState(*out[:-1]), out[-1]
+
+    return apply
+
+
+def _make_pipelined(dims: types.FabricDims, cfg: "FabricStepConfig", mesh,
+                    msize: int):
+    """Window variant: D blocks in flight per invocation (schedule.py)."""
+    from repro.pipeline import schedule  # local: keeps layering one-way
+
+    depth = cfg.pipeline_depth
+    body = schedule.make_window_body(dims, cfg, msize, depth)
+
+    def step_local(keys, vers, vals, log_head, ledger_head, journal_head,
+                   block_no, wire, ids):
+        out = body(
+            keys[0], vers[0], vals[0], log_head[0], ledger_head[0],
+            journal_head[0], block_no[0], wire[0], ids[0],
+        )
+        return tuple(o[None] for o in out)
+
+    cspec = state_specs(mesh, shard_state=cfg.shard_state)
+    io_spec = P("data", None, "model", None)  # (C, D, B_round, ...)
+    step = _shard_map(
+        step_local,
+        mesh=mesh,
+        in_specs=(cspec.keys, cspec.versions, cspec.values,
+                  cspec.log_head, cspec.ledger_head, cspec.journal_head,
+                  cspec.block_no, io_spec, io_spec),
+        out_specs=(cspec.keys, cspec.versions, cspec.values, cspec.log_head,
+                   cspec.ledger_head, cspec.journal_head, cspec.block_no,
+                   P("data", None, "model")),
+        **_SHARD_MAP_NO_CHECK,
+    )
+
+    def apply(state: FabricMeshState, wire, ids):
+        if cfg.shard_state:
+            ws.shard_buckets(state.keys.shape[1], msize)  # validate split
+        if wire.ndim != 4 or wire.shape[1] != depth:
+            raise ValueError(
+                f"pipeline_depth={depth} expects wire (C, {depth}, B, WB); "
+                f"got {wire.shape}"
+            )
+        out = step(
+            state.keys, state.versions, state.values, state.log_head,
+            state.ledger_head, state.journal_head, state.block_no, wire, ids,
+        )
+        return FabricMeshState(*out[:-1]), out[-1]
 
     return apply
 
@@ -270,28 +285,45 @@ class FabricStepConfig:
     # `model` by high bucket bits (launch/state_sharding) — the table grows
     # model_size x beyond one device's VMEM budget; replicated path is the
     # oracle (byte-identical validity bits and ledger/log heads).
+    pipeline_depth: int = 1  # P-II device-side block pipeline: blocks in
+    # flight per step invocation (repro/pipeline). Depth 1 is the
+    # single-block path above; depth D takes a (C, D, B, ...) window,
+    # issues ONE consensus gather + ONE routed MVCC gather per window, and
+    # must stay byte-identical to D depth-1 invocations.
 
     @property
     def name(self) -> str:
         base = "fastfabric" if self.separate_metadata else "fabric-1.2"
         return (base + ("+tree" if self.tree_hash else "")
-                + ("+shard" if self.shard_state else ""))
+                + ("+shard" if self.shard_state else "")
+                + (f"+pipe{self.pipeline_depth}"
+                   if self.pipeline_depth > 1 else ""))
 
 
 FASTFABRIC_STEP = FabricStepConfig()
 FASTFABRIC_SHARDED_STEP = FabricStepConfig(shard_state=True)
+FASTFABRIC_PIPELINED_STEP = FabricStepConfig(shard_state=True,
+                                             pipeline_depth=8)
 FABRIC_V12_STEP = FabricStepConfig(
     separate_metadata=False, pipelined=False, sequential_commit=True
 )
 
 
-def input_specs(mesh, dims: types.FabricDims, b_loc: int = 100):
-    """ShapeDtypeStructs for the dry-run: one round of B_loc txs per device."""
+def input_specs(mesh, dims: types.FabricDims, b_loc: int = 100,
+                pipeline_depth: int = 1):
+    """ShapeDtypeStructs for the dry-run: one round of B_loc txs per device
+    (per block; ``pipeline_depth`` blocks per window when > 1)."""
     c = mesh.shape["data"]
     m = mesh.shape["model"]
     b_round = b_loc * m
+    wb = 4 * dims.payload_words
+    if pipeline_depth > 1:
+        d = pipeline_depth
+        return (
+            jax.ShapeDtypeStruct((c, d, b_round, wb), jnp.uint8),
+            jax.ShapeDtypeStruct((c, d, b_round, 2), U32),
+        )
     return (
-        jax.ShapeDtypeStruct((c, b_round, 4 * dims.payload_words),
-                             jnp.uint8),
+        jax.ShapeDtypeStruct((c, b_round, wb), jnp.uint8),
         jax.ShapeDtypeStruct((c, b_round, 2), U32),
     )

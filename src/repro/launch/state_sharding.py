@@ -72,6 +72,23 @@ def sharded_lookup(local: ws.HashState, keys: jnp.ndarray,
                      slots=look.slots)
 
 
+def sharded_lookup_versions(local: ws.HashState, keys: jnp.ndarray,
+                            n_buckets_global: int, n_shards: int,
+                            *, axis: str = "model") -> jnp.ndarray:
+    """Routed *version-only* gather for a flat (K, 2) key batch -> (K,) u32.
+
+    The MVCC read-version check needs only versions, so this issues ONE
+    masked psum over ``axis`` instead of :func:`sharded_lookup`'s three
+    (found / versions / values). The block pipeline coalesces the read
+    sets of all in-flight blocks into a single call per pipeline fill
+    (repro/pipeline/batched_mvcc.py) — one routed all-to-all per window
+    instead of one per block, the ROADMAP cross-shard-batching item.
+    """
+    mine = owned_mask(keys, n_buckets_global, n_shards, axis=axis)
+    vers = ws.lookup(local, keys).versions
+    return jax.lax.psum(jnp.where(mine, vers, jnp.uint32(0)), axis)
+
+
 def sharded_commit(local: ws.HashState, write_keys: jnp.ndarray,
                    write_vals: jnp.ndarray, active: jnp.ndarray,
                    n_buckets_global: int, n_shards: int,

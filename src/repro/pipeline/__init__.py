@@ -1,0 +1,25 @@
+"""Device-side block pipeline: multi-block in-flight validation.
+
+FastFabric's P-II peer keeps many blocks in flight through a staged
+validation pipeline. This subsystem is the mesh-step version of that idea:
+
+  * :mod:`repro.pipeline.stages`       — the validation stage functions
+    (syntactic checksum + unmarshal, endorsement MAC verify, MVCC + commit)
+    factored out of ``launch/fabric_step.step_local`` so the depth-1 path
+    and the pipelined path execute the *same* math;
+  * :mod:`repro.pipeline.batched_mvcc` — the window-wide read-version
+    gather: the read sets of all in-flight blocks coalesce into ONE routed
+    all-to-all per pipeline fill (instead of one per block), with the
+    per-block versions reconstructed locally so commits still apply in
+    block order;
+  * :mod:`repro.pipeline.schedule`     — the ``lax.scan``-based
+    fill/steady/drain software pipeline over a ``(D, ...)`` block window
+    with double-buffered carries for the log/ledger/journal heads;
+  * :mod:`repro.pipeline.engine_bridge` — the adapter that lets the
+    single-host engine (``core/engine.py``) hand the mesh step a window of
+    blocks per round.
+
+Entry point: ``launch/fabric_step.make_fabric_step`` with
+``FabricStepConfig.pipeline_depth > 1`` builds the pipelined step; depth 1
+is byte-for-byte today's single-block path and serves as the oracle.
+"""

@@ -1,0 +1,110 @@
+"""Window-batched MVCC read-version gathers + in-window version repair.
+
+The sharded-state fabric step (PR 2) pays one routed masked-psum lookup per
+block to fetch the committed versions of the block's read keys. With D
+blocks in flight, that is D collectives on the critical path — the ROADMAP
+"cross-shard MVCC batching" item. This module coalesces the read sets of
+ALL in-flight blocks into ONE routed gather per pipeline fill
+(:func:`gather_window_versions`), then reconstructs, locally and exactly,
+what a per-block lookup *would* have returned at each block's commit point:
+
+  lookup-after-block-(t-1)  ==  lookup-at-fill  +  (number of effective
+  valid writes to that key by in-window blocks 0..t-1)
+
+because every applied write bumps a key's version by exactly one (insert
+writes version 1 == 0 + 1; update writes v + 1). "Effective" mirrors the
+commit implementation in use: the vectorized commit first-wins-dedups
+duplicate active keys within a block, the sequential commit bumps once per
+occurrence (:func:`effective_writes` reproduces both).
+
+The repair needs the valid bits of earlier in-flight blocks, which only
+exist once those blocks commit — so the schedule threads a *window write
+log* (keys + effective flags of committed-in-window blocks) through its
+scan carry and calls :func:`version_adjustment` right before each block's
+MVCC validation. Commits still apply in block order; only the read gather
+is hoisted and batched.
+
+PRECONDITION — no bucket overflow inside a window: an insert dropped by an
+overflowing commit is still counted as a bump here, whereas the depth-1
+path's next block reads the real (un-bumped) table, so the byte-identical
+guarantee holds only when no block in the window overflows. The depth-1
+step already ignores the overflow flag for its own block; sizing tables so
+blocks never overflow (as all tests/benchmarks do) satisfies both.
+Threading the overflow bit through the window write log is a ROADMAP item.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import hashing, types
+from repro.core import world_state as ws
+from repro.launch import state_sharding
+
+U32 = jnp.uint32
+
+
+def gather_window_versions(local: ws.HashState, read_keys: jnp.ndarray,
+                           shard_state: bool, *, n_buckets_global: int,
+                           n_shards: int, axis: str = "model"
+                           ) -> jnp.ndarray:
+    """Fetch committed versions for a whole window's read sets at once.
+
+    ``read_keys`` (N, RK, 2) — the flattened (D * B) read sets of every
+    in-flight block, in ingest order. Returns (N, RK) u32 versions against
+    the *fill-time* state: one routed all-to-all over ``axis`` when the
+    state is sharded, a single local probe otherwise.
+    """
+    n = read_keys.shape[0]
+    flat = read_keys.reshape(-1, 2)
+    if shard_state:
+        vers = state_sharding.sharded_lookup_versions(
+            local, flat, n_buckets_global, n_shards, axis=axis
+        )
+    else:
+        vers = ws.lookup(local, flat).versions
+    return vers.reshape(n, -1)
+
+
+def effective_writes(txb: types.TxBatch, valid: jnp.ndarray,
+                     sequential: bool):
+    """A committed block's version-bumping writes, flattened.
+
+    Returns (keys (B*WK, 2), bumps (B*WK,) bool) where ``bumps`` marks the
+    write slots that advanced a key's version: valid transaction, non-empty
+    key, and — for the vectorized commit — not a duplicate of an earlier
+    active slot (first wins, exactly ``world_state.commit_vectorized``'s
+    dedup). The sequential commit bumps every occurrence, so no dedup.
+    """
+    fk = txb.write_keys.reshape(-1, 2)
+    k = fk.shape[0]
+    wk = txb.write_keys.shape[1]
+    act = jnp.repeat(valid, wk) & (fk[:, 0] != hashing.EMPTY_KEY)
+    if not sequential:
+        same_key = (fk[:, 0][None, :] == fk[:, 0][:, None]) & (
+            fk[:, 1][None, :] == fk[:, 1][:, None]
+        )
+        earlier = jnp.tril(jnp.ones((k, k), bool), k=-1)
+        dup = (same_key & earlier & act[None, :]).any(axis=1) & act
+        act = act & ~dup
+    return fk, act
+
+
+def version_adjustment(read_keys: jnp.ndarray, wlog_keys: jnp.ndarray,
+                       wlog_bumps: jnp.ndarray) -> jnp.ndarray:
+    """Per-read-key count of effective earlier in-window writes.
+
+    ``read_keys`` (B, RK, 2); ``wlog_keys`` (..., 2) / ``wlog_bumps``
+    (...,) — the window write log (rows of not-yet-committed blocks are
+    zero, so they contribute nothing). Returns (B, RK) u32 to ADD to the
+    fill-time versions.
+    """
+    lk = wlog_keys.reshape(-1, 2)
+    lb = wlog_bumps.reshape(-1)
+    eq = (
+        (read_keys[..., None, 0] == lk[None, None, :, 0])
+        & (read_keys[..., None, 1] == lk[None, None, :, 1])
+        & (lk[None, None, :, 0] != hashing.EMPTY_KEY)
+        & lb[None, None, :]
+    )  # (B, RK, L)
+    return eq.sum(axis=-1).astype(U32)

@@ -1,0 +1,133 @@
+"""Engine ↔ mesh-step bridge: commit windows of blocks per round.
+
+``core/engine.py`` is the single-host engine; its committer role used to
+push one block at a time through ``committer.commit_block``. This adapter
+lets the engine hand the MESH step (launch/fabric_step) a window of
+``pipeline_depth`` blocks per invocation instead — the device-side block
+pipeline — while still producing everything the storage role needs per
+block (prev/block chain hashes for ``BlockStore.verify_chain``, per-tx
+validity bits for the journal and the endorser-replica update).
+
+The engine stays the orchestrator: it orders the round, slices it into
+windows, ships each retired block to the store, and runs its usual
+durability checks against :meth:`MeshWindowCommitter.state_digest` /
+``journal_head`` instead of the per-block peer state.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ledger, types
+from repro.core import world_state as ws
+from repro.launch import fabric_step as fs
+
+U32 = jnp.uint32
+
+
+class WindowResult(NamedTuple):
+    """Per-block outputs of one committed window (block-major)."""
+
+    valid: jnp.ndarray  # (D, B) bool, block order == input order
+    prev_hash: np.ndarray  # (D, 2) u32 — store-chain prev per block
+    block_hash: np.ndarray  # (D, 2) u32 — store-chain hash per block
+
+
+@jax.jit
+def _chain_hashes(prev_hash, block_no0, wire, valid):
+    """Store-chain hashes for a window: (prev (D, 2), hash (D, 2))."""
+
+    def link(prev, xs):
+        wire_b, valid_b, k = xs
+        digest = ledger.block_body_digest(wire_b, valid_b)
+        bh = ledger.append_hash(prev, block_no0 + k, digest)
+        return bh, (prev, bh)
+
+    _, (prevs, hashes) = jax.lax.scan(
+        link, prev_hash,
+        (wire, valid, jnp.arange(wire.shape[0], dtype=U32)),
+    )
+    return prevs, hashes
+
+
+class MeshWindowCommitter:
+    """The committer role backed by the mesh fabric step, windowed.
+
+    One instance owns a ``FabricMeshState`` (C=1 channel) and feeds it
+    windows of up to ``cfg.pipeline_depth`` blocks; remainder windows at a
+    round's tail compile a shallower step once and reuse it. Depth-1
+    windows take the single-block oracle path, so an engine driving this
+    committer at depth 1 is byte-identical to depth D in every output.
+    """
+
+    def __init__(self, dims: types.FabricDims, cfg: fs.FabricStepConfig,
+                 mesh=None, *, n_buckets: int = 1 << 12, slots: int = 8):
+        if mesh is None:
+            mesh = jax.make_mesh((1, 1), ("data", "model"))
+        self.dims = dims
+        self.cfg = cfg
+        self.mesh = mesh
+        self.state = fs.create_mesh_state(
+            1, dims, n_buckets=n_buckets, slots=slots
+        )
+        self.prev_hash = jnp.zeros((2,), U32)
+        self._steps: dict[int, object] = {}
+
+    @property
+    def depth(self) -> int:
+        return max(self.cfg.pipeline_depth, 1)
+
+    def _step_for(self, d: int):
+        if d not in self._steps:
+            cfg = dataclasses.replace(self.cfg, pipeline_depth=d)
+            self._steps[d] = jax.jit(
+                fs.make_fabric_step(self.dims, cfg, self.mesh)
+            )
+        return self._steps[d]
+
+    def commit_window(self, wire: jnp.ndarray, tx_ids: jnp.ndarray
+                      ) -> WindowResult:
+        """Commit ``wire`` (D, B, WB) / ``tx_ids`` (D, B, 2), D <= depth."""
+        d = wire.shape[0]
+        block_no0 = self.state.block_no[0]
+        step = self._step_for(d)
+        if d == 1:
+            self.state, valid = step(self.state, wire[0][None],
+                                     tx_ids[0][None])
+            valid = valid[:, None]  # (1, 1, B)
+        else:
+            self.state, valid = step(self.state, wire[None], tx_ids[None])
+        valid = valid[0]  # (D, B)
+        prevs, hashes = _chain_hashes(self.prev_hash, block_no0, wire, valid)
+        self.prev_hash = hashes[-1]
+        return WindowResult(
+            valid=valid, prev_hash=np.asarray(prevs),
+            block_hash=np.asarray(hashes),
+        )
+
+    # -- durability-check surface (engine.verify) --------------------------
+
+    def hash_state(self) -> ws.HashState:
+        """The committed world state as a single-host table (global view:
+        for sharded configs the channel's concatenated bucket shards ARE
+        the full table — the high-bit partition)."""
+        return ws.HashState(
+            keys=self.state.keys[0],
+            versions=self.state.versions[0],
+            values=self.state.values[0],
+        )
+
+    def state_digest(self) -> np.ndarray:
+        return np.asarray(ws.state_digest(self.hash_state()))
+
+    @property
+    def journal_head(self) -> np.ndarray:
+        return np.asarray(self.state.journal_head[0])
+
+    def block_until_ready(self) -> None:
+        jax.block_until_ready(self.state.ledger_head)

@@ -1,0 +1,198 @@
+"""Fill/steady/drain software pipeline over a (D, ...) window of blocks.
+
+The mesh step used to validate exactly one block per invocation; this
+module builds the shard_map body that pushes D blocks through the
+validation stages per invocation, overlapping stages of different blocks:
+
+  FILL    — the window-wide work that batches for free across blocks:
+            local syntactic checksum + unmarshal + endorsement MAC verify
+            of all D * B_loc ingested transactions at once, ONE consensus
+            all-gather of the whole window's published words / ids / flags
+            (instead of one per block), the window decode, and the ONE
+            routed MVCC read-version gather per fill
+            (repro/pipeline/batched_mvcc.py). Then the first block's
+            prepare stage primes the double buffer.
+  STEADY  — a ``lax.scan`` whose iteration i runs the COMMIT stage of
+            block i (from the carried double buffer) next to the PREPARE
+            stage of block i+1 (from the scan's xs). The two are
+            data-independent, so block i's sequential MVCC bit-scan +
+            owner-shard commit overlaps block i+1's ordering, decode
+            permutation, conflict matrix and digest work.
+  DRAIN   — the last block's commit stage, peeled after the scan.
+
+PREPARE is a block's embarrassingly parallel precursor work (consensus
+order + inverse, ordered views, conflict matrix, ledger/log digest
+material); COMMIT is the genuinely sequential tail (in-window version
+repair, MVCC scan, state commit, log/ledger/journal head folds) — the
+heads and the window write log ride the scan carry, double-buffered with
+the prepared block. Commits apply strictly in block order, so the result
+is byte-identical to running the depth-1 step D times
+(tests/test_pipeline.py pins validity bits, all three heads, block
+numbers, and state arrays).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hashing, mvcc, orderer, types, unmarshal
+from repro.core import world_state as ws
+from repro.pipeline import batched_mvcc, stages
+
+U32 = jnp.uint32
+
+
+class Prepared(NamedTuple):
+    """One block's prepare-stage output — the pipeline's double buffer."""
+
+    txb: types.TxBatch  # ordered, (B, ...) fields
+    ok_ord: jnp.ndarray  # (B,) checksum & endorse flags, ordered
+    cur_ord: jnp.ndarray  # (B, RK) fill-time read versions, ordered
+    conflict: jnp.ndarray  # (B, B) MVCC conflict matrix
+    inv: jnp.ndarray  # (B,) inverse order permutation (back to ingest)
+    ledger_mat: jnp.ndarray  # (B,) ordered-row digests for the ledger fold
+    log_mat: jnp.ndarray  # (B,) digests or (B, W) raw rows (serial fold)
+
+
+def make_window_body(dims: types.FabricDims, cfg, msize: int, depth: int):
+    """Build the shard_map-local body for a D-block window.
+
+    Local input shapes (channel dim already peeled by the caller):
+      keys (NB_loc, S, 2), versions, values, log/ledger/journal heads (2,),
+      block_no () u32, wire (D, B_loc, WB) u8, ids (D, B_loc, 2) u32.
+    Returns (state arrays..., heads..., block_no, valid (D, B_loc)) with
+    ``valid`` in ingest order for this rank's slice of every block.
+    """
+    spw = (unmarshal.struct_prefix_words(dims)
+           if cfg.separate_metadata else None)
+
+    def prepare(log_rows, ids_b, ok_b, cur_b, txb_b) -> Prepared:
+        order = orderer.consensus_order(ids_b)
+        inv = jnp.argsort(order)
+        txb_t = jax.tree.map(lambda a: a[order], txb_b)
+        ordered_words = log_rows[order]
+        conf = mvcc.conflict_matrix(txb_t)
+        ledger_mat = hashing.hash_words(ordered_words, seed=hashing.SEED_A)
+        # O-II hashes consensus rows in parallel; the baseline's serial
+        # seeded chain needs the raw rows at fold time.
+        log_mat = (hashing.hash_words(log_rows, seed=hashing.SEED_A)
+                   if cfg.pipelined else log_rows)
+        return Prepared(
+            txb=txb_t, ok_ord=ok_b[order], cur_ord=cur_b[order],
+            conflict=conf, inv=inv, ledger_mat=ledger_mat, log_mat=log_mat,
+        )
+
+    def body(keys, vers, vals, log_head, ledger_head, journal_head,
+             block_no, wire, ids):
+        d, b_loc, wb = wire.shape
+        assert d == depth
+        st = ws.HashState(keys=keys, versions=vers, values=vals)
+        nb_glob = st.n_buckets * (msize if cfg.shard_state else 1)
+        rank = jax.lax.axis_index("model")
+
+        # ---- FILL: stages 1+2, batched over the whole window -------------
+        words, txb_loc, checksum_ok = stages.stage_syntax(
+            wire.reshape(d * b_loc, wb), dims
+        )
+        endorse_ok = stages.stage_endorse(txb_loc)
+        ok_loc = (checksum_ok & endorse_ok).reshape(d, b_loc)
+        words = words.reshape(d, b_loc, -1)
+        published = words[..., :spw] if cfg.separate_metadata else words
+
+        # ---- FILL: one consensus all-gather for the whole window ---------
+        log_glob = jax.lax.all_gather(
+            published, "model", axis=1, tiled=True
+        )  # (D, B, spw|W)
+        ids_glob = jax.lax.all_gather(ids, "model", axis=1, tiled=True)
+        ok_glob = jax.lax.all_gather(ok_loc, "model", axis=1, tiled=True)
+        b_round = ids_glob.shape[1]
+
+        # Window decode (ingest order) — feeds the batched version gather.
+        txb_win = stages.decode_published(
+            log_glob.reshape(d * b_round, -1), dims, cfg.separate_metadata
+        )
+
+        # ---- FILL: ONE routed MVCC read-version gather per window --------
+        cur_win = batched_mvcc.gather_window_versions(
+            st, txb_win.read_keys, cfg.shard_state,
+            n_buckets_global=nb_glob, n_shards=msize,
+        ).reshape(d, b_round, -1)
+        txb_dw = jax.tree.map(
+            lambda a: a.reshape(d, b_round, *a.shape[1:]), txb_win
+        )
+
+        # ---- COMMIT stage (block bt, from the double-buffered prep) ------
+        wk = dims.wk
+
+        def commit_stage(cstate, prep: Prepared, bt):
+            st, log_h, led_h, jrn_h, bno, wl_keys, wl_bumps = cstate
+            adj = batched_mvcc.version_adjustment(
+                prep.txb.read_keys, wl_keys, wl_bumps
+            )
+            st2, valid = stages.stage_mvcc_commit(
+                st, prep.txb, prep.ok_ord, prep.cur_ord + adj, cfg,
+                n_buckets_global=nb_glob, n_shards=msize,
+                conflict=prep.conflict,
+            )
+            log_h2 = stages.fold_log_head(
+                log_h, prep.log_mat, cfg, material_is_digests=cfg.pipelined
+            )
+            fold = (stages.fold_log_tree if cfg.tree_hash
+                    else stages.fold_log_chain)
+            led_h2 = fold(led_h, prep.ledger_mat ^ valid.astype(U32))
+            jrn_h2 = stages.advance_journal_head(jrn_h, bno, prep.txb, valid)
+            fk, bumps = batched_mvcc.effective_writes(
+                prep.txb, valid, cfg.sequential_commit
+            )
+            wl_keys = wl_keys.at[bt].set(fk)
+            wl_bumps = wl_bumps.at[bt].set(bumps)
+            mine = jax.lax.dynamic_slice_in_dim(
+                valid[prep.inv], rank * b_loc, b_loc
+            )
+            return (
+                (st2, log_h2, led_h2, jrn_h2, bno + jnp.uint32(1),
+                 wl_keys, wl_bumps),
+                mine,
+            )
+
+        # ---- SCHEDULE: fill P(0); steady C(i) || P(i+1); drain C(D-1) ----
+        per_block = (log_glob, ids_glob, ok_glob, cur_win, txb_dw)
+        prep0 = prepare(*jax.tree.map(lambda a: a[0], per_block))
+        cstate = (
+            st, log_head, ledger_head, journal_head, block_no,
+            jnp.zeros((d, b_round * wk, 2), U32),  # window write log: keys
+            jnp.zeros((d, b_round * wk), bool),  # ... effective-bump flags
+        )
+
+        if depth > 1:
+            xs = (
+                jnp.arange(depth - 1),
+                jax.tree.map(lambda a: a[1:], per_block),
+            )
+
+            def steady(carry, x):
+                cstate, prep = carry
+                bt, pin = x
+                cstate2, mine = commit_stage(cstate, prep, bt)
+                prep_next = prepare(*pin)  # independent of commit_stage:
+                # block bt's commit overlaps block bt+1's prepare.
+                return (cstate2, prep_next), mine
+
+            (cstate, prep_last), valid_head = jax.lax.scan(
+                steady, (cstate, prep0), xs
+            )
+        else:
+            prep_last, valid_head = prep0, jnp.zeros((0, b_loc), bool)
+
+        cstate, valid_tail = commit_stage(cstate, prep_last, depth - 1)
+        st2, log_head, ledger_head, journal_head, block_no, _, _ = cstate
+        valid_mine = jnp.concatenate(
+            [valid_head, valid_tail[None]], axis=0
+        )  # (D, B_loc) ingest order, this rank's slice
+        return (st2.keys, st2.versions, st2.values, log_head, ledger_head,
+                journal_head, block_no, valid_mine)
+
+    return body

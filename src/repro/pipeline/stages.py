@@ -1,0 +1,196 @@
+"""Validation-stage functions shared by the depth-1 and pipelined steps.
+
+These are the stages of ``launch/fabric_step.step_local``, factored out so
+the software pipeline (:mod:`repro.pipeline.schedule`) can interleave them
+across blocks — one block's endorsement MAC verification overlapping the
+next block's state gather — while the depth-1 path keeps calling them in
+program order. Both paths therefore execute the *same* math per block,
+which is what makes the byte-identical oracle discipline
+(tests/test_pipeline.py, same as PR 2's test_state_sharding.py) possible.
+
+Stage map (paper's P-II pipeline):
+  1. ``stage_syntax``    — byte→word bitcast, payload checksum, unmarshal;
+  2. ``stage_endorse``   — endorsement MAC verification (worst case: every
+     tag checked);
+  3. ``stage_mvcc_commit`` — MVCC validation against the gathered read
+     versions + owner-shard (or replicated) commit.
+Plus the per-block head folds (consensus log, ledger, state journal) that
+the schedule double-buffers through its scan carry.
+
+Everything here runs INSIDE a shard_map body (the sharded commit uses axis
+primitives); no collectives are issued by this module except through
+``state_sharding.sharded_commit``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import crypto, hashing, mvcc, types, unmarshal
+from repro.core import world_state as ws
+from repro.launch import state_sharding
+from repro.storage import journal as state_journal
+
+U32 = jnp.uint32
+
+
+# ---------------------------------------------------------------------------
+# Consensus-log head folds (moved from launch/fabric_step; re-exported there)
+# ---------------------------------------------------------------------------
+
+
+def fold_log_chain(head, digests):
+    """Chain per-row digests into the consensus log head (C-free, (2,))."""
+    def fold(h, d):
+        return jnp.stack(
+            [hashing.combine(h[0], d), hashing.combine(h[1], d)]
+        ), None
+
+    head, _ = jax.lax.scan(fold, head, digests)
+    return head
+
+
+def fold_log_tree(head, digests):
+    """Merkle-style pairwise reduction: O(log B) sequential depth instead
+    of the O(B) chain — the beyond-paper collapse of the last serial stage
+    of consensus (§Perf fabric iteration). Deterministic; head folds in
+    once at the root."""
+    d = digests
+    while d.shape[0] > 1:
+        if d.shape[0] % 2:
+            d = jnp.concatenate([d, d[-1:]])
+        d = hashing.combine(d[0::2], d[1::2])
+    return jnp.stack(
+        [hashing.combine(head[0], d[0]), hashing.combine(head[1], d[0])]
+    )
+
+
+def fold_log_head(log_head, log_mat, cfg, *, material_is_digests=False):
+    """Advance the consensus log head over one block's replicated words.
+
+    ``cfg.pipelined`` (O-II) hashes rows in parallel and folds digests
+    (tree or chain per ``cfg.tree_hash``); the baseline replays the serial
+    seeded chain, one row at a time. ``log_mat`` is the block's replicated
+    rows, or — with ``material_is_digests`` — their precomputed SEED_A
+    digests (the pipeline's prepare stage hashes them one step early; the
+    serial baseline's fold is head-seeded, so its rows can never be
+    pre-digested and the flag must stay False for it).
+    """
+    if cfg.pipelined:
+        digests = (log_mat if material_is_digests
+                   else hashing.hash_words(log_mat, seed=hashing.SEED_A))
+        fold = fold_log_tree if cfg.tree_hash else fold_log_chain
+        return fold(log_head, digests)
+
+    def ser(h, row):
+        d1 = hashing.hash_words(row[None, :], seed=h[0])[0]
+        d2 = hashing.hash_words(row[None, :], seed=h[1])[0]
+        return jnp.stack([d1, d2]), None
+
+    log_head, _ = jax.lax.scan(ser, log_head, log_mat)
+    return log_head
+
+
+def fold_ledger_head(ledger_head, ordered_words, valid, cfg):
+    """Ledger append over the ordered block (content + validity bits)."""
+    d1 = hashing.hash_words(ordered_words, seed=hashing.SEED_A)
+    fold = fold_log_tree if cfg.tree_hash else fold_log_chain
+    return fold(ledger_head, d1 ^ valid.astype(U32))
+
+
+def advance_journal_head(journal_head, block_no, txb: types.TxBatch, valid):
+    """Fold one block's validated write sets into the state-journal head
+    (storage/journal) — the commit-path half the off-path journal must
+    reproduce."""
+    return state_journal.update_head(
+        journal_head,
+        block_no,
+        state_journal.write_set_digest(
+            txb.write_keys, txb.write_vals, valid
+        ),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Stage 1: syntactic verification (checksum + unmarshal)
+# ---------------------------------------------------------------------------
+
+
+def stage_syntax(wire, dims: types.FabricDims):
+    """Local syntactic verification (P-II: validate-where-ingested).
+
+    ``wire`` (B, WB) u8 → (words (B, W) u32, txb, checksum_ok (B,) bool).
+    """
+    b, wb = wire.shape
+    words = jax.lax.bitcast_convert_type(
+        wire.reshape(b, wb // 4, 4), U32
+    ).reshape(b, wb // 4)
+    checksum_ok = (
+        unmarshal.payload_checksum(words)
+        == words[:, unmarshal.CHECKSUM_WORD]
+    )
+    txb = unmarshal.unmarshal(wire, dims).txb
+    return words, txb, checksum_ok
+
+
+# ---------------------------------------------------------------------------
+# Stage 2: endorsement MAC verification
+# ---------------------------------------------------------------------------
+
+
+def stage_endorse(txb: types.TxBatch):
+    """Endorsement verification of locally ingested transactions (worst
+    case: every tag checked). (B,) bool."""
+    return crypto.verify_tags(txb)
+
+
+# ---------------------------------------------------------------------------
+# Decode of the replicated (post-consensus) words
+# ---------------------------------------------------------------------------
+
+
+def decode_published(words, dims: types.FabricDims, separate_metadata: bool
+                     ) -> types.TxBatch:
+    """Decode a batch of replicated consensus rows into a TxBatch.
+
+    Under O-I the rows are the structured prefix; the baseline replicated
+    the whole wire and must decode it again here.
+    """
+    if separate_metadata:
+        return unmarshal.unmarshal_prefix(words, dims)
+    wire_glob = jax.lax.bitcast_convert_type(
+        words, jnp.uint8
+    ).reshape(words.shape[0], -1)
+    return unmarshal.unmarshal(wire_glob, dims).txb
+
+
+# ---------------------------------------------------------------------------
+# Stage 3: MVCC + commit
+# ---------------------------------------------------------------------------
+
+
+def stage_mvcc_commit(st: ws.HashState, txb: types.TxBatch, ok_ord, cur,
+                      cfg, *, n_buckets_global: int, n_shards: int,
+                      conflict=None):
+    """MVCC validation against ``cur`` read versions + state commit.
+
+    ``cur`` (B, RK): the committed version of each read key at the time
+    this block commits — from a per-block routed lookup (depth-1 path) or
+    from the window-batched gather plus in-window adjustment
+    (:mod:`repro.pipeline.batched_mvcc`). ``conflict``: optional
+    precomputed conflict matrix (the pipeline's prepare stage computes it a
+    step early). Returns (new state, valid (B,) bool).
+    """
+    res = mvcc.validate(txb, cur, checksum_ok=ok_ord, conflict=conflict)
+    if cfg.shard_state:
+        cres = state_sharding.sharded_commit(
+            st, txb.write_keys, txb.write_vals, res.valid,
+            n_buckets_global, n_shards, sequential=cfg.sequential_commit,
+        )
+    else:
+        cres = ws.commit(
+            st, txb.write_keys, txb.write_vals, res.valid,
+            sequential=cfg.sequential_commit,
+        )
+    return cres.state, res.valid

@@ -50,6 +50,56 @@ def test_scan_matches_sequential_walk(pairs):
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
+@settings(max_examples=30, deadline=None)
+@given(st.data())
+def test_random_batches_with_duplicate_keys_match_reference(data):
+    """Property: validate == the sequential reference on random batches
+    whose read/write keys are drawn independently from a tiny account pool
+    (duplicates within a tx, across txs, and read/write overlaps all
+    occur), with random expected versions against a populated state."""
+    b = data.draw(st.integers(1, 12))
+    acct = lambda: st.integers(0, 4)  # 5 accounts: heavy duplication
+    reads = data.draw(st.lists(st.tuples(acct(), acct()),
+                               min_size=b, max_size=b))
+    writes = data.draw(st.lists(st.tuples(acct(), acct()),
+                                min_size=b, max_size=b))
+    vers = data.draw(st.lists(st.tuples(st.integers(0, 2), st.integers(0, 2)),
+                              min_size=b, max_size=b))
+
+    def paired(accounts):
+        out = np.zeros((b, 2, 2), np.uint32)
+        for i, pair in enumerate(accounts):
+            for j, a in enumerate(pair):
+                h1, h2 = hashing.hash_pair(jnp.uint32(a))
+                out[i, j] = [int(hashing.nonzero_key(h1)), int(h2)]
+        return jnp.asarray(out)
+
+    txb = types.TxBatch(
+        tx_id=jnp.asarray(
+            np.arange(2 * b, dtype=np.uint32).reshape(b, 2)),
+        client=jnp.zeros((b,), jnp.uint32),
+        channel=jnp.zeros((b,), jnp.uint32),
+        read_keys=paired(reads),
+        read_vers=jnp.asarray(np.asarray(vers, np.uint32)),
+        write_keys=paired(writes),
+        write_vals=jnp.ones((b, DIMS.wk, DIMS.vw), jnp.uint32),
+        endorse_tags=jnp.zeros((b, DIMS.ne), jnp.uint32),
+    )
+    # Populate accounts 0 and 1 (version 1) so some reads are fresh at
+    # version 1 and others stale.
+    seed_txb = _batch_from_accounts([(0, 1)])
+    state = ws.commit_vectorized(
+        ws.create(64, 8, DIMS.vw), seed_txb.write_keys,
+        jnp.ones((1, DIMS.wk, DIMS.vw), jnp.uint32), jnp.ones(1, bool),
+    ).state
+    cur = ws.lookup(
+        state, txb.read_keys.reshape(-1, 2)
+    ).versions.reshape(b, -1)
+    got = mvcc.validate(txb, cur).valid
+    want = mvcc.validate_sequential_reference(txb, state)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
 def test_double_spend_blocked():
     """Two txs spending the same account: only the first commits."""
     txb = _batch_from_accounts([(1, 2), (1, 3)])

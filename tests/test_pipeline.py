@@ -1,0 +1,247 @@
+"""Device-side block pipeline: the depth-D windowed step must be
+byte-identical to D sequential invocations of the depth-1 oracle —
+validity bits, log/ledger/journal heads, block numbers, and state arrays —
+on replicated AND sharded state, including windows with cross-block
+read-your-write dependencies (block k reads a key block k-1 wrote).
+
+Runs on whatever host devices exist: with 1 device the sharded path is
+exercised degenerately; the CI multi-device job
+(XLA_FLAGS=--xla_force_host_platform_device_count=8) runs the >=2-rank
+cases for real.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import endorser, engine, types, unmarshal
+from repro.launch import fabric_step as fs
+from repro.pipeline import engine_bridge
+
+DIMS = types.TEST_DIMS
+N_DEV = len(jax.devices())
+MAX_M = 1 << (N_DEV.bit_length() - 1)  # largest power of two <= N_DEV
+
+multi_device = pytest.mark.skipif(
+    N_DEV < 2, reason="needs >=2 devices (CI multi-device job)"
+)
+
+
+def _window(depth, n=32, seed=0, *, read_your_write=False):
+    """A (D, B, ...) window of endorsed blocks. With ``read_your_write``
+    every block touches the SAME accounts, so block k's reads expect the
+    versions block k-1's commits produced — valid only if the pipeline
+    preserves commit order."""
+    eng = engine.FabricEngine(engine.EngineConfig(dims=DIMS,
+                                                  store_blocks=False))
+    wires, idss = [], []
+    for k in range(depth):
+        props = eng.make_proposals(
+            n, seed=seed if read_your_write else seed + 11 * k
+        )
+        if read_your_write:
+            props = props._replace(
+                nonce=props.nonce + jnp.uint32(k * 100003)
+            )
+        txb = endorser.execute_and_endorse(eng.endorser_state, props, DIMS)
+        wires.append(unmarshal.marshal(txb, DIMS))
+        idss.append(txb.tx_id)
+        if read_your_write:
+            eng.endorser_state = endorser.apply_validated(
+                eng.endorser_state, txb, jnp.ones(n, bool)
+            )
+    return jnp.stack(wires), jnp.stack(idss)
+
+
+def _oracle(cfg, mesh, wire, ids, n_buckets=256):
+    """Depth-1 reference: one invocation per block, sequentially."""
+    st = fs.create_mesh_state(1, DIMS, n_buckets=n_buckets)
+    step = jax.jit(fs.make_fabric_step(
+        DIMS, dataclasses.replace(cfg, pipeline_depth=1), mesh))
+    valids = []
+    for k in range(wire.shape[0]):
+        st, v = step(st, wire[k][None], ids[k][None])
+        valids.append(np.asarray(v)[0])
+    return jax.tree.map(np.asarray, st), np.stack(valids)
+
+
+def _pipelined(cfg, mesh, wire, ids, depth, n_buckets=256):
+    st = fs.create_mesh_state(1, DIMS, n_buckets=n_buckets)
+    step = jax.jit(fs.make_fabric_step(
+        DIMS, dataclasses.replace(cfg, pipeline_depth=depth), mesh))
+    st, v = step(st, wire[None], ids[None])
+    return jax.tree.map(np.asarray, st), np.asarray(v)[0]
+
+
+def _assert_identical(cfg, mesh, wire, ids, depth):
+    st1, v1 = _oracle(cfg, mesh, wire, ids)
+    st2, v2 = _pipelined(cfg, mesh, wire, ids, depth)
+    np.testing.assert_array_equal(v1, v2)
+    for name, a, b in zip(fs.FabricMeshState._fields, st1, st2):
+        np.testing.assert_array_equal(a, b, err_msg=name)
+    return v2
+
+
+# ------------------------------------------------------- oracle equivalence
+
+
+@pytest.mark.parametrize("depth", [2, 8])
+def test_pipelined_equals_oracle_replicated(depth):
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    wire, ids = _window(depth, n=16, seed=depth)
+    v = _assert_identical(fs.FASTFABRIC_STEP, mesh, wire, ids, depth)
+    assert int(v.sum()) == v.size  # disjoint accounts: all valid
+
+
+def test_pipelined_equals_oracle_sharded_degenerate():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    wire, ids = _window(2, n=16, seed=9)
+    _assert_identical(fs.FASTFABRIC_SHARDED_STEP, mesh, wire, ids, 2)
+
+
+@multi_device
+@pytest.mark.parametrize("depth", [2, 4])
+def test_pipelined_equals_oracle_sharded_multi_rank(depth):
+    """Acceptance: depth-D window on >=2 model ranks with sharded state is
+    byte-identical to the depth-1 oracle — one routed gather per window."""
+    mesh = jax.make_mesh((1, min(MAX_M, 4)), ("data", "model"))
+    wire, ids = _window(depth, n=32, seed=depth)
+    _assert_identical(fs.FASTFABRIC_SHARDED_STEP, mesh, wire, ids, depth)
+
+
+def test_pipelined_equals_oracle_baseline_config():
+    """The serial fabric-1.2 folds (non-pipelined consensus, sequential
+    commit) pipeline too: the schedule reuses the exact per-block math."""
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    wire, ids = _window(2, n=16, seed=5)
+    _assert_identical(fs.FABRIC_V12_STEP, mesh, wire, ids, 2)
+
+
+# ------------------------------------------- cross-block read-your-write
+
+
+@pytest.mark.parametrize("depth", [2, 4])
+def test_cross_block_read_your_write_commit_order(depth):
+    """Block k reads keys block k-1 wrote (expecting the bumped version):
+    every transaction is valid ONLY if commits apply in block order and
+    the batched fill-time gather is repaired with in-window writes."""
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    wire, ids = _window(depth, n=16, seed=1, read_your_write=True)
+    v = _assert_identical(fs.FASTFABRIC_STEP, mesh, wire, ids, depth)
+    assert int(v.sum()) == v.size  # stale fill-time versions would zero
+    # the later blocks; all-valid proves the in-window repair is exact.
+
+
+@multi_device
+def test_cross_block_read_your_write_sharded_multi_rank():
+    mesh = jax.make_mesh((1, min(MAX_M, 4)), ("data", "model"))
+    wire, ids = _window(4, n=32, seed=2, read_your_write=True)
+    v = _assert_identical(fs.FASTFABRIC_SHARDED_STEP, mesh, wire, ids, 4)
+    assert int(v.sum()) == v.size
+
+
+def test_replayed_window_invalidated():
+    """Replaying the same window leaves every version stale (the pipeline
+    does not leak fill-time versions into the second window)."""
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    wire, ids = _window(2, n=16, seed=7)
+    st = fs.create_mesh_state(1, DIMS, n_buckets=256)
+    step = jax.jit(fs.make_fabric_step(
+        DIMS, dataclasses.replace(fs.FASTFABRIC_STEP, pipeline_depth=2),
+        mesh))
+    st, v1 = step(st, wire[None], ids[None])
+    st, v2 = step(st, wire[None], ids[None])
+    assert int(np.asarray(v1).sum()) == 32
+    assert int(np.asarray(v2).sum()) == 0
+
+
+# ------------------------------------------------------------ input guards
+
+
+def test_pipelined_rejects_wrong_window_shape():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    wire, ids = _window(2, n=16)
+    step = fs.make_fabric_step(
+        DIMS, dataclasses.replace(fs.FASTFABRIC_STEP, pipeline_depth=4),
+        mesh)
+    st = fs.create_mesh_state(1, DIMS, n_buckets=256)
+    with pytest.raises(ValueError, match="pipeline_depth=4"):
+        step(st, wire[None], ids[None])
+
+
+# -------------------------------------------------- engine window committer
+
+
+def test_engine_window_committer_matches_per_block_engine(tmp_path):
+    """core/engine.py handing the mesh step a window of blocks per round
+    must retire the same blocks as the per-block committer path: same
+    valid bits, same store chain, and all durability checks green."""
+    cfg = engine.EngineConfig(dims=DIMS, journal_dir=str(tmp_path))
+    e_ref = engine.FabricEngine(cfg)
+    wc = engine_bridge.MeshWindowCommitter(
+        DIMS, fs.FabricStepConfig(pipeline_depth=4),
+        n_buckets=cfg.n_buckets, slots=cfg.slots,
+    )
+    e_win = engine.FabricEngine(
+        dataclasses.replace(cfg, journal_dir=str(tmp_path / "win")),
+        window_committer=wc,
+    )
+    for rnd in range(2):
+        # 600 txs / block_size 100 = 6 blocks: one full depth-4 window plus
+        # a shallower 2-block remainder window.
+        s_ref = e_ref.run_round(e_ref.make_proposals(600, seed=rnd))
+        s_win = e_win.run_round(e_win.make_proposals(600, seed=rnd))
+        assert s_ref.n_valid == s_win.n_valid == 600
+        assert s_ref.n_blocks == s_win.n_blocks == 6
+    out = e_win.verify()
+    assert all(out.values()), out
+    e_ref.store.drain()
+    e_win.store.drain()
+    for a, b in zip(e_ref.store.chain, e_win.store.chain):
+        assert a.block_no == b.block_no
+        np.testing.assert_array_equal(a.block_hash, b.block_hash)
+        np.testing.assert_array_equal(a.valid, b.valid)
+    # Journal heads agree between the off-path journal and the mesh state.
+    np.testing.assert_array_equal(
+        e_win.journal.head, wc.journal_head
+    )
+
+
+def test_engine_window_committer_rejects_snapshots():
+    wc = engine_bridge.MeshWindowCommitter(
+        DIMS, fs.FabricStepConfig(pipeline_depth=2))
+    with pytest.raises(ValueError, match="window"):
+        engine.FabricEngine(
+            engine.EngineConfig(dims=DIMS, snapshot_every_blocks=4),
+            window_committer=wc,
+        )
+
+
+# -------------------------------------------------------------- benchmark
+
+
+def test_fig11_benchmark_smoke(capsys, tmp_path):
+    from benchmarks import common, fig11_pipeline
+
+    common.ROWS.clear()
+    out = tmp_path / "fig11.json"
+    fig11_pipeline.main(
+        ["--depths", "1", "2", "--b-round", "16", "--n-buckets", "256",
+         "--iters", "1", "--json", str(out)]
+    )
+    names = [r["name"] for r in common.ROWS]
+    assert any(n.startswith("repl/d=") for n in names)
+    assert any(n.startswith("shard/d=") for n in names)
+    assert any(n.startswith("equivalence/") for n in names)
+    assert out.exists()
+    # Depth 2 halves the collective instructions per block (one window
+    # gather instead of one per block) — visible even degenerately as the
+    # compiled-program count, and as real collectives on the CI
+    # multi-device job.
+    by_name = {r["name"]: r for r in common.ROWS}
+    if N_DEV >= 2:
+        assert (by_name["shard/d=2"]["coll_per_block"]
+                < by_name["shard/d=1"]["coll_per_block"])

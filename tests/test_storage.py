@@ -354,6 +354,54 @@ def test_blockstore_drain_surfaces_journal_error():
         store.drain()
 
 
+def test_blockstore_resume_resubmits_dropped_suffix(tmp_path):
+    """Supervised restart: after a writer failure, resume() reopens from
+    the last durably stored block and the supervisor resubmits the dropped
+    suffix — the chain continues gap-free (contrast with the drain() path,
+    where the hole is only *detected* by verify_chain)."""
+
+    class FlakyJournal:
+        def __init__(self):
+            self.blocks = []
+            self.fail_once = True
+
+        def append_block(self, bno, wire, valid):
+            if bno == 1 and self.fail_once:
+                self.fail_once = False
+                raise RuntimeError("disk full")
+            self.blocks.append(bno)
+
+    j = FlakyJournal()
+    store = ledger.BlockStore(spill_dir=str(tmp_path), journal=j)
+    blocks = _chain_blocks(4)
+    for b in blocks:
+        store.submit(*b)
+    # Writer fail-stopped at block 1: blocks 1..3 were dropped, no error
+    # raised — resume() is the handled-error path.
+    nxt = store.resume()
+    assert nxt == 1
+    assert [sb.block_no for sb in store.chain] == [0]
+    for b in blocks[nxt:]:
+        store.submit(*b)
+    store.drain()  # no latched error left behind by resume()
+    assert [sb.block_no for sb in store.chain] == [0, 1, 2, 3]
+    assert j.blocks == [0, 1, 2, 3]
+    assert store.verify_chain()
+    assert sorted(p.name for p in tmp_path.iterdir()) == [
+        f"block_{n:08d}.npz" for n in range(4)
+    ]
+    store.close()
+
+
+def test_blockstore_resume_without_failure_reports_next_block():
+    store = ledger.BlockStore()
+    assert store.resume() == 0
+    for b in _chain_blocks(2):
+        store.submit(*b)
+    assert store.resume() == 2
+    store.close()
+
+
 def test_blockstore_writer_failure_fail_stop_and_err_cleared(tmp_path):
     """Regression for error latching: one writer failure used to re-raise
     from every later drain()/close() forever, while blocks kept flowing
