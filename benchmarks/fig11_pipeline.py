@@ -15,9 +15,18 @@ Measured per depth D in {1, 2, 4, 8} on replicated and sharded state:
     dry-run HLO with trip counts multiplied out (launch/hlo_cost, the same
     analyzer roofline.py consumes). The sharded path must show the routed
     gather amortizing: one all-reduce per *window*, not per block;
-plus an equivalence row: the deepest pipelined config must be
+  * ``commit_scatters`` — state-commit scatter passes in the compiled
+    program (scatter instructions / 3 planes, trip-count corrected). The
+    fused window commit means exactly ONE per window at any depth — this
+    is asserted, not just reported (the pre-fusion schedule paid D);
+  * ``repl-ovf/..`` / ``shard-ovf/..`` — the same sweep on a deliberately
+    OVERFLOWING table (capacity far below the window's write set), where
+    the planner must poison dropped-insert repairs; equivalence to the
+    depth-1 oracle is asserted there too and the ``overflow`` column
+    records the latched sticky flag;
+plus equivalence rows: the deepest pipelined config must be
 byte-identical to the depth-1 oracle on validity bits, log/ledger/journal
-heads, and state arrays.
+heads, the sticky overflow flag, and state arrays.
 
 Run with spare host devices to see real routed collectives, e.g.:
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
@@ -54,22 +63,49 @@ def _window_inputs(dims: types.FabricDims, depth: int, b_round: int,
     return jnp.stack(wires), jnp.stack(idss)  # (D, B, WB), (D, B, 2)
 
 
-def _coll_counts(jstep, state, wire, ids) -> dict:
-    """Collective-instruction counts of the compiled step (trip-count
-    corrected, so collectives inside scans are multiplied out). Lowering
-    through the same jit wrapper the timing loop uses, so each depth
-    compiles exactly once."""
-    hlo = jstep.lower(state, wire, ids).compile().as_text()
-    colls = hlo_cost.analyze(hlo)["collectives"]
-    return {op: v["count"] for op, v in colls.items()}
+def _table_scatters(stablehlo: str, nb_local: int, slots: int) -> int:
+    """Scatter ops whose result is a state-table plane, i.e. a tensor with
+    leading dims (nb_local, slots) — exactly the commit's keys/versions/
+    values scatters. Counted on the PRE-optimization StableHLO because CPU
+    XLA expands scatters into loops before the final HLO (TPU keeps them;
+    hlo_cost's compiled-HLO ``scatter_count`` is reported alongside)."""
+    n, pos = 0, 0
+    while True:
+        i = stablehlo.find('"stablehlo.scatter"', pos)
+        if i < 0:
+            return n
+        j = stablehlo.find("-> tensor<", i)
+        if j >= 0:
+            dims = stablehlo[j + 10: j + 64].split("x")
+            try:
+                if int(dims[0]) == nb_local and int(dims[1]) == slots:
+                    n += 1
+            except (ValueError, IndexError):
+                pass
+        pos = i + 1
+
+
+def _hlo_counts(jstep, state, wire, ids, nb_local: int, slots: int
+                ) -> tuple[dict, float, int]:
+    """(collective counts, compiled-HLO scatter count, commit scatter
+    passes) of the compiled step. Collectives are trip-count corrected
+    (instructions inside scans multiplied out). Lowering through the same
+    jit wrapper the timing loop uses, so each depth compiles exactly
+    once."""
+    lowered = jstep.lower(state, wire, ids)
+    an = hlo_cost.analyze(lowered.compile().as_text())
+    commit_passes = _table_scatters(lowered.as_text(), nb_local, slots) / 3
+    return ({op: v["count"] for op, v in an["collectives"].items()},
+            an["scatter_count"], commit_passes)
 
 
 def _run_depth(dims, mesh, label: str, cfg, depth: int, b_round: int,
-               n_buckets: int, iters: int):
+               n_buckets: int, iters: int, slots: int = 8):
     wire, ids = _window_inputs(dims, depth, b_round)
-    state = fs.create_mesh_state(1, dims, n_buckets=n_buckets)
+    state = fs.create_mesh_state(1, dims, n_buckets=n_buckets, slots=slots)
     dcfg = dataclasses.replace(cfg, pipeline_depth=depth)
     jstep = jax.jit(fs.make_fabric_step(dims, dcfg, mesh))
+    nb_local = n_buckets // (mesh.shape["model"] if cfg.shard_state else 1)
     if depth == 1:
         def run():
             # Chain the state block-to-block: this is the real sequential
@@ -82,38 +118,55 @@ def _run_depth(dims, mesh, label: str, cfg, depth: int, b_round: int,
                 outs.append(v)
             return st, outs
 
-        colls = _coll_counts(jstep, state, wire[0][None], ids[0][None])
+        colls, scat, commits = _hlo_counts(
+            jstep, state, wire[0][None], ids[0][None], nb_local, slots)
         n_blocks_compiled = 1
     else:
         def run():
             return jstep(state, wire[None], ids[None])
 
-        colls = _coll_counts(jstep, state, wire[None], ids[None])
+        colls, scat, commits = _hlo_counts(
+            jstep, state, wire[None], ids[None], nb_local, slots)
         n_blocks_compiled = depth
-    t = common.timed(run, iters=iters)
+    # The warmup execution doubles as the overflow-flag read (an extra
+    # post-timing window run just for one scalar would lengthen the sweep).
+    ovf = int(np.asarray(jax.block_until_ready(run())[0].overflow)[0])
+    t = common.timed(run, warmup=0, iters=iters)
     total = sum(colls.values())
+    # Acceptance: the fused window commit issues exactly ONE scatter pass
+    # (3 planes: keys/versions/values) per compiled program — the
+    # pre-fusion schedule paid one per block, i.e. D per window.
+    assert commits == 1, (
+        f"{label}/d={depth}: expected 1 fused commit scatter per "
+        f"{'window' if depth > 1 else 'block'}, compiled program has "
+        f"{commits}"
+    )
     common.row(
         "fig11", f"{label}/d={depth}",
         tps=depth * b_round / t, window_ms=1e3 * t,
         coll_per_block=total / n_blocks_compiled,
         allreduce_per_block=colls.get("all-reduce", 0) / n_blocks_compiled,
         allgather_per_block=colls.get("all-gather", 0) / n_blocks_compiled,
+        commit_scatters=commits,
+        scatter_count_hlo=scat,
+        overflow=ovf,
     )
 
 
 def _check_equivalence(dims, mesh, cfg, depth: int, b_round: int,
-                       n_buckets: int, label: str) -> None:
+                       n_buckets: int, label: str, slots: int = 8) -> None:
     """Acceptance: pipelined == D sequential depth-1 invocations, byte for
-    byte (validity bits, log/ledger/journal heads, block_no, state)."""
+    byte (validity bits, log/ledger/journal heads, block_no, the sticky
+    overflow flag, and state) — including on overflowing tables."""
     wire, ids = _window_inputs(dims, depth, b_round, seed=3)
-    st1 = fs.create_mesh_state(1, dims, n_buckets=n_buckets)
+    st1 = fs.create_mesh_state(1, dims, n_buckets=n_buckets, slots=slots)
     step1 = jax.jit(fs.make_fabric_step(
         dims, dataclasses.replace(cfg, pipeline_depth=1), mesh))
     valids = []
     for k in range(depth):
         st1, v = step1(st1, wire[k][None], ids[k][None])
         valids.append(np.asarray(v)[0])
-    std = fs.create_mesh_state(1, dims, n_buckets=n_buckets)
+    std = fs.create_mesh_state(1, dims, n_buckets=n_buckets, slots=slots)
     stepd = jax.jit(fs.make_fabric_step(
         dims, dataclasses.replace(cfg, pipeline_depth=depth), mesh))
     std, vd = stepd(std, wire[None], ids[None])
@@ -122,14 +175,16 @@ def _check_equivalence(dims, mesh, cfg, depth: int, b_round: int,
         for a, b in zip(st1, std)
     )
     assert same, f"pipelined {label} d={depth} diverged from depth-1 oracle"
-    common.row("fig11", f"equivalence/{label}/d={depth}", identical=same)
+    common.row("fig11", f"equivalence/{label}/d={depth}", identical=same,
+               overflow=int(np.asarray(std.overflow)[0]))
 
 
-def run(depths: list[int], b_round: int, n_buckets: int, iters: int) -> None:
+def run(depths: list[int], b_round: int, n_buckets: int, iters: int,
+        ovf_buckets: int = 16) -> None:
     dims = types.TEST_DIMS
     n_dev = len(jax.devices())
     m = 1 << (n_dev.bit_length() - 1)  # largest power of two <= n_dev
-    while b_round % m or n_buckets % m:
+    while b_round % m or n_buckets % m or ovf_buckets % m:
         m //= 2
     mesh = jax.make_mesh((1, m), ("data", "model"))
     common.row("fig11", "mesh", model_ranks=m, b_round=b_round)
@@ -140,6 +195,15 @@ def run(depths: list[int], b_round: int, n_buckets: int, iters: int) -> None:
             _run_depth(dims, mesh, label, cfg, d, b_round, n_buckets, iters)
         _check_equivalence(dims, mesh, cfg, max(depths), b_round, n_buckets,
                            label)
+        # Deliberately overflowing table: capacity ovf_buckets * 2 slots
+        # is far below the window's 2 * b_round writes per block, so
+        # inserts drop mid-window and the overflow-exact repair is on the
+        # measured path (and its equivalence asserted).
+        for d in depths:
+            _run_depth(dims, mesh, f"{label}-ovf", cfg, d, b_round,
+                       ovf_buckets, iters, slots=2)
+        _check_equivalence(dims, mesh, cfg, max(depths), b_round,
+                           ovf_buckets, f"{label}-ovf", slots=2)
 
 
 def main(argv: list[str] | None = None) -> None:
@@ -147,11 +211,15 @@ def main(argv: list[str] | None = None) -> None:
     p.add_argument("--depths", type=int, nargs="+", default=[1, 2, 4, 8])
     p.add_argument("--b-round", type=int, default=128)
     p.add_argument("--n-buckets", type=int, default=1 << 12)
+    p.add_argument("--ovf-buckets", type=int, default=16,
+                   help="bucket count of the deliberately overflowing "
+                        "table (2 slots each)")
     p.add_argument("--iters", type=int, default=3)
     p.add_argument("--json", default=None,
                    help="write the result rows as JSON to this path")
     args = p.parse_args(argv)
-    run(args.depths, args.b_round, args.n_buckets, args.iters)
+    run(args.depths, args.b_round, args.n_buckets, args.iters,
+        ovf_buckets=args.ovf_buckets)
     if args.json:
         common.dump_json(args.json)
 

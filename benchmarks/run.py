@@ -26,6 +26,9 @@ def main() -> None:
                     help="comma-separated subset of: " + ",".join(ALL))
     ap.add_argument("--json", default=None,
                     help="write all result rows as JSON to this path")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized figures (currently scales fig11 down "
+                         "to a smoke run; other figures keep defaults)")
     args = ap.parse_args()
     which = args.only.split(",") if args.only else list(ALL)
 
@@ -61,7 +64,12 @@ def main() -> None:
     if "fig11" in which:
         from benchmarks import fig11_pipeline
         print("== Fig 11: device-side block pipeline ==")
-        fig11_pipeline.main([])
+        # --quick keeps the full depth sweep (the CI artifact asserts the
+        # fused commit at depth 8) on a small block/table size.
+        fig11_pipeline.main(
+            ["--depths", "1", "2", "8", "--b-round", "32",
+             "--n-buckets", "1024", "--iters", "1"] if args.quick else []
+        )
     if "table1" in which:
         from benchmarks import table1_endtoend
         print("== Table I: end-to-end ==")

@@ -136,6 +136,11 @@ class FabricEngine:
         self.total_valid = 0
         self.total_txs = 0
         self._next_block_no = 0
+        # Sticky commit-overflow flag (device scalar, ORed lazily so block
+        # commits stay async; materialized by verify()). A dropped insert
+        # never bumped its key's version, so an overflowed peer must report
+        # unhealthy instead of silently miscounting.
+        self._overflow = jnp.asarray(False)
 
     # -- client --------------------------------------------------------------
 
@@ -214,6 +219,7 @@ class FabricEngine:
                     self.peer_state, blocks.wire[b], cfg.dims, cfg.peer
                 )
                 self.peer_state = res.state
+                self._overflow = self._overflow | res.overflow
                 in_flight.append((blocks.wire[b], bno, prev_head,
                                   res.block_hash, res.valid))
                 if len(in_flight) >= max(cfg.peer.pipeline_depth, 1):
@@ -325,11 +331,19 @@ class FabricEngine:
             return self.window_committer.journal_head
         return np.asarray(self.peer_state.journal_head)
 
+    def overflowed(self) -> bool:
+        """Sticky: any committed block ever dropped a write on a full
+        bucket (mesh-backed committer or the single-host peer path)."""
+        if self.window_committer is not None:
+            return self.window_committer.overflow
+        return bool(np.asarray(self._overflow))
+
     def verify(self) -> dict:
-        """Drain storage, verify the chain, check replica consistency, and
-        prove the recovery path reproduces the live peer."""
+        """Drain storage, verify the chain, check replica consistency,
+        check that no commit ever overflowed a bucket, and prove the
+        recovery path reproduces the live peer."""
         out = {"chain_ok": True, "replica_ok": True, "replay_ok": True,
-               "recovery_ok": True}
+               "recovery_ok": True, "overflow_ok": not self.overflowed()}
         if self.store is not None:
             self.store.drain()
             out["chain_ok"] = self.store.verify_chain()

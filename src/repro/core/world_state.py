@@ -202,6 +202,39 @@ def lookup(state: HashState, keys: jnp.ndarray) -> Lookup:
     return Lookup(found=found, versions=vers, values=vals, slots=slot)
 
 
+def same_key_matrix(fk: jnp.ndarray) -> jnp.ndarray:
+    """same[i, j] = flat writes i and j carry the same paired key.
+
+    (K, 2) -> (K, K) bool. THE canonical pairwise-key compare: the
+    vectorized commit's dedup, the fused window commit's LWW reduction and
+    the pipeline's write planner (pipeline/batched_mvcc.plan_block_writes)
+    must all agree on it byte-for-byte, so they share this one definition
+    (callers add their own EMPTY/active masking).
+    """
+    return (fk[:, 0][None, :] == fk[:, 0][:, None]) & (
+        fk[:, 1][None, :] == fk[:, 1][:, None]
+    )
+
+
+def earlier_mask(k: int) -> jnp.ndarray:
+    """Strict lower triangle: earlier[i, j] = j precedes i in flat write
+    order — the shared tie-break for first-wins dedup and insert ranking."""
+    return jnp.tril(jnp.ones((k, k), bool), k=-1)
+
+
+def bucket_free_slots(state: HashState, keys: jnp.ndarray) -> jnp.ndarray:
+    """Empty-slot count of each key's bucket, (..., 2) -> (...,) u32.
+
+    The overflow planner's slot budget (pipeline/batched_mvcc): replicated
+    and routed fills (state_sharding.sharded_window_fill) must compute it
+    identically or the two paths diverge on which inserts drop.
+    """
+    per_bucket = (state.keys[..., 0] == hashing.EMPTY_KEY).sum(
+        axis=1
+    ).astype(U32)
+    return per_bucket[bucket_of(state, keys)]
+
+
 class CommitResult(NamedTuple):
     state: HashState
     overflow: jnp.ndarray  # () bool — any bucket ran out of slots
@@ -266,10 +299,8 @@ def commit_vectorized(
     b = bucket_of(state, fk).astype(jnp.int32)  # (K,)
 
     # Drop duplicate active keys (keep first occurrence).
-    same_key = (fk[:, 0][None, :] == fk[:, 0][:, None]) & (
-        fk[:, 1][None, :] == fk[:, 1][:, None]
-    )
-    earlier = jnp.tril(jnp.ones((k, k), bool), k=-1)
+    same_key = same_key_matrix(fk)
+    earlier = earlier_mask(k)
     dup = (same_key & earlier & act[None, :]).any(axis=1) & act
     act = act & ~dup
 
@@ -293,11 +324,13 @@ def commit_vectorized(
     new_ver = jnp.where(is_update, look.versions + 1, jnp.uint32(1))
 
     # Conflict-free scatter: all (bucket, slot) pairs distinct among `do`.
+    # Non-applied writes are routed out of range and dropped — a write-back
+    # of the stale original at a guessed slot (argmax of an all-false mask
+    # is 0) would clobber a same-bucket insert once the bucket fills.
+    b_do = jnp.where(do, b, jnp.int32(state.n_buckets))
+
     def scat(arr, upd):
-        return arr.at[b, slot].set(
-            jnp.where(do.reshape((-1,) + (1,) * (upd.ndim - 1)), upd, arr[b, slot]),
-            mode="drop",
-        )
+        return arr.at[b_do, slot].set(upd, mode="drop")
 
     keys = scat(state.keys, fk)
     vers = scat(state.versions, new_ver)
@@ -308,6 +341,81 @@ def commit_vectorized(
 def commit(state, write_keys, write_vals, active, *, sequential=False):
     fn = commit_sequential if sequential else commit_vectorized
     return fn(state, write_keys, write_vals, active)
+
+
+def commit_window(state: HashState, log_keys: jnp.ndarray,
+                  log_vals: jnp.ndarray, log_bumps: jnp.ndarray,
+                  log_new: jnp.ndarray) -> HashState:
+    """Apply a whole window's write log with ONE fused scatter.
+
+    The block pipeline (repro/pipeline) commits D blocks per step; instead
+    of D per-block commit scatters it accumulates a *window write log* and
+    applies it here in one pass. Inputs are flat, block-major (block order
+    == apply order; within a block, flat write order):
+
+      ``log_keys``  (L, 2)  paired write keys;
+      ``log_vals``  (L, VW) write values;
+      ``log_bumps`` (L,) bool — writes that ADVANCED their key's version
+        (valid, non-empty, not dedup-dropped, and NOT dropped by bucket
+        overflow — the planner, pipeline/batched_mvcc.plan_block_writes,
+        mirrors the per-block commit's overflow decisions exactly);
+      ``log_new``   (L,) bool — the subset of bumps that consumed a NEW
+        slot (the first applied insert of a key absent at window start;
+        at most one per key).
+
+    Valid write sets are disjoint *within* a block but not *across* blocks
+    (read-your-write), so the scatter is preceded by a last-writer-wins
+    reduction keyed by (key, block): each key's final version is its
+    window-start version plus its total bump count, its final value is the
+    last bumping write's value, and its slot is the fill-time slot (keys
+    present at window start) or the rank-th empty slot consumed in
+    ``log_new`` order (keys inserted in-window) — exactly the slot the
+    per-block commit sequence would have assigned. Result is byte-identical
+    to applying the blocks one commit at a time, including overflow.
+    """
+    lk = log_keys
+    nonempty = lk[:, 0] != hashing.EMPTY_KEY
+    bumps = log_bumps & nonempty
+    new = log_new & nonempty
+    look = lookup(state, lk)
+    b = bucket_of(state, lk).astype(jnp.int32)  # (L,)
+
+    same_key = same_key_matrix(lk) & nonempty[None, :]
+    l = lk.shape[0]
+    earlier = earlier_mask(l)
+    later = jnp.triu(jnp.ones((l, l), bool), k=1)
+
+    # Per-entry: total bumps of its key over the window, and whether this
+    # entry is the key's LAST bumping write (the LWW survivor).
+    total = (same_key & bumps[None, :]).sum(axis=1).astype(U32)
+    lww = bumps & ~(same_key & later & bumps[None, :]).any(axis=1)
+
+    # Slot of each in-window insert: inserts consume the fill-time empty
+    # slots of their bucket in log order (rank among earlier log_new).
+    same_bucket = b[None, :] == b[:, None]
+    rank = (same_bucket & earlier & new[None, :]).sum(axis=1)
+    empty = state.keys[b][..., 0] == hashing.EMPTY_KEY  # (L, S)
+    cum = jnp.cumsum(empty.astype(jnp.int32), axis=1)
+    slot_new = jnp.argmax(cum == rank[:, None] + 1, axis=1)
+    # Propagate the insert slot to every entry of the same key (<=1 new
+    # entry per key, so a masked max extracts it).
+    ins_slot = jnp.max(
+        jnp.where(same_key & new[None, :], slot_new[None, :], 0), axis=1
+    )
+    slot = jnp.where(look.found, look.slots, ins_slot)
+    new_ver = look.versions + total
+
+    # Non-survivor entries route out of range and are dropped (same
+    # guessed-slot clobbering hazard as commit_vectorized's scatter).
+    b_lww = jnp.where(lww, b, jnp.int32(state.n_buckets))
+
+    def scat(arr, upd):
+        return arr.at[b_lww, slot].set(upd, mode="drop")
+
+    keys = scat(state.keys, lk)
+    vers = scat(state.versions, new_ver)
+    vals = scat(state.values, log_vals)
+    return HashState(keys, vers, vals)
 
 
 def occupancy(state: HashState) -> jnp.ndarray:
@@ -414,11 +522,9 @@ def sorted_commit(
 
     # Dedup within batch (first wins, matching hash-store semantics).
     k = fk.shape[0]
-    same_key = (fk[:, 0][None, :] == fk[:, 0][:, None]) & (
-        fk[:, 1][None, :] == fk[:, 1][:, None]
+    act = act & ~(
+        (same_key_matrix(fk) & earlier_mask(k) & act[None, :]).any(axis=1)
     )
-    earlier = jnp.tril(jnp.ones((k, k), bool), k=-1)
-    act = act & ~((same_key & earlier & act[None, :]).any(axis=1))
 
     # WAL: serialize the batch through a chain hash (durability barrier).
     wal_words = jnp.concatenate([fk, fv], axis=1)

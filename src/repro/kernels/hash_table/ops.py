@@ -73,6 +73,24 @@ def commit(tkeys, tvers, tvals, wkeys, wvals, active,
     return ref.commit_ref(tkeys, tvers, tvals, wkeys, wvals, active)
 
 
+def commit_window(tkeys, tvers, tvals, log_keys, log_vals, log_bumps,
+                  log_new):
+    """Fused window commit (one LWW scatter pass; world_state.commit_window
+    log contract). Over-budget tables dispatch per bucket shard: the log is
+    replayed once per shard with non-owned entries blanked/masked, exactly
+    the owner-shard masking of launch/state_sharding.commit_window_routed.
+    The scatter itself is pure XLA (no per-write Pallas loop to fuse), so
+    there is no separate kernel path. Returns (keys, vers, vals)."""
+    m = _n_shards(tkeys, tvals)
+    if m > 1:
+        return _sharded_commit_window(
+            tkeys, tvers, tvals, log_keys, log_vals, log_bumps, log_new, m
+        )
+    return ref.commit_window_ref(
+        tkeys, tvers, tvals, log_keys, log_vals, log_bumps, log_new
+    )
+
+
 # ---------------------------------------------------------------------------
 # Sharded dispatch: one jitted lax.scan over the bucket shards, each slice
 # within the VMEM budget (ROADMAP "pipeline slice loads with probes": XLA
@@ -145,3 +163,26 @@ def _sharded_commit(tkeys, tvers, tvals, wkeys, wvals, active, n_shards: int):
     return _sharded_commit_scan(
         tkeys, tvers, tvals, wkeys, wvals, active, n_shards, not _on_tpu()
     )
+
+
+@functools.partial(jax.jit, static_argnames=("n_shards",))
+def _sharded_commit_window(tkeys, tvers, tvals, log_keys, log_vals,
+                           log_bumps, log_new, n_shards: int):
+    nb = tkeys.shape[0]
+    sk, sv, sva = ws.split_table(tkeys, tvers, tvals, n_shards)
+    owner = ws.shard_of(nb, n_shards, log_keys)  # (L,)
+
+    def body(_, xs):
+        m, k, v, va = xs
+        mine = owner == m
+        st = ws.commit_window(
+            ws.HashState(k, v, va),
+            jnp.where(mine[:, None], log_keys, jnp.uint32(0)),
+            log_vals, log_bumps & mine, log_new & mine,
+        )
+        return None, (st.keys, st.versions, st.values)
+
+    _, (ks, vs, vls) = jax.lax.scan(
+        body, None, (jnp.arange(n_shards), sk, sv, sva)
+    )
+    return ws.merge_table(ks, vs, vls)

@@ -29,3 +29,13 @@ def commit_ref(tkeys, tvers, tvals, wkeys, wvals, active):
         st, wkeys[:, None, :], wvals[:, None, :], active
     )
     return res.state.keys, res.state.versions, res.state.values, res.overflow
+
+
+def commit_window_ref(tkeys, tvers, tvals, log_keys, log_vals, log_bumps,
+                      log_new):
+    """Fused window commit oracle (one LWW scatter pass over a planned
+    window write log; see world_state.commit_window for the log contract).
+    Returns (keys, vers, vals)."""
+    st = ws.HashState(keys=tkeys, versions=tvers, values=tvals)
+    out = ws.commit_window(st, log_keys, log_vals, log_bumps, log_new)
+    return out.keys, out.versions, out.values

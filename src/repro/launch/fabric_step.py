@@ -28,11 +28,13 @@ HLO — benchmarks/fabric_roofline.py reads it out.
 
 With ``FabricStepConfig.pipeline_depth > 1`` the step takes a WINDOW of D
 blocks per invocation and software-pipelines them through the stages
-(repro/pipeline/schedule.py): one consensus all-gather and one routed MVCC
-read-version gather per window instead of one per block, with commits
-still applied in block order. Depth 1 is this module's single-block body
-below — the byte-identical oracle the pipelined path is pinned against
-(tests/test_pipeline.py).
+(repro/pipeline/schedule.py): one consensus all-gather, one routed fill
+gather (read/write versions + bucket free slots) and ONE fused window
+commit scatter instead of one of each per block, with blocks still taking
+effect in block order. Depth 1 is this module's single-block body below —
+the byte-identical oracle the pipelined path is pinned against, including
+windows whose blocks overflow their buckets (tests/test_pipeline.py); both
+paths latch the commit overflow flag sticky on the mesh state.
 """
 
 from __future__ import annotations
@@ -70,6 +72,10 @@ class FabricMeshState(NamedTuple):
     ledger_head: jnp.ndarray  # (C, 2)
     journal_head: jnp.ndarray  # (C, 2) — state-journal digest chain
     block_no: jnp.ndarray  # (C,) — next block number (journal chain input)
+    overflow: jnp.ndarray  # (C,) u32 — STICKY: any commit ever dropped a
+    # write because a bucket ran out of slots. An overflowed channel's
+    # version accounting is no longer trustworthy (the dropped insert never
+    # bumped), so FabricEngine.verify() reports it unhealthy.
 
 
 def create_mesh_state(n_channels: int, dims: types.FabricDims,
@@ -84,6 +90,7 @@ def create_mesh_state(n_channels: int, dims: types.FabricDims,
         ledger_head=z(n_channels, 2),
         journal_head=z(n_channels, 2),
         block_no=z(n_channels),
+        overflow=z(n_channels),
     )
 
 
@@ -98,7 +105,7 @@ def state_specs(mesh, *, shard_state: bool = False) -> FabricMeshState:
     st = s if shard_state else c
     return FabricMeshState(
         keys=st(3), versions=st(2), values=st(3), log_head=c(1),
-        ledger_head=c(1), journal_head=c(1), block_no=c(0),
+        ledger_head=c(1), journal_head=c(1), block_no=c(0), overflow=c(0),
     )
 
 
@@ -128,12 +135,12 @@ def make_fabric_step(dims: types.FabricDims, cfg: "FabricStepConfig", mesh):
     spw = unmarshal.struct_prefix_words(dims)
 
     def step_local(keys, vers, vals, log_head, ledger_head, journal_head,
-                   block_no, wire, ids):
+                   block_no, overflow, wire, ids):
         # Shapes inside shard_map: (1, NB, S, 2), ..., (1, B_loc, WB).
         keys, vers, vals = keys[0], vers[0], vals[0]
         log_head, ledger_head = log_head[0], ledger_head[0]
         journal_head, bno = journal_head[0], block_no[0]
-        wire, ids = wire[0], ids[0]
+        ovf, wire, ids = overflow[0], wire[0], ids[0]
         b_loc = wire.shape[0]
 
         # --- 1. local syntactic verification (P-II: validate-where-ingested)
@@ -176,11 +183,13 @@ def make_fabric_step(dims: types.FabricDims, cfg: "FabricStepConfig", mesh):
             ).versions.reshape(txb.batch, -1)
 
         # --- 5. MVCC + commit (sharded: owner ranks only; else every
-        # replica applies the same deltas).
-        st2, valid = stages.stage_mvcc_commit(
+        # replica applies the same deltas). The overflow flag latches
+        # sticky: a dropped insert silently miscounted versions before.
+        st2, valid, blk_ovf = stages.stage_mvcc_commit(
             st, txb, ok_ord, cur, cfg,
             n_buckets_global=nb_glob, n_shards=msize,
         )
+        ovf = ovf | blk_ovf.astype(U32)
 
         # Ledger append over the ordered round (content + validity), and
         # the state-journal head over the validated write sets.
@@ -197,7 +206,7 @@ def make_fabric_step(dims: types.FabricDims, cfg: "FabricStepConfig", mesh):
         return (
             st2.keys[None], st2.versions[None], st2.values[None],
             log_head[None], led[None], jrn[None],
-            (bno + jnp.uint32(1))[None], mine[None],
+            (bno + jnp.uint32(1))[None], ovf[None], mine[None],
         )
 
     cspec = state_specs(mesh, shard_state=cfg.shard_state)
@@ -207,10 +216,10 @@ def make_fabric_step(dims: types.FabricDims, cfg: "FabricStepConfig", mesh):
         mesh=mesh,
         in_specs=(cspec.keys, cspec.versions, cspec.values,
                   cspec.log_head, cspec.ledger_head, cspec.journal_head,
-                  cspec.block_no, io_spec, io_spec),
+                  cspec.block_no, cspec.overflow, io_spec, io_spec),
         out_specs=(cspec.keys, cspec.versions, cspec.values, cspec.log_head,
                    cspec.ledger_head, cspec.journal_head, cspec.block_no,
-                   P("data", "model")),
+                   cspec.overflow, P("data", "model")),
         **_SHARD_MAP_NO_CHECK,
     )
 
@@ -219,7 +228,8 @@ def make_fabric_step(dims: types.FabricDims, cfg: "FabricStepConfig", mesh):
             ws.shard_buckets(state.keys.shape[1], msize)  # validate split
         out = step(
             state.keys, state.versions, state.values, state.log_head,
-            state.ledger_head, state.journal_head, state.block_no, wire, ids,
+            state.ledger_head, state.journal_head, state.block_no,
+            state.overflow, wire, ids,
         )
         return FabricMeshState(*out[:-1]), out[-1]
 
@@ -235,10 +245,10 @@ def _make_pipelined(dims: types.FabricDims, cfg: "FabricStepConfig", mesh,
     body = schedule.make_window_body(dims, cfg, msize, depth)
 
     def step_local(keys, vers, vals, log_head, ledger_head, journal_head,
-                   block_no, wire, ids):
+                   block_no, overflow, wire, ids):
         out = body(
             keys[0], vers[0], vals[0], log_head[0], ledger_head[0],
-            journal_head[0], block_no[0], wire[0], ids[0],
+            journal_head[0], block_no[0], overflow[0], wire[0], ids[0],
         )
         return tuple(o[None] for o in out)
 
@@ -249,10 +259,10 @@ def _make_pipelined(dims: types.FabricDims, cfg: "FabricStepConfig", mesh,
         mesh=mesh,
         in_specs=(cspec.keys, cspec.versions, cspec.values,
                   cspec.log_head, cspec.ledger_head, cspec.journal_head,
-                  cspec.block_no, io_spec, io_spec),
+                  cspec.block_no, cspec.overflow, io_spec, io_spec),
         out_specs=(cspec.keys, cspec.versions, cspec.values, cspec.log_head,
                    cspec.ledger_head, cspec.journal_head, cspec.block_no,
-                   P("data", None, "model")),
+                   cspec.overflow, P("data", None, "model")),
         **_SHARD_MAP_NO_CHECK,
     )
 
@@ -266,7 +276,8 @@ def _make_pipelined(dims: types.FabricDims, cfg: "FabricStepConfig", mesh,
             )
         out = step(
             state.keys, state.versions, state.values, state.log_head,
-            state.ledger_head, state.journal_head, state.block_no, wire, ids,
+            state.ledger_head, state.journal_head, state.block_no,
+            state.overflow, wire, ids,
         )
         return FabricMeshState(*out[:-1]), out[-1]
 
@@ -288,8 +299,9 @@ class FabricStepConfig:
     pipeline_depth: int = 1  # P-II device-side block pipeline: blocks in
     # flight per step invocation (repro/pipeline). Depth 1 is the
     # single-block path above; depth D takes a (C, D, B, ...) window,
-    # issues ONE consensus gather + ONE routed MVCC gather per window, and
-    # must stay byte-identical to D depth-1 invocations.
+    # issues ONE consensus gather + ONE routed fill gather + ONE fused
+    # window commit scatter, and must stay byte-identical to D depth-1
+    # invocations — including when blocks overflow their buckets.
 
     @property
     def name(self) -> str:

@@ -103,11 +103,17 @@ class Cost:
     bytes: float = 0.0
     wire: float = 0.0
     coll_counts: Optional[dict] = None
+    # Trip-count-corrected scatter-instruction count: the state-commit
+    # scatters are the only scatters in the fabric programs, so this is
+    # how fig11/CI assert the window commit is fused (scatters must not
+    # scale with pipeline depth).
+    scatters: float = 0.0
 
     def __iadd__(self, o: "Cost"):
         self.flops += o.flops
         self.bytes += o.bytes
         self.wire += o.wire
+        self.scatters += o.scatters
         for k, v in (o.coll_counts or {}).items():
             self.coll_counts = self.coll_counts or {}
             dst = self.coll_counts.setdefault(
@@ -121,6 +127,7 @@ class Cost:
             self.flops * k, self.bytes * k, self.wire * k,
             {kk: {"count": v["count"] * k, "wire_bytes": v["wire_bytes"] * k}
              for kk, v in (self.coll_counts or {}).items()} or None,
+            self.scatters * k,
         )
 
 
@@ -247,6 +254,7 @@ class HloModule:
                 nested = self.comp_cost(m.group(1))
                 c.flops += nested.flops  # dots inside fusions still count
                 c.wire += nested.wire
+                c.scatters += nested.scatters
                 if nested.coll_counts:
                     c += Cost(coll_counts=nested.coll_counts)
             c.bytes += out_bytes + opnd_bytes  # boundary traffic only
@@ -264,6 +272,8 @@ class HloModule:
                 small = 2 * upd
             c.bytes = small + out_bytes if op != "dynamic-update-slice" \
                 else small
+            if op == "scatter":
+                c.scatters = 1.0
             return c
         base = op.split("-start")[0]
         if base in COLLECTIVES:
@@ -338,4 +348,5 @@ def analyze(hlo_text: str) -> dict:
         "bytes": c.bytes,
         "collective_wire_bytes": c.wire,
         "collectives": c.coll_counts or {},
+        "scatter_count": c.scatters,
     }

@@ -39,6 +39,8 @@ split_table / merge_table.
 
 from __future__ import annotations
 
+from typing import NamedTuple
+
 import jax
 import jax.numpy as jnp
 
@@ -89,23 +91,78 @@ def sharded_lookup_versions(local: ws.HashState, keys: jnp.ndarray,
     return jax.lax.psum(jnp.where(mine, vers, jnp.uint32(0)), axis)
 
 
+def sharded_window_fill(local: ws.HashState, keys: jnp.ndarray,
+                        free_keys: jnp.ndarray, n_buckets_global: int,
+                        n_shards: int, *, axis: str = "model"):
+    """Routed fill-time gather for the fused-commit pipeline: versions of a
+    flat (K, 2) key batch AND empty-slot counts of the buckets of a flat
+    (F, 2) key batch, in ONE masked psum over ``axis``.
+
+    The free counts feed the pipeline's overflow planner
+    (pipeline/batched_mvcc.plan_block_writes): a block's insert fits iff
+    its rank among the window's new keys to that bucket is below the
+    bucket's fill-time free-slot count minus the slots already consumed by
+    earlier in-window inserts. Returns (versions (K,) u32, free (F,) u32).
+    """
+    mine_v = owned_mask(keys, n_buckets_global, n_shards, axis=axis)
+    vers = jnp.where(mine_v, ws.lookup(local, keys).versions, jnp.uint32(0))
+    mine_f = owned_mask(free_keys, n_buckets_global, n_shards, axis=axis)
+    free = jnp.where(
+        mine_f, ws.bucket_free_slots(local, free_keys), jnp.uint32(0)
+    )
+    out = jax.lax.psum(jnp.concatenate([vers, free]), axis)
+    return out[: keys.shape[0]], out[keys.shape[0]:]
+
+
+class RoutedCommitResult(NamedTuple):
+    state: ws.HashState
+    overflow: jnp.ndarray  # () bool — any shard overflowed (step contract)
+    shard_overflow: jnp.ndarray  # (M,) bool — WHICH shards filled
+
+
 def sharded_commit(local: ws.HashState, write_keys: jnp.ndarray,
                    write_vals: jnp.ndarray, active: jnp.ndarray,
                    n_buckets_global: int, n_shards: int,
                    *, axis: str = "model",
-                   sequential: bool = False) -> ws.CommitResult:
+                   sequential: bool = False) -> RoutedCommitResult:
     """Apply a block's validated write set on the owning shards only.
 
     Non-owned write keys are blanked to the EMPTY sentinel, which the
     commit's flatten step drops — ``active`` stays per-transaction, so a
     transaction whose writes straddle shards commits each write on its
-    owner. Overflow is OR-reduced across shards.
+    owner. Overflow is reduced with one psum of a rank-one-hot vector, so
+    the result carries both the global OR (the step contract's sticky
+    flag) and the per-shard vector (diagnostics / rebalancing can target
+    the hot shard instead of guessing which of M tables filled).
     """
     mine = owned_mask(write_keys, n_buckets_global, n_shards, axis=axis)
     wk = jnp.where(mine[..., None], write_keys, jnp.uint32(0))
     res = ws.commit(local, wk, write_vals, active, sequential=sequential)
-    ovf = jax.lax.psum(res.overflow.astype(U32), axis) > 0
-    return ws.CommitResult(state=res.state, overflow=ovf)
+    rank = jax.lax.axis_index(axis)
+    onehot = (jnp.arange(n_shards) == rank) & res.overflow
+    shard_ovf = jax.lax.psum(onehot.astype(U32), axis) > 0  # (M,)
+    return RoutedCommitResult(state=res.state, overflow=shard_ovf.any(),
+                              shard_overflow=shard_ovf)
+
+
+def commit_window_routed(local: ws.HashState, log_keys: jnp.ndarray,
+                         log_vals: jnp.ndarray, log_bumps: jnp.ndarray,
+                         log_new: jnp.ndarray, n_buckets_global: int,
+                         n_shards: int, *, axis: str = "model"
+                         ) -> ws.HashState:
+    """Owner-shard variant of :func:`world_state.commit_window`.
+
+    The window write log is replicated (every rank planned it from the
+    same routed fill gather); each rank applies only its owned entries —
+    non-owned keys blank to EMPTY and their bump/new flags are masked, so
+    the local fused scatter touches exactly the owned buckets. Purely
+    local: the single routed collective of the window is the fill gather.
+    """
+    mine = owned_mask(log_keys, n_buckets_global, n_shards, axis=axis)
+    lk = jnp.where(mine[:, None], log_keys, jnp.uint32(0))
+    return ws.commit_window(
+        local, lk, log_vals, log_bumps & mine, log_new & mine
+    )
 
 
 def sharded_digest(local: ws.HashState, *, axis: str = "model"

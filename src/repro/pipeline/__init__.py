@@ -7,14 +7,16 @@ validation pipeline. This subsystem is the mesh-step version of that idea:
     (syntactic checksum + unmarshal, endorsement MAC verify, MVCC + commit)
     factored out of ``launch/fabric_step.step_local`` so the depth-1 path
     and the pipelined path execute the *same* math;
-  * :mod:`repro.pipeline.batched_mvcc` — the window-wide read-version
-    gather: the read sets of all in-flight blocks coalesce into ONE routed
-    all-to-all per pipeline fill (instead of one per block), with the
-    per-block versions reconstructed locally so commits still apply in
-    block order;
+  * :mod:`repro.pipeline.batched_mvcc` — the window-wide fill gather (read
+    versions, write versions AND bucket free-slot counts in ONE routed
+    all-to-all per pipeline fill instead of one per block), the exact
+    in-window version repair, and the overflow-exact write planner that
+    replays each block's commit decisions without touching the table;
   * :mod:`repro.pipeline.schedule`     — the ``lax.scan``-based
     fill/steady/drain software pipeline over a ``(D, ...)`` block window
-    with double-buffered carries for the log/ledger/journal heads;
+    with double-buffered carries for the log/ledger/journal heads and the
+    window write log, finished by ONE fused (key, block) last-writer-wins
+    commit scatter (``world_state.commit_window``) for the whole window;
   * :mod:`repro.pipeline.engine_bridge` — the adapter that lets the
     single-host engine (``core/engine.py``) hand the mesh step a window of
     blocks per round.

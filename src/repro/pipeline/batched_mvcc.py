@@ -1,103 +1,105 @@
-"""Window-batched MVCC read-version gathers + in-window version repair.
+"""Window-batched MVCC state gathers + overflow-exact in-window repair.
 
 The sharded-state fabric step (PR 2) pays one routed masked-psum lookup per
 block to fetch the committed versions of the block's read keys. With D
 blocks in flight, that is D collectives on the critical path — the ROADMAP
-"cross-shard MVCC batching" item. This module coalesces the read sets of
-ALL in-flight blocks into ONE routed gather per pipeline fill
-(:func:`gather_window_versions`), then reconstructs, locally and exactly,
+"cross-shard MVCC batching" item. This module coalesces the read AND write
+sets of ALL in-flight blocks into ONE routed gather per pipeline fill
+(:func:`gather_window_state`), then reconstructs, locally and exactly,
 what a per-block lookup *would* have returned at each block's commit point:
 
-  lookup-after-block-(t-1)  ==  lookup-at-fill  +  (number of effective
+  lookup-after-block-(t-1)  ==  lookup-at-fill  +  (number of APPLIED
   valid writes to that key by in-window blocks 0..t-1)
 
 because every applied write bumps a key's version by exactly one (insert
-writes version 1 == 0 + 1; update writes v + 1). "Effective" mirrors the
-commit implementation in use: the vectorized commit first-wins-dedups
+writes version 1 == 0 + 1; update writes v + 1). "Applied" mirrors the
+commit implementation in use — the vectorized commit first-wins-dedups
 duplicate active keys within a block, the sequential commit bumps once per
-occurrence (:func:`effective_writes` reproduces both).
+occurrence — AND excludes writes dropped by bucket overflow: the fill
+gather also fetches each write bucket's fill-time free-slot count, and
+:func:`plan_block_writes` replays the commit's insert-fits decision
+(rank among the window's new keys to that bucket vs the slots remaining),
+so a dropped insert contributes no bump. Repairs sourced from a dropped
+insert are thereby poisoned exactly — the pipelined path is byte-identical
+to the depth-1 oracle even on windows whose blocks overflow. (This used to
+be a documented PRECONDITION — "no bucket overflow inside a window" — and
+is now a theorem the overflow regression suite in tests/test_pipeline.py
+pins.)
 
 The repair needs the valid bits of earlier in-flight blocks, which only
-exist once those blocks commit — so the schedule threads a *window write
-log* (keys + effective flags of committed-in-window blocks) through its
-scan carry and calls :func:`version_adjustment` right before each block's
-MVCC validation. Commits still apply in block order; only the read gather
-is hoisted and batched.
-
-PRECONDITION — no bucket overflow inside a window: an insert dropped by an
-overflowing commit is still counted as a bump here, whereas the depth-1
-path's next block reads the real (un-bumped) table, so the byte-identical
-guarantee holds only when no block in the window overflows. The depth-1
-step already ignores the overflow flag for its own block; sizing tables so
-blocks never overflow (as all tests/benchmarks do) satisfies both.
-Threading the overflow bit through the window write log is a ROADMAP item.
+exist once those blocks validate — so the schedule threads a *window write
+log* (keys + values + applied/new flags of planned-in-window blocks)
+through its scan carry, calls :func:`version_adjustment` right before each
+block's MVCC validation, and applies the whole log with ONE fused scatter
+(:func:`world_state.commit_window`) after the drain. Blocks still take
+effect in block order; both the read gather and the commit scatter are
+hoisted out of the per-block loop.
 """
 
 from __future__ import annotations
 
+from typing import NamedTuple
+
 import jax.numpy as jnp
 
-from repro.core import hashing, types
+from repro.core import hashing
 from repro.core import world_state as ws
 from repro.launch import state_sharding
 
 U32 = jnp.uint32
+I32 = jnp.int32
 
 
-def gather_window_versions(local: ws.HashState, read_keys: jnp.ndarray,
-                           shard_state: bool, *, n_buckets_global: int,
-                           n_shards: int, axis: str = "model"
-                           ) -> jnp.ndarray:
-    """Fetch committed versions for a whole window's read sets at once.
+class WindowFill(NamedTuple):
+    """Fill-time state snapshot for a window, gathered in one collective."""
 
-    ``read_keys`` (N, RK, 2) — the flattened (D * B) read sets of every
-    in-flight block, in ingest order. Returns (N, RK) u32 versions against
-    the *fill-time* state: one routed all-to-all over ``axis`` when the
-    state is sharded, a single local probe otherwise.
+    read_vers: jnp.ndarray  # (N, RK) u32 — committed versions of read keys
+    write_vers: jnp.ndarray  # (N, WK) u32 — committed versions of write keys
+    write_free: jnp.ndarray  # (N, WK) i32 — empty slots in each write
+    # key's bucket at fill time (the overflow planner's slot budget)
+
+
+def gather_window_state(local: ws.HashState, read_keys: jnp.ndarray,
+                        write_keys: jnp.ndarray, shard_state: bool, *,
+                        n_buckets_global: int, n_shards: int,
+                        axis: str = "model") -> WindowFill:
+    """Fetch a whole window's fill-time read/write state at once.
+
+    ``read_keys`` (N, RK, 2) / ``write_keys`` (N, WK, 2) — the flattened
+    (D * B) read and write sets of every in-flight block, in ingest order.
+    Returns fill-time versions for both plus per-write-bucket free-slot
+    counts: one routed masked psum over ``axis`` when the state is
+    sharded (reads, writes and free counts ride the same collective), a
+    single local probe otherwise.
     """
     n = read_keys.shape[0]
-    flat = read_keys.reshape(-1, 2)
+    rflat = read_keys.reshape(-1, 2)
+    wflat = write_keys.reshape(-1, 2)
+    allk = jnp.concatenate([rflat, wflat])
     if shard_state:
-        vers = state_sharding.sharded_lookup_versions(
-            local, flat, n_buckets_global, n_shards, axis=axis
+        vers, free = state_sharding.sharded_window_fill(
+            local, allk, wflat, n_buckets_global, n_shards, axis=axis
         )
     else:
-        vers = ws.lookup(local, flat).versions
-    return vers.reshape(n, -1)
-
-
-def effective_writes(txb: types.TxBatch, valid: jnp.ndarray,
-                     sequential: bool):
-    """A committed block's version-bumping writes, flattened.
-
-    Returns (keys (B*WK, 2), bumps (B*WK,) bool) where ``bumps`` marks the
-    write slots that advanced a key's version: valid transaction, non-empty
-    key, and — for the vectorized commit — not a duplicate of an earlier
-    active slot (first wins, exactly ``world_state.commit_vectorized``'s
-    dedup). The sequential commit bumps every occurrence, so no dedup.
-    """
-    fk = txb.write_keys.reshape(-1, 2)
-    k = fk.shape[0]
-    wk = txb.write_keys.shape[1]
-    act = jnp.repeat(valid, wk) & (fk[:, 0] != hashing.EMPTY_KEY)
-    if not sequential:
-        same_key = (fk[:, 0][None, :] == fk[:, 0][:, None]) & (
-            fk[:, 1][None, :] == fk[:, 1][:, None]
-        )
-        earlier = jnp.tril(jnp.ones((k, k), bool), k=-1)
-        dup = (same_key & earlier & act[None, :]).any(axis=1) & act
-        act = act & ~dup
-    return fk, act
+        vers = ws.lookup(local, allk).versions
+        free = ws.bucket_free_slots(local, wflat)
+    nr = rflat.shape[0]
+    return WindowFill(
+        read_vers=vers[:nr].reshape(n, -1),
+        write_vers=vers[nr:].reshape(n, -1),
+        write_free=free.astype(I32).reshape(n, -1),
+    )
 
 
 def version_adjustment(read_keys: jnp.ndarray, wlog_keys: jnp.ndarray,
                        wlog_bumps: jnp.ndarray) -> jnp.ndarray:
-    """Per-read-key count of effective earlier in-window writes.
+    """Per-read-key count of applied earlier in-window writes.
 
     ``read_keys`` (B, RK, 2); ``wlog_keys`` (..., 2) / ``wlog_bumps``
-    (...,) — the window write log (rows of not-yet-committed blocks are
-    zero, so they contribute nothing). Returns (B, RK) u32 to ADD to the
-    fill-time versions.
+    (...,) — the window write log (rows of not-yet-planned blocks are
+    zero, so they contribute nothing; bump flags already exclude writes
+    dropped by overflow). Returns (B, RK) u32 to ADD to the fill-time
+    versions.
     """
     lk = wlog_keys.reshape(-1, 2)
     lb = wlog_bumps.reshape(-1)
@@ -108,3 +110,78 @@ def version_adjustment(read_keys: jnp.ndarray, wlog_keys: jnp.ndarray,
         & lb[None, None, :]
     )  # (B, RK, L)
     return eq.sum(axis=-1).astype(U32)
+
+
+class BlockWritePlan(NamedTuple):
+    """One block's write outcomes, flattened — the window write log row."""
+
+    keys: jnp.ndarray  # (B*WK, 2)
+    bumps: jnp.ndarray  # (B*WK,) bool — writes that advance the version
+    new: jnp.ndarray  # (B*WK,) bool — bumps that consume a NEW slot
+    dropped: jnp.ndarray  # (B*WK,) bool — writes dropped by overflow
+
+
+def plan_block_writes(write_keys: jnp.ndarray, valid: jnp.ndarray,
+                      sequential: bool, fill_vers: jnp.ndarray,
+                      fill_free: jnp.ndarray, wl_keys: jnp.ndarray,
+                      wl_bumps: jnp.ndarray, wl_new: jnp.ndarray, *,
+                      n_buckets_global: int) -> BlockWritePlan:
+    """Replay one block's commit decisions against fill state + the log.
+
+    ``write_keys`` (B, WK, 2) and ``valid`` (B,) are the block's (ordered)
+    write sets and MVCC validity bits; ``fill_vers`` / ``fill_free``
+    (B, WK) the fill-time versions and bucket free-slot counts of the
+    write keys; ``wl_*`` the window write log of earlier blocks. Mirrors
+    the commit implementation in use exactly:
+
+      * a key EXISTS at this block's commit point iff its fill version
+        plus its applied in-window bumps is nonzero (versions never
+        decrease and 0 means absent) — existing keys always apply;
+      * a NEW key's insert fits iff its rank among this block's new keys
+        to the same bucket is below the bucket's fill-time free slots
+        minus the slots consumed by earlier in-window inserts (``wl_new``)
+        — unfit inserts are DROPPED, exactly the per-block overflow;
+      * duplicate active keys within the block: the vectorized commit
+        applies only the first occurrence (later ones bump nothing), the
+        sequential commit bumps every occurrence of an applied key.
+    """
+    wk = write_keys.shape[1]
+    fk = write_keys.reshape(-1, 2)
+    k = fk.shape[0]
+    act = jnp.repeat(valid, wk) & (fk[:, 0] != hashing.EMPTY_KEY)
+
+    # The shared dedup/ranking definitions (world_state) keep this replay
+    # structurally in lockstep with the commit implementations.
+    same_key = ws.same_key_matrix(fk)
+    earlier = ws.earlier_mask(k)
+    first = act & ~(same_key & earlier & act[None, :]).any(axis=1)
+    eff = act if sequential else first  # occurrences that try to apply
+
+    # Committed version of each write key right before this block.
+    adj = version_adjustment(
+        write_keys, wl_keys, wl_bumps
+    ).reshape(-1)
+    exists = (fill_vers.reshape(-1) + adj) > 0
+
+    # Slot budget: fill-time free slots minus in-window consumed slots.
+    bucket = ws.bucket_of(n_buckets_global, fk)
+    lbuck = ws.bucket_of(n_buckets_global, wl_keys.reshape(-1, 2))
+    used = (
+        (bucket[:, None] == lbuck[None, :]) & wl_new.reshape(-1)[None, :]
+    ).sum(axis=1)
+    remaining = fill_free.reshape(-1) - used.astype(I32)
+
+    is_new_first = first & ~exists
+    same_bucket = bucket[None, :] == bucket[:, None]
+    rank = (same_bucket & earlier & is_new_first[None, :]).sum(axis=1)
+    fits = rank < remaining
+    first_applied = first & (exists | fits)
+    # An occurrence applies iff its key's first occurrence applied
+    # (sequential later occurrences update the just-inserted key).
+    key_ok = (same_key & first_applied[None, :]).any(axis=1)
+    return BlockWritePlan(
+        keys=fk,
+        bumps=eff & key_ok,
+        new=is_new_first & fits,
+        dropped=eff & ~key_ok,
+    )

@@ -129,5 +129,12 @@ class MeshWindowCommitter:
     def journal_head(self) -> np.ndarray:
         return np.asarray(self.state.journal_head[0])
 
+    @property
+    def overflow(self) -> bool:
+        """Sticky: any commit ever dropped a write on a full bucket —
+        the channel's version accounting can no longer be trusted and
+        ``FabricEngine.verify()`` reports it unhealthy."""
+        return bool(np.asarray(self.state.overflow[0]))
+
     def block_until_ready(self) -> None:
         jax.block_until_ready(self.state.ledger_head)

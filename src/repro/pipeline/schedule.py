@@ -9,26 +9,34 @@ validation stages per invocation, overlapping stages of different blocks:
             of all D * B_loc ingested transactions at once, ONE consensus
             all-gather of the whole window's published words / ids / flags
             (instead of one per block), the window decode, and the ONE
-            routed MVCC read-version gather per fill
-            (repro/pipeline/batched_mvcc.py). Then the first block's
-            prepare stage primes the double buffer.
-  STEADY  — a ``lax.scan`` whose iteration i runs the COMMIT stage of
+            routed fill gather per window — read versions, write-key
+            versions AND write-bucket free-slot counts ride the same
+            collective (repro/pipeline/batched_mvcc.py). Then the first
+            block's prepare stage primes the double buffer.
+  STEADY  — a ``lax.scan`` whose iteration i runs the VALIDATE stage of
             block i (from the carried double buffer) next to the PREPARE
             stage of block i+1 (from the scan's xs). The two are
             data-independent, so block i's sequential MVCC bit-scan +
-            owner-shard commit overlaps block i+1's ordering, decode
+            write planning overlaps block i+1's ordering, decode
             permutation, conflict matrix and digest work.
-  DRAIN   — the last block's commit stage, peeled after the scan.
+  DRAIN   — the last block's validate stage, peeled after the scan, then
+            the ONE fused window commit: the whole window write log is
+            applied with a single (key, block) last-writer-wins scatter
+            (``world_state.commit_window`` / the routed owner-shard
+            variant) instead of one commit scatter per block.
 
 PREPARE is a block's embarrassingly parallel precursor work (consensus
 order + inverse, ordered views, conflict matrix, ledger/log digest
-material); COMMIT is the genuinely sequential tail (in-window version
-repair, MVCC scan, state commit, log/ledger/journal head folds) — the
+material); VALIDATE is the genuinely sequential tail (in-window version
+repair, MVCC scan, write planning, log/ledger/journal head folds) — the
 heads and the window write log ride the scan carry, double-buffered with
-the prepared block. Commits apply strictly in block order, so the result
-is byte-identical to running the depth-1 step D times
-(tests/test_pipeline.py pins validity bits, all three heads, block
-numbers, and state arrays).
+the prepared block. The write PLAN replays each block's commit decisions
+(insert-or-update, slot budget, bucket overflow) against the fill
+snapshot + the log, so no block touches the table until the fused commit;
+a dropped insert contributes no version bump and the validity bits stay
+byte-identical to running the depth-1 step D times — including windows
+whose blocks overflow (tests/test_pipeline.py pins validity bits, all
+three heads, block numbers, the sticky overflow flag, and state arrays).
 """
 
 from __future__ import annotations
@@ -40,6 +48,7 @@ import jax.numpy as jnp
 
 from repro.core import hashing, mvcc, orderer, types, unmarshal
 from repro.core import world_state as ws
+from repro.launch import state_sharding
 from repro.pipeline import batched_mvcc, stages
 
 U32 = jnp.uint32
@@ -51,6 +60,8 @@ class Prepared(NamedTuple):
     txb: types.TxBatch  # ordered, (B, ...) fields
     ok_ord: jnp.ndarray  # (B,) checksum & endorse flags, ordered
     cur_ord: jnp.ndarray  # (B, RK) fill-time read versions, ordered
+    wv_ord: jnp.ndarray  # (B, WK) fill-time write-key versions, ordered
+    free_ord: jnp.ndarray  # (B, WK) fill-time bucket free slots, ordered
     conflict: jnp.ndarray  # (B, B) MVCC conflict matrix
     inv: jnp.ndarray  # (B,) inverse order permutation (back to ingest)
     ledger_mat: jnp.ndarray  # (B,) ordered-row digests for the ledger fold
@@ -62,14 +73,17 @@ def make_window_body(dims: types.FabricDims, cfg, msize: int, depth: int):
 
     Local input shapes (channel dim already peeled by the caller):
       keys (NB_loc, S, 2), versions, values, log/ledger/journal heads (2,),
-      block_no () u32, wire (D, B_loc, WB) u8, ids (D, B_loc, 2) u32.
-    Returns (state arrays..., heads..., block_no, valid (D, B_loc)) with
-    ``valid`` in ingest order for this rank's slice of every block.
+      block_no () u32, overflow () u32, wire (D, B_loc, WB) u8,
+      ids (D, B_loc, 2) u32.
+    Returns (state arrays..., heads..., block_no, overflow, valid
+    (D, B_loc)) with ``valid`` in ingest order for this rank's slice of
+    every block.
     """
     spw = (unmarshal.struct_prefix_words(dims)
            if cfg.separate_metadata else None)
 
-    def prepare(log_rows, ids_b, ok_b, cur_b, txb_b) -> Prepared:
+    def prepare(log_rows, ids_b, ok_b, cur_b, wv_b, free_b, txb_b
+                ) -> Prepared:
         order = orderer.consensus_order(ids_b)
         inv = jnp.argsort(order)
         txb_t = jax.tree.map(lambda a: a[order], txb_b)
@@ -82,11 +96,12 @@ def make_window_body(dims: types.FabricDims, cfg, msize: int, depth: int):
                    if cfg.pipelined else log_rows)
         return Prepared(
             txb=txb_t, ok_ord=ok_b[order], cur_ord=cur_b[order],
+            wv_ord=wv_b[order], free_ord=free_b[order],
             conflict=conf, inv=inv, ledger_mat=ledger_mat, log_mat=log_mat,
         )
 
     def body(keys, vers, vals, log_head, ledger_head, journal_head,
-             block_no, wire, ids):
+             block_no, overflow, wire, ids):
         d, b_loc, wb = wire.shape
         assert d == depth
         st = ws.HashState(keys=keys, versions=vers, values=vals)
@@ -110,33 +125,39 @@ def make_window_body(dims: types.FabricDims, cfg, msize: int, depth: int):
         ok_glob = jax.lax.all_gather(ok_loc, "model", axis=1, tiled=True)
         b_round = ids_glob.shape[1]
 
-        # Window decode (ingest order) — feeds the batched version gather.
+        # Window decode (ingest order) — feeds the batched fill gather.
         txb_win = stages.decode_published(
             log_glob.reshape(d * b_round, -1), dims, cfg.separate_metadata
         )
 
-        # ---- FILL: ONE routed MVCC read-version gather per window --------
-        cur_win = batched_mvcc.gather_window_versions(
-            st, txb_win.read_keys, cfg.shard_state,
+        # ---- FILL: ONE routed fill gather per window (read + write
+        # versions + write-bucket free slots in the same collective) ------
+        fill = batched_mvcc.gather_window_state(
+            st, txb_win.read_keys, txb_win.write_keys, cfg.shard_state,
             n_buckets_global=nb_glob, n_shards=msize,
-        ).reshape(d, b_round, -1)
+        )
+        cur_win = fill.read_vers.reshape(d, b_round, -1)
+        wv_win = fill.write_vers.reshape(d, b_round, -1)
+        free_win = fill.write_free.reshape(d, b_round, -1)
         txb_dw = jax.tree.map(
             lambda a: a.reshape(d, b_round, *a.shape[1:]), txb_win
         )
 
-        # ---- COMMIT stage (block bt, from the double-buffered prep) ------
+        # ---- VALIDATE stage (block bt, from the double-buffered prep) ----
         wk = dims.wk
+        lsz = b_round * wk
 
-        def commit_stage(cstate, prep: Prepared, bt):
-            st, log_h, led_h, jrn_h, bno, wl_keys, wl_bumps = cstate
+        def validate_stage(cstate, prep: Prepared, bt):
+            (log_h, led_h, jrn_h, bno, ovf,
+             wl_keys, wl_vals, wl_bumps, wl_new) = cstate
             adj = batched_mvcc.version_adjustment(
                 prep.txb.read_keys, wl_keys, wl_bumps
             )
-            st2, valid = stages.stage_mvcc_commit(
-                st, prep.txb, prep.ok_ord, prep.cur_ord + adj, cfg,
-                n_buckets_global=nb_glob, n_shards=msize,
+            res = mvcc.validate(
+                prep.txb, prep.cur_ord + adj, checksum_ok=prep.ok_ord,
                 conflict=prep.conflict,
             )
+            valid = res.valid
             log_h2 = stages.fold_log_head(
                 log_h, prep.log_mat, cfg, material_is_digests=cfg.pipelined
             )
@@ -144,27 +165,38 @@ def make_window_body(dims: types.FabricDims, cfg, msize: int, depth: int):
                     else stages.fold_log_chain)
             led_h2 = fold(led_h, prep.ledger_mat ^ valid.astype(U32))
             jrn_h2 = stages.advance_journal_head(jrn_h, bno, prep.txb, valid)
-            fk, bumps = batched_mvcc.effective_writes(
-                prep.txb, valid, cfg.sequential_commit
+            plan = batched_mvcc.plan_block_writes(
+                prep.txb.write_keys, valid, cfg.sequential_commit,
+                prep.wv_ord, prep.free_ord, wl_keys, wl_bumps, wl_new,
+                n_buckets_global=nb_glob,
             )
-            wl_keys = wl_keys.at[bt].set(fk)
-            wl_bumps = wl_bumps.at[bt].set(bumps)
+            wl_keys = wl_keys.at[bt].set(plan.keys)
+            wl_vals = wl_vals.at[bt].set(
+                prep.txb.write_vals.reshape(lsz, -1)
+            )
+            wl_bumps = wl_bumps.at[bt].set(plan.bumps)
+            wl_new = wl_new.at[bt].set(plan.new)
+            ovf = ovf | plan.dropped.any().astype(U32)
             mine = jax.lax.dynamic_slice_in_dim(
                 valid[prep.inv], rank * b_loc, b_loc
             )
             return (
-                (st2, log_h2, led_h2, jrn_h2, bno + jnp.uint32(1),
-                 wl_keys, wl_bumps),
+                (log_h2, led_h2, jrn_h2, bno + jnp.uint32(1), ovf,
+                 wl_keys, wl_vals, wl_bumps, wl_new),
                 mine,
             )
 
-        # ---- SCHEDULE: fill P(0); steady C(i) || P(i+1); drain C(D-1) ----
-        per_block = (log_glob, ids_glob, ok_glob, cur_win, txb_dw)
+        # ---- SCHEDULE: fill P(0); steady V(i) || P(i+1); drain V(D-1),
+        # then the ONE fused window commit --------------------------------
+        per_block = (log_glob, ids_glob, ok_glob, cur_win, wv_win, free_win,
+                     txb_dw)
         prep0 = prepare(*jax.tree.map(lambda a: a[0], per_block))
         cstate = (
-            st, log_head, ledger_head, journal_head, block_no,
-            jnp.zeros((d, b_round * wk, 2), U32),  # window write log: keys
-            jnp.zeros((d, b_round * wk), bool),  # ... effective-bump flags
+            log_head, ledger_head, journal_head, block_no, overflow,
+            jnp.zeros((d, lsz, 2), U32),  # window write log: keys
+            jnp.zeros((d, lsz, dims.vw), U32),  # ... values
+            jnp.zeros((d, lsz), bool),  # ... applied-bump flags
+            jnp.zeros((d, lsz), bool),  # ... slot-consuming-insert flags
         )
 
         if depth > 1:
@@ -176,9 +208,9 @@ def make_window_body(dims: types.FabricDims, cfg, msize: int, depth: int):
             def steady(carry, x):
                 cstate, prep = carry
                 bt, pin = x
-                cstate2, mine = commit_stage(cstate, prep, bt)
-                prep_next = prepare(*pin)  # independent of commit_stage:
-                # block bt's commit overlaps block bt+1's prepare.
+                cstate2, mine = validate_stage(cstate, prep, bt)
+                prep_next = prepare(*pin)  # independent of validate_stage:
+                # block bt's validation overlaps block bt+1's prepare.
                 return (cstate2, prep_next), mine
 
             (cstate, prep_last), valid_head = jax.lax.scan(
@@ -187,12 +219,26 @@ def make_window_body(dims: types.FabricDims, cfg, msize: int, depth: int):
         else:
             prep_last, valid_head = prep0, jnp.zeros((0, b_loc), bool)
 
-        cstate, valid_tail = commit_stage(cstate, prep_last, depth - 1)
-        st2, log_head, ledger_head, journal_head, block_no, _, _ = cstate
+        cstate, valid_tail = validate_stage(cstate, prep_last, depth - 1)
+        (log_head, ledger_head, journal_head, block_no, overflow,
+         wl_keys, wl_vals, wl_bumps, wl_new) = cstate
+
+        # ---- COMMIT: one fused (key, block) LWW scatter for the window ---
+        lk = wl_keys.reshape(-1, 2)
+        lv = wl_vals.reshape(-1, dims.vw)
+        lb = wl_bumps.reshape(-1)
+        ln = wl_new.reshape(-1)
+        if cfg.shard_state:
+            st2 = state_sharding.commit_window_routed(
+                st, lk, lv, lb, ln, nb_glob, msize
+            )
+        else:
+            st2 = ws.commit_window(st, lk, lv, lb, ln)
+
         valid_mine = jnp.concatenate(
             [valid_head, valid_tail[None]], axis=0
         )  # (D, B_loc) ingest order, this rank's slice
         return (st2.keys, st2.versions, st2.values, log_head, ledger_head,
-                journal_head, block_no, valid_mine)
+                journal_head, block_no, overflow, valid_mine)
 
     return body

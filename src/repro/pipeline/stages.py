@@ -180,7 +180,9 @@ def stage_mvcc_commit(st: ws.HashState, txb: types.TxBatch, ok_ord, cur,
     from the window-batched gather plus in-window adjustment
     (:mod:`repro.pipeline.batched_mvcc`). ``conflict``: optional
     precomputed conflict matrix (the pipeline's prepare stage computes it a
-    step early). Returns (new state, valid (B,) bool).
+    step early). Returns (new state, valid (B,) bool, overflow () bool) —
+    the depth-1 step latches ``overflow`` sticky on the mesh state (a
+    dropped insert is a silent version-accounting error otherwise).
     """
     res = mvcc.validate(txb, cur, checksum_ok=ok_ord, conflict=conflict)
     if cfg.shard_state:
@@ -193,4 +195,4 @@ def stage_mvcc_commit(st: ws.HashState, txb: types.TxBatch, ok_ord, cur,
             st, txb.write_keys, txb.write_vals, res.valid,
             sequential=cfg.sequential_commit,
         )
-    return cres.state, res.valid
+    return cres.state, res.valid, cres.overflow

@@ -57,7 +57,7 @@ def test_chain_verify_and_replay():
     eng, _ = _run(engine.FASTFABRIC, n=100)
     out = eng.verify()
     assert out == {"chain_ok": True, "replica_ok": True, "replay_ok": True,
-                   "recovery_ok": True}
+                   "recovery_ok": True, "overflow_ok": True}
     eng.store.close()
 
 

@@ -84,6 +84,92 @@ class TestHashTableKernel:
                                    jnp.ones((5,), bool))
         assert bool(ovf_k) == bool(ovf_r) is True
 
+    @settings(deadline=None, max_examples=40)
+    @given(
+        nb=st.sampled_from([1, 2, 4]),
+        s=st.sampled_from([1, 2]),
+        keys=st.lists(
+            st.tuples(st.integers(1, 8), st.integers(1, 4)),
+            min_size=1, max_size=12,
+        ),
+        act_bits=st.lists(st.booleans(), min_size=12, max_size=12),
+    )
+    def test_commit_overflow_parity_to_saturation(self, nb, s, keys,
+                                                  act_bits):
+        """Satellite: drive both commit implementations to bucket
+        saturation (keys drawn from a tiny pool into <= 8 slots, so most
+        cases overflow) and pin identical (state, overflow) outputs —
+        duplicate keys, interleaved drops, partial bucket fills and all."""
+        k = len(keys)
+        wk = jnp.asarray(np.array(keys, dtype=np.uint32))
+        wv = jnp.asarray(
+            (np.arange(k, dtype=np.uint32) + 1)[:, None].repeat(2, axis=1)
+        )
+        act = jnp.asarray(np.array(act_bits[:k], dtype=bool))
+        tk = jnp.zeros((nb, s, 2), jnp.uint32)
+        tv = jnp.zeros((nb, s), jnp.uint32)
+        tva = jnp.zeros((nb, s, 2), jnp.uint32)
+        got = htk.commit(tk, tv, tva, wk, wv, act, interpret=True)
+        want = htr.commit_ref(tk, tv, tva, wk, wv, act)
+        for name, g, w in zip(("keys", "versions", "values", "overflow"),
+                              got, want):
+            np.testing.assert_array_equal(
+                np.asarray(g), np.asarray(w), err_msg=name
+            )
+
+    def test_ops_commit_window_sharded_dispatch(self, monkeypatch):
+        """ops.commit_window routes over-budget tables through the owner-
+        shard partition; the sharded sweep must equal the full-table fused
+        commit (world_state.commit_window) exactly."""
+        from repro.core import world_state as ws
+        from repro.kernels.hash_table import ops as ht_ops
+
+        monkeypatch.setattr(ht_ops, "VMEM_BUDGET_BYTES", 2048)
+        nb, s, vw = 64, 2, 2
+        tk = jnp.zeros((nb, s, 2), jnp.uint32)
+        tv = jnp.zeros((nb, s), jnp.uint32)
+        tva = jnp.zeros((nb, s, vw), jnp.uint32)
+        assert ht_ops._n_shards(tk, tva) > 1
+        # A two-block window log: block 0 inserts 40 keys, block 1 updates
+        # the first 20 of them (bump, not new) and inserts 20 more. One
+        # key per bucket (low bits = bucket) keeps the hand-built log
+        # consistent: every claimed insert really fits.
+        mk = lambda lo, hi: np.stack(
+            [np.arange(lo, hi, dtype=np.uint32)
+             | (RNG.integers(1, 1 << 24, hi - lo).astype(np.uint32) << 6),
+             RNG.integers(1, 1 << 32, hi - lo, dtype=np.uint32)], axis=1)
+        k0 = mk(0, 40)
+        k1 = np.concatenate([k0[:20], mk(40, 60)])
+        log_keys = jnp.asarray(np.concatenate([k0, k1]))
+        log_vals = jnp.asarray(
+            RNG.integers(0, 1 << 32, (80, vw), dtype=np.uint32)
+        )
+        bumps = jnp.ones((80,), bool)
+        new = jnp.asarray(
+            np.concatenate([np.ones(40), np.zeros(20), np.ones(20)]) > 0
+        )
+        got = ht_ops.commit_window(
+            tk, tv, tva, log_keys, log_vals, bumps, new
+        )
+        want = ws.commit_window(
+            ws.HashState(tk, tv, tva), log_keys, log_vals, bumps, new
+        )
+        for name, g, w in zip(("keys", "versions", "values"), got, want):
+            np.testing.assert_array_equal(
+                np.asarray(g), np.asarray(w), err_msg=name
+            )
+        # LWW semantics: twice-written keys end at version 2 with block 1's
+        # value; once-written keys at version 1.
+        look = ws.lookup(ws.HashState(*got), jnp.asarray(k1))
+        assert bool(look.found.all())
+        np.testing.assert_array_equal(
+            np.asarray(look.versions),
+            np.concatenate([np.full(20, 2), np.ones(20)]).astype(np.uint32),
+        )
+        np.testing.assert_array_equal(
+            np.asarray(look.values), np.asarray(log_vals[40:])
+        )
+
 
 class TestMvccKernel:
     @pytest.mark.parametrize("b,conflict", [(8, 0.0), (32, 0.3), (64, 0.8),

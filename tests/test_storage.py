@@ -181,7 +181,7 @@ def test_engine_recovery_matches_live_and_full_replay():
     np.testing.assert_array_equal(full.state_digest, live)
     assert eng.verify() == {
         "chain_ok": True, "replica_ok": True, "replay_ok": True,
-        "recovery_ok": True,
+        "recovery_ok": True, "overflow_ok": True,
     }
     eng.store.close()
 
