@@ -17,7 +17,7 @@ import time
 from benchmarks import common
 
 ALL = ("fig3", "fig4", "fig5_6", "fig7", "fig8", "fig9", "fig10", "fig11",
-       "table1", "roofline")
+       "fig12", "table1", "roofline")
 
 
 def main() -> None:
@@ -69,6 +69,16 @@ def main() -> None:
         fig11_pipeline.main(
             ["--depths", "1", "2", "8", "--b-round", "32",
              "--n-buckets", "1024", "--iters", "1"] if args.quick else []
+        )
+    if "fig12" in which:
+        from benchmarks import fig12_rebalance
+        print("== Fig 12: elastic state (overflow-driven shard split) ==")
+        # --quick shrinks the sweep but keeps the static-overflows /
+        # elastic-stays-healthy contrast the CI artifact asserts.
+        fig12_rebalance.main(
+            ["--rounds", "10", "--round-txs", "50", "--n-buckets", "128",
+             "--slots", "8", "--n-shards", "2", "--grow-free-slots", "4"]
+            if args.quick else []
         )
     if "table1" in which:
         from benchmarks import table1_endtoend

@@ -39,6 +39,31 @@ U32 = jnp.uint32
 
 
 @dataclasses.dataclass(frozen=True)
+class ResizePolicy:
+    """Between-rounds elastic-state policy: when to halve/double the table.
+
+    Checked after every round (and so, with a window committer, always on
+    a window boundary — the window write log assumes one partition per
+    window). Overflow strikes when a single BUCKET fills, so the grow
+    triggers watch per-shard minimum free slots (the early-warning signal)
+    and the sticky overflow bitmask (the repair signal: migrate the hot
+    shard's bucket range into a bigger table instead of fail-stopping the
+    channel), not just mean occupancy.
+    """
+
+    grow_free_slots: int = 1  # double when any shard's fullest bucket has
+    # <= this many empty slots left (0 disables the pressure trigger)
+    grow_fill: float = 0.0  # ... or when any shard's occupancy fraction
+    # exceeds this (0 disables)
+    grow_on_overflow: bool = True  # ... or when the sticky bitmask sets
+    # (capacity repair; the flag itself stays latched — health is honest)
+    shrink_fill: float = 0.0  # halve when TOTAL occupancy drops below this
+    # fraction of the halved table (0 disables shrinking)
+    max_buckets: int = 1 << 24
+    min_buckets: int = 8
+
+
+@dataclasses.dataclass(frozen=True)
 class EngineConfig:
     dims: types.FabricDims = types.TEST_DIMS
     orderer: orderer.OrdererConfig = orderer.OrdererConfig()
@@ -57,6 +82,13 @@ class EngineConfig:
     snapshot_dir: str | None = None
     journal_dir: str | None = None
     prune_chain: bool = True
+    # Elastic state: between-rounds halve/double of the world-state table,
+    # journaled as re-anchor records (None = static table, the old
+    # fail-stop-on-overflow behavior). snapshot_shards partitions each
+    # snapshot into per-shard files (a mesh-backed committer overrides it
+    # with its own shard count).
+    resize_policy: ResizePolicy | None = None
+    snapshot_shards: int = 1
 
     @property
     def name(self) -> str:
@@ -89,12 +121,6 @@ class FabricEngine:
     exercised at scale by the mesh-role dry-run)."""
 
     def __init__(self, cfg: EngineConfig, *, window_committer=None):
-        if window_committer is not None and cfg.snapshot_every_blocks:
-            raise ValueError(
-                "snapshot_every_blocks is not supported with a window "
-                "committer: snapshots cover the single-host peer state, "
-                "which a mesh-backed committer owns instead"
-            )
         if cfg.snapshot_every_blocks and not (
             cfg.store_blocks and cfg.peer.journal and cfg.peer.hash_state
         ):
@@ -139,8 +165,21 @@ class FabricEngine:
         # Sticky commit-overflow flag (device scalar, ORed lazily so block
         # commits stay async; materialized by verify()). A dropped insert
         # never bumped its key's version, so an overflowed peer must report
-        # unhealthy instead of silently miscounting.
+        # unhealthy instead of silently miscounting — and the flag is
+        # PERSISTED via the snapshot manifest / re-anchor records, so a
+        # peer that overflows, snapshots and restarts stays unhealthy.
         self._overflow = jnp.asarray(False)
+        # Elastic state: current layout (resize epochs move it away from
+        # cfg.n_buckets) and the resize history of this process.
+        self.n_buckets = (window_committer.n_buckets
+                          if window_committer is not None else cfg.n_buckets)
+        self.reanchor_log: list = []
+        # Overflow bits an overflow-triggered grow already repaired: the
+        # sticky mask never un-latches, so the repair trigger compares
+        # against this to fire once per NEWLY overflowed shard (not once
+        # per process, and not once per round).
+        self._repaired_bits = 0
+        self._restored_overflow_bits = 0
 
     # -- client --------------------------------------------------------------
 
@@ -239,6 +278,7 @@ class FabricEngine:
             )
             n_valid += int(valid.sum())
 
+        self._maybe_resize()
         self._maybe_snapshot()
         self.total_valid += n_valid
         self.total_txs += n
@@ -273,13 +313,120 @@ class FabricEngine:
             self.store.submit(bno, prev_head, block_hash, wire_b, valid)
         return wire_b, valid
 
+    # -- elastic state (resize epochs) -----------------------------------------
+
+    @property
+    def n_shards(self) -> int:
+        """Bucket shards of snapshot manifests / digest trees: the mesh
+        committer's shard count when one is attached, else the configured
+        host-side partition."""
+        if self.window_committer is not None:
+            return self.window_committer.n_shards
+        return self.cfg.snapshot_shards
+
+    def _state_view(self) -> ws.HashState:
+        return (self.window_committer.hash_state()
+                if self.window_committer is not None
+                else self.peer_state.hash_state)
+
+    def _tree_head(self, state: ws.HashState | None = None) -> np.ndarray:
+        st = self._state_view() if state is None else state
+        return np.asarray(ws.tree_head(st, self.n_shards))
+
+    def overflow_bits(self) -> int:
+        """Sticky per-shard overflow bitmask (bit m == shard m filled).
+        Restored bits (a restart re-latching a persisted mask) OR in, so a
+        mesh peer's which-shard information survives a host-side restore."""
+        if self.window_committer is not None:
+            bits = int(np.asarray(self.window_committer.state.overflow[0]))
+        else:
+            bits = int(bool(np.asarray(self._overflow)))
+        return bits | self._restored_overflow_bits
+
+    def _maybe_resize(self) -> dict | None:
+        """The between-rounds policy hook: grow under bucket pressure or
+        after an overflow (capacity repair instead of fail-stop), shrink a
+        mostly-empty table. Rounds are window boundaries, so a window
+        committer is always drained here."""
+        pol = self.cfg.resize_policy
+        if pol is None:
+            return None
+        st = self._state_view()
+        m = self.n_shards
+        occ = np.asarray(ws.shard_occupancy(st, m))
+        cap = st.n_buckets // m * st.slots
+        min_free = int(np.asarray(ws.shard_min_free(st, m)).min())
+        grow = (
+            (pol.grow_free_slots and min_free <= pol.grow_free_slots)
+            or (pol.grow_fill and occ.max() / cap >= pol.grow_fill)
+            # Capacity repair: one overflow-triggered grow per NEWLY
+            # latched shard bit (the bitmask is sticky, so comparing
+            # against the repaired mask keeps a later overflow of a
+            # different shard repairable without re-firing every round).
+            or (pol.grow_on_overflow
+                and self.overflow_bits() & ~self._repaired_bits)
+        )
+        if grow and self.n_buckets * 2 <= pol.max_buckets:
+            self._repaired_bits |= self.overflow_bits()
+            return self.resize(self.n_buckets * 2)
+        if (pol.shrink_fill and self.n_buckets // 2 >= pol.min_buckets
+                and occ.sum() < pol.shrink_fill
+                * (self.n_buckets // 2) * st.slots):
+            return self.resize(self.n_buckets // 2)
+        return None
+
+    def resize(self, new_n_buckets: int) -> dict:
+        """Halve/double the world state NOW (between rounds) and commit a
+        re-anchor record for the epoch. The endorser replica follows (its
+        capacity must track the peer's or the replicas diverge on which
+        inserts drop), and the journal is re-anchored at the drained
+        boundary so verify/replay cross the resize."""
+        if self.store is not None:
+            self.store.drain()  # journal tip must be at the boundary
+        old_nb = self.n_buckets
+        hot = (self.window_committer.hot_shard()
+               if self.window_committer is not None else self._hot_shard())
+        if self.window_committer is not None:
+            info = self.window_committer.resize(new_n_buckets)
+            tree, bits = info.tree_head, info.overflow_bits
+        else:
+            res = ws.resize(self.peer_state.hash_state, new_n_buckets)
+            self.peer_state = self.peer_state._replace(hash_state=res.state)
+            self._overflow = self._overflow | res.overflow
+            tree, bits = None, None
+        eres = ws.resize(self.endorser_state, new_n_buckets)
+        self.endorser_state = eres.state
+        self.n_buckets = new_n_buckets
+        if tree is None:
+            tree, bits = self._tree_head(), self.overflow_bits()
+        if self.journal is not None:
+            self.journal.append_reanchor(
+                self._next_block_no - 1,
+                old_n_buckets=old_nb, new_n_buckets=new_n_buckets,
+                n_shards=self.n_shards, tree_head=tree, overflow_bits=bits,
+            )
+        info = {
+            "block_no": self._next_block_no - 1, "old_n_buckets": old_nb,
+            "new_n_buckets": new_n_buckets, "overflow_bits": bits,
+            "hot_shard": hot,
+        }
+        self.reanchor_log.append(info)
+        return info
+
+    def _hot_shard(self) -> int:
+        return ws.hot_shard(
+            self.overflow_bits(),
+            ws.shard_occupancy(self._state_view(), self.n_shards),
+        )
+
     # -- durability layer (storage/) -------------------------------------------
 
     def _maybe_snapshot(self) -> None:
         """Snapshot cadence: dump world state every ``snapshot_every_blocks``
         committed blocks; prune chain + journal with a one-snapshot lag (the
         previous snapshot stays fully recoverable even if the newest one is
-        lost or torn)."""
+        lost or torn). Snapshots are per-shard files + manifest, and the
+        manifest persists the sticky overflow bitmask + re-anchor head."""
         cfg = self.cfg
         if not cfg.snapshot_every_blocks:
             return
@@ -289,10 +436,14 @@ class FabricEngine:
             return
         self.store.drain()  # journal must cover every shipped block
         snap = snapshot.take(
-            self.peer_state.hash_state,
+            self._state_view(),
             block_no=tip,
-            journal_head=self.peer_state.journal_head,
-            ledger_head=self.peer_state.ledger_head,
+            journal_head=self._peer_journal_head(),
+            ledger_head=self._ledger_head(),
+            n_shards=self.n_shards,
+            overflow_bits=self.overflow_bits(),
+            reanchor_head=(self.journal.reanchor_head
+                           if self.journal is not None else None),
         )
         self.snapshots.append(snap)
         if cfg.snapshot_dir is not None:
@@ -305,7 +456,8 @@ class FabricEngine:
             self.snapshots = self.snapshots[-2:]
 
     def recover(self) -> recovery.RecoveryResult:
-        """Cold-start recovery from the latest snapshot + journal suffix."""
+        """Cold-start recovery from the latest snapshot + journal suffix
+        (crossing any resize re-anchors in it)."""
         if self.journal is None:
             raise recovery.RecoveryError("engine has no journal")
         self.store.drain()
@@ -316,6 +468,69 @@ class FabricEngine:
             slots=self.cfg.slots,
             value_width=self.cfg.dims.vw,
         )
+
+    @classmethod
+    def restore(cls, cfg: EngineConfig) -> "FabricEngine":
+        """Restart a peer from its persisted snapshot + journal spill.
+
+        Requires ``journal_dir`` and ``snapshot_dir``; the latest complete
+        snapshot must cover the journal tip (the engine snapshots after the
+        round that produced the tip, so a crash between rounds restores
+        exactly). The restored peer re-latches the persisted sticky
+        overflow bitmask — overflowing, snapshotting and restarting no
+        longer launders the health flag — and resumes on the persisted
+        (post-resize) layout.
+        """
+        if cfg.journal_dir is None or cfg.snapshot_dir is None:
+            raise recovery.RecoveryError(
+                "restore requires journal_dir and snapshot_dir"
+            )
+        eng = cls(cfg)
+        jrnl = state_journal.StateJournal.load(cfg.dims, cfg.journal_dir)
+        eng.journal = jrnl
+        if eng.store is not None:
+            eng.store.close()
+            eng.store = ledger.BlockStore(journal=jrnl)
+        snap = snapshot.latest(cfg.snapshot_dir)
+        if snap is None:
+            raise recovery.RecoveryError(
+                f"no complete snapshot in {cfg.snapshot_dir}"
+            )
+        rec = recovery.recover(
+            jrnl, snapshot=snap, n_buckets=cfg.n_buckets, slots=cfg.slots,
+            value_width=cfg.dims.vw,
+        )
+        if rec.block_no != snap.block_no:
+            raise recovery.RecoveryError(
+                f"journal tip {rec.block_no} past the latest snapshot "
+                f"{snap.block_no}: the suffix's ledger head is not "
+                "recoverable without the block spill"
+            )
+        eng.snapshots = [snap]
+        eng.peer_state = eng.peer_state._replace(
+            hash_state=rec.state,
+            ledger_head=jnp.asarray(snap.ledger_head),
+            journal_head=jnp.asarray(rec.journal_head),
+            block_no=jnp.uint32(rec.block_no + 1),
+        )
+        eng.endorser_state = ws.HashState(
+            keys=jnp.array(rec.state.keys, copy=True),
+            versions=jnp.array(rec.state.versions, copy=True),
+            values=jnp.array(rec.state.values, copy=True),
+        )
+        eng.n_buckets = rec.n_buckets
+        # Re-latch the persisted mask WITH its which-shard bits, and mark
+        # those bits as already repaired: the pre-crash policy (or its
+        # operator) had its chance — a restart must not trigger one more
+        # doubling per boot on bits that can never un-latch. A shard that
+        # newly overflows AFTER the restart still fires the repair.
+        eng._restored_overflow_bits = rec.overflow_bits
+        eng._repaired_bits = rec.overflow_bits
+        eng._next_block_no = rec.block_no + 1
+        if eng.store is not None:
+            eng.store.base_block_no = snap.block_no
+            eng.store.base_hash = np.asarray(snap.ledger_head)
+        return eng
 
     # -- durability checks (used by tests/examples) ----------------------------
 
@@ -331,12 +546,15 @@ class FabricEngine:
             return self.window_committer.journal_head
         return np.asarray(self.peer_state.journal_head)
 
+    def _ledger_head(self) -> np.ndarray:
+        if self.window_committer is not None:
+            return np.asarray(self.window_committer.state.ledger_head[0])
+        return np.asarray(self.peer_state.ledger_head)
+
     def overflowed(self) -> bool:
         """Sticky: any committed block ever dropped a write on a full
         bucket (mesh-backed committer or the single-host peer path)."""
-        if self.window_committer is not None:
-            return self.window_committer.overflow
-        return bool(np.asarray(self._overflow))
+        return bool(self.overflow_bits())
 
     def verify(self) -> dict:
         """Drain storage, verify the chain, check replica consistency,
@@ -369,9 +587,19 @@ class FabricEngine:
                 out["chain_ok"] = False
                 out["replay_ok"] = False
             else:
+                # Replay crosses resize epochs: the recorded halve/doubles
+                # apply at their boundaries, so the replayed table lands on
+                # the live (post-resize) layout.
+                replay_from = (self.store.base_block_no
+                               if start is not None else -1)
+                resize_at: dict = {}
+                for r in self.reanchor_log:
+                    if r["block_no"] > replay_from:
+                        resize_at.setdefault(r["block_no"], []).append(
+                            r["new_n_buckets"])
                 replayed = self.store.replay_state(
                     self.cfg.dims, self.cfg.n_buckets, self.cfg.slots,
-                    start_state=start,
+                    start_state=start, resize_at=resize_at,
                 )
                 out["replay_ok"] = bool(
                     np.array_equal(

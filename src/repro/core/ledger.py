@@ -226,15 +226,34 @@ class BlockStore:
     def replay_state(
         self, dims: types.FabricDims, n_buckets: int, slots: int,
         start_state: world_state.HashState | None = None,
+        resize_at: dict[int, int] | None = None,
     ) -> world_state.HashState:
         """Rebuild world state from the chain (crash recovery for P-I).
 
         ``start_state``: when the prefix was pruned, replay resumes from the
-        covering snapshot's state instead of genesis.
+        covering snapshot's state instead of genesis. ``resize_at`` maps a
+        boundary block number to the GLOBAL bucket count(s) the elastic
+        state resized to right after that block — an int, or a list of
+        ints applied in order when several resizes landed at the same
+        boundary (a lossy shrink between two grows must replay lossy, so
+        the steps cannot be collapsed into their composition). Sourced
+        from the engine re-anchor log / journal re-anchor records; replay
+        crosses the resize epochs and lands on the live layout.
         """
         st = (world_state.create(n_buckets, slots, dims.vw)
               if start_state is None else start_state)
+        resize_at = {
+            b: list(nb) if isinstance(nb, (list, tuple)) else [nb]
+            for b, nb in (resize_at or {}).items()
+        }
+
+        def cross(st, boundary):
+            for nb in resize_at.pop(boundary, ()):
+                st = world_state.resize(st, nb).state
+            return st
+
         for sb in self.chain:
+            st = cross(st, sb.block_no - 1)
             dec = unmarshal.unmarshal(jnp.asarray(sb.wire), dims)
             st = world_state.commit_vectorized(
                 st,
@@ -242,4 +261,7 @@ class BlockStore:
                 dec.txb.write_vals,
                 jnp.asarray(sb.valid),
             ).state
+            st = cross(st, sb.block_no)
+        for boundary in sorted(resize_at):
+            st = cross(st, boundary)
         return st

@@ -135,6 +135,111 @@ def merge_table(skeys, svers, svals):
     )
 
 
+class ResizeResult(NamedTuple):
+    state: HashState
+    overflow: jnp.ndarray  # () bool — a merged bucket exceeded its slots
+    # (only possible when SHRINKING; the extra entries are dropped and the
+    # caller must latch its sticky overflow flag)
+
+
+def resize(state: HashState, new_n_buckets: int) -> ResizeResult:
+    """Rehash the table into ``new_n_buckets`` buckets (power of two).
+
+    The elastic-state primitive: growing doubles the bucket space a key
+    hashes into (one more low bit of the key selects the bucket), shrinking
+    halves it. Entries are regrouped by their new bucket and compacted in
+    *flat order* (old global bucket ascending, slot ascending) — which for a
+    GROW is exactly the insertion order a fresh run on the bigger table
+    would have used: new bucket g' draws only from old bucket
+    g' & (nb_old - 1), whose slot order IS first-insert order (updates keep
+    their slot; there are no deletes). Growing a table that never
+    overflowed is therefore ARRAY-exact: byte-identical keys/versions/
+    values to replaying the whole history on the big layout from block 0
+    (tests/test_rebalance.py pins this through the live pipeline).
+
+    Shrinking merges bucket pairs (old buckets g and g + nb_new land in g)
+    in old-bucket order; a merged bucket may exceed ``slots``, in which
+    case the extras are DROPPED and ``overflow`` reports it — shrink is
+    content-exact only while the merged table still fits.
+    """
+    if new_n_buckets < 1 or new_n_buckets & (new_n_buckets - 1):
+        raise ValueError("n_buckets must be a power of two")
+    nb, s, vw = state.n_buckets, state.slots, state.value_width
+    k = nb * s
+    fk = state.keys.reshape(k, 2)
+    fv = state.versions.reshape(k)
+    fval = state.values.reshape(k, vw)
+    occ = fk[:, 0] != hashing.EMPTY_KEY
+    newb = jnp.where(
+        occ, fk[:, 0] & jnp.uint32(new_n_buckets - 1),
+        jnp.uint32(new_n_buckets),
+    ).astype(jnp.int32)
+
+    # Group by destination bucket, stable in flat order; rank within the
+    # group is the destination slot.
+    order = jnp.lexsort((jnp.arange(k), newb))
+    sb = newb[order]
+    rank = jnp.arange(k) - jnp.searchsorted(sb, sb, side="left")
+    live = sb < new_n_buckets
+    overflow = (live & (rank >= s)).any()
+    dest_b = jnp.where(live & (rank < s), sb, jnp.int32(new_n_buckets))
+
+    def scat(arr, width_shape):
+        out = jnp.zeros((new_n_buckets, s, *width_shape), U32)
+        return out.at[dest_b, rank].set(arr[order], mode="drop")
+
+    return ResizeResult(
+        HashState(
+            keys=scat(fk, (2,)),
+            versions=scat(fv, ()),
+            values=scat(fval, (vw,)),
+        ),
+        overflow,
+    )
+
+
+def shard_occupancy(state: HashState, n_shards: int) -> jnp.ndarray:
+    """Occupied entries per high-bit bucket shard, (M,) i32 — the resize
+    policy's fill signal (the table arrays may be a host-side global view
+    or a concatenation of shard slices; the reshape IS the partition)."""
+    shard_buckets(state.n_buckets, n_shards)
+    occ = (state.keys[..., 0] != hashing.EMPTY_KEY).sum(axis=1)  # (NB,)
+    return occ.reshape(n_shards, -1).sum(axis=1).astype(jnp.int32)
+
+
+def shard_min_free(state: HashState, n_shards: int) -> jnp.ndarray:
+    """Fewest empty slots of any bucket, per shard, (M,) i32. Overflow
+    strikes when a single bucket fills, so this (not mean occupancy) is
+    the early-warning signal a grow policy should watch."""
+    shard_buckets(state.n_buckets, n_shards)
+    free = (state.keys[..., 0] == hashing.EMPTY_KEY).sum(axis=1)  # (NB,)
+    return free.reshape(n_shards, -1).min(axis=1).astype(jnp.int32)
+
+
+def hot_shard(overflow_bits: int, occupancy) -> int:
+    """The shard a grow should relieve: the first latched overflow bit if
+    any, else the fullest shard by occupancy ((M,) counts). THE one
+    definition — the engine's host path and the mesh committer must
+    record the same hot shard for the same state."""
+    if overflow_bits:
+        return (overflow_bits & -overflow_bits).bit_length() - 1
+    return int(jnp.argmax(jnp.asarray(occupancy)))
+
+
+def tree_head(state: HashState, n_shards: int) -> jnp.ndarray:
+    """(2,) u32 digest-tree head of a (merged/global) table under the
+    ``n_shards`` high-bit partition: per-shard state_digest folded by
+    shard_digest_tree. THE layout-binding commitment — snapshot manifests,
+    journal re-anchor records and their verifiers must all compute it
+    through this one helper or re-anchor verification silently breaks."""
+    sk, sv, sva = split_table(state.keys, state.versions, state.values,
+                              n_shards)
+    return shard_digest_tree(jnp.stack([
+        state_digest(HashState(sk[m], sv[m], sva[m]))
+        for m in range(n_shards)
+    ]))
+
+
 def shards_for_budget(table_bytes: int, budget_bytes: int, n_buckets: int
                       ) -> int:
     """Fewest power-of-two shards that bring a table slice under budget."""

@@ -72,10 +72,14 @@ class FabricMeshState(NamedTuple):
     ledger_head: jnp.ndarray  # (C, 2)
     journal_head: jnp.ndarray  # (C, 2) — state-journal digest chain
     block_no: jnp.ndarray  # (C,) — next block number (journal chain input)
-    overflow: jnp.ndarray  # (C,) u32 — STICKY: any commit ever dropped a
-    # write because a bucket ran out of slots. An overflowed channel's
-    # version accounting is no longer trustworthy (the dropped insert never
-    # bumped), so FabricEngine.verify() reports it unhealthy.
+    overflow: jnp.ndarray  # (C,) u32 — STICKY per-shard BITMASK: bit m set
+    # == shard m (bit 0 for replicated state) ever dropped a write because
+    # a bucket ran out of slots. An overflowed channel's version accounting
+    # is no longer trustworthy (the dropped insert never bumped), so
+    # FabricEngine.verify() reports it unhealthy — and the elastic-state
+    # resize policy reads the hot shard straight off the set bits
+    # (state_sharding.overflow_bits; both step paths produce identical
+    # masks, pinned by the oracle-equivalence tests).
 
 
 def create_mesh_state(n_channels: int, dims: types.FabricDims,
@@ -183,13 +187,14 @@ def make_fabric_step(dims: types.FabricDims, cfg: "FabricStepConfig", mesh):
             ).versions.reshape(txb.batch, -1)
 
         # --- 5. MVCC + commit (sharded: owner ranks only; else every
-        # replica applies the same deltas). The overflow flag latches
-        # sticky: a dropped insert silently miscounted versions before.
+        # replica applies the same deltas). The overflow bitmask latches
+        # sticky: a dropped insert silently miscounted versions before,
+        # and bit m names the hot shard the resize policy should split.
         st2, valid, blk_ovf = stages.stage_mvcc_commit(
             st, txb, ok_ord, cur, cfg,
             n_buckets_global=nb_glob, n_shards=msize,
         )
-        ovf = ovf | blk_ovf.astype(U32)
+        ovf = ovf | blk_ovf
 
         # Ledger append over the ordered round (content + validity), and
         # the state-journal head over the validated write sets.

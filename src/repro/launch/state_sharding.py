@@ -165,6 +165,131 @@ def commit_window_routed(local: ws.HashState, log_keys: jnp.ndarray,
     )
 
 
+def overflow_bits(shard_overflow: jnp.ndarray) -> jnp.ndarray:
+    """Per-shard overflow vector (M,) bool -> sticky BITMASK () u32.
+
+    Bit m set == shard m dropped a write on a full bucket. The mesh state
+    latches this word sticky (FabricMeshState.overflow), so the resize
+    policy can pick the hot shard without a second collective; M <= 32
+    (one mesh axis of model ranks)."""
+    m = shard_overflow.shape[0]
+    if m > 32:
+        raise ValueError(f"overflow bitmask supports <= 32 shards, got {m}")
+    return (
+        shard_overflow.astype(U32) << jnp.arange(m, dtype=U32)
+    ).sum(dtype=U32)
+
+
+def dropped_write_bits(keys: jnp.ndarray, dropped: jnp.ndarray,
+                       n_buckets_global: int, n_shards: int) -> jnp.ndarray:
+    """Overflow bitmask of a window's dropped writes, () u32.
+
+    ``keys`` (L, 2) / ``dropped`` (L,) bool are the write planner's log row
+    (pipeline/batched_mvcc.plan_block_writes) — replicated on every rank,
+    so the owner-shard fold needs NO collective and must equal the bitmask
+    the depth-1 routed commit produces (bit m == shard m dropped)."""
+    owner = ws.shard_of(n_buckets_global, n_shards, keys)  # (L,)
+    onehot = (
+        (owner[:, None] == jnp.arange(n_shards)) & dropped[:, None]
+    ).any(axis=0)  # (M,)
+    return overflow_bits(onehot)
+
+
+class RoutedResizeResult(NamedTuple):
+    state: ws.HashState  # this rank's NEW local bucket shard
+    overflow: jnp.ndarray  # () bool — any shard dropped entries (shrink)
+    shard_overflow: jnp.ndarray  # (M,) bool — WHICH shards dropped
+
+
+def _butterfly_perms(n_shards: int, grow: bool):
+    """The two table swaps of a halve/double step.
+
+    Growing, new shard j (and its high twin j + M/2) rebuilds from the
+    ADJACENT old pair (2j, 2j+1); shrinking, new shard j rebuilds from the
+    old pair (j//2, j//2 + M/2). Each direction is two true permutations
+    over ``model`` (every rank sends its full table once per permute)."""
+    h = n_shards // 2
+    if grow:
+        pa = ([(2 * j, j) for j in range(h)]
+              + [(2 * j + 1, j + h) for j in range(h)])
+        pb = ([(2 * j + 1, j) for j in range(h)]
+              + [(2 * j, j + h) for j in range(h)])
+    else:
+        pa = ([(j, 2 * j) for j in range(h)]
+              + [(j + h, 2 * j + 1) for j in range(h)])
+        pb = ([(j, 2 * j + 1) for j in range(h)]
+              + [(j + h, 2 * j) for j in range(h)])
+    return pa, pb
+
+
+def resize_sharded(local: ws.HashState, new_nb_loc: int,
+                   n_buckets_global: int, n_shards: int,
+                   *, axis: str = "model") -> RoutedResizeResult:
+    """Halve/double every shard's bucket count under a live mesh.
+
+    Runs INSIDE a shard_map body. The high-bucket-bit partition makes a
+    global resize a *local reshape + neighbor exchange*: when the global
+    bucket count doubles, the keys of the adjacent old shard pair
+    (2j, 2j+1) redistribute exactly onto new shards j and j + M/2 (the new
+    top bucket bit is the new top SHARD bit), and symmetrically for a
+    halve. So each rank swaps whole tables with its butterfly partner (two
+    ppermutes — 2x table bytes on the wire, independent of M; an
+    all-gather would ship M-1x and transiently materialize the full table
+    per rank), masks the concatenated pair down to the keys it owns under
+    the new layout, and compacts with :func:`world_state.resize`. The
+    concatenated pair is ascending in old global bucket order, so the
+    grow stays ARRAY-exact shard by shard (world_state.resize docstring).
+
+    ``new_nb_loc`` must be 2x or x/2 the current local bucket count.
+    Shrink can overflow a merged bucket; the per-shard flags are reduced
+    with one one-hot psum (same pattern as sharded_commit).
+    """
+    nb_loc = local.n_buckets
+    if new_nb_loc not in (2 * nb_loc, nb_loc // 2):
+        raise ValueError(
+            f"resize_sharded steps by 2x only: nb_loc={nb_loc} -> "
+            f"{new_nb_loc}"
+        )
+    grow = new_nb_loc == 2 * nb_loc
+    new_nb_glob = n_buckets_global * 2 if grow else n_buckets_global // 2
+    ws.shard_buckets(new_nb_glob, n_shards)  # validate the new partition
+
+    if n_shards == 1:
+        res = ws.resize(local, new_nb_loc)
+        return RoutedResizeResult(
+            state=res.state, overflow=res.overflow,
+            shard_overflow=res.overflow[None],
+        )
+
+    rank = jax.lax.axis_index(axis)
+    pa, pb = _butterfly_perms(n_shards, grow)
+    swap = lambda perm: jax.tree.map(
+        lambda x: jax.lax.ppermute(x, axis, perm), local
+    )
+    a, b = swap(pa), swap(pb)
+    # Ascending old-global-bucket order: growing, rank j < M/2 received the
+    # LOW source (2j) via pa; shrinking, even ranks received the low source
+    # (r//2) via pa. The twin rank got them swapped.
+    lo_is_a = (rank < n_shards // 2) if grow else (rank % 2 == 0)
+    sel = lambda x, y: jnp.where(lo_is_a, x, y)
+    pair = jax.tree.map(
+        lambda x, y: jnp.concatenate([sel(x, y), sel(y, x)]), a, b
+    )  # (2 * nb_loc, S, ...)
+
+    # Keep only the keys this rank owns under the NEW layout, then compact.
+    mine = ws.shard_of(new_nb_glob, n_shards, pair.keys) == rank
+    masked = pair._replace(
+        keys=jnp.where(mine[..., None], pair.keys, jnp.uint32(0))
+    )
+    res = ws.resize(masked, new_nb_loc)
+
+    onehot = (jnp.arange(n_shards) == rank) & res.overflow
+    shard_ovf = jax.lax.psum(onehot.astype(U32), axis) > 0
+    return RoutedResizeResult(
+        state=res.state, overflow=shard_ovf.any(), shard_overflow=shard_ovf
+    )
+
+
 def sharded_digest(local: ws.HashState, *, axis: str = "model"
                    ) -> jnp.ndarray:
     """(2,) head of the sharded state: deterministic tree over the

@@ -26,8 +26,22 @@ import numpy as np
 from repro.core import ledger, types
 from repro.core import world_state as ws
 from repro.launch import fabric_step as fs
+from repro.launch import state_sharding
 
 U32 = jnp.uint32
+
+
+class ReanchorInfo(NamedTuple):
+    """What one resize epoch commits to the journal (storage/journal
+    append_reanchor): the boundary block, the layout change, the
+    post-resize digest-tree head, and the sticky overflow bitmask."""
+
+    block_no: int  # last committed block — the resize lands after it
+    old_n_buckets: int  # global bucket count before
+    new_n_buckets: int  # ... and after
+    n_shards: int
+    tree_head: np.ndarray  # (2,) u32 — shard_digest_tree of the new table
+    overflow_bits: int  # sticky per-shard overflow bitmask at the boundary
 
 
 class WindowResult(NamedTuple):
@@ -77,10 +91,22 @@ class MeshWindowCommitter:
         )
         self.prev_hash = jnp.zeros((2,), U32)
         self._steps: dict[int, object] = {}
+        self._resizes: dict[int, object] = {}
 
     @property
     def depth(self) -> int:
         return max(self.cfg.pipeline_depth, 1)
+
+    @property
+    def n_shards(self) -> int:
+        """Bucket shards of the channel state: the mesh ``model`` size when
+        the state is sharded, else 1 (replicated)."""
+        return self.mesh.shape["model"] if self.cfg.shard_state else 1
+
+    @property
+    def n_buckets(self) -> int:
+        """CURRENT global bucket count (resize epochs change it)."""
+        return self.state.keys.shape[1]
 
     def _step_for(self, d: int):
         if d not in self._steps:
@@ -110,6 +136,84 @@ class MeshWindowCommitter:
             block_hash=np.asarray(hashes),
         )
 
+    # -- elastic state: resize epochs --------------------------------------
+
+    def _resize_program(self, new_nb: int):
+        """Jitted halve/double of the channel state for THIS mesh. Sharded
+        configs run the butterfly neighbor exchange inside shard_map;
+        replicated configs resize every rank's copy locally."""
+        if new_nb in self._resizes:
+            return self._resizes[new_nb]
+        nb = self.n_buckets
+        msize = self.mesh.shape["model"]
+        if self.cfg.shard_state:
+            nb_loc, new_nb_loc = nb // msize, new_nb // msize
+
+            def body(keys, vers, vals):
+                local = ws.HashState(keys[0], vers[0], vals[0])
+                res = state_sharding.resize_sharded(
+                    local, new_nb_loc, nb, msize
+                )
+                bits = state_sharding.overflow_bits(res.shard_overflow)
+                return (res.state.keys[None], res.state.versions[None],
+                        res.state.values[None], bits[None])
+
+            spec = fs.state_specs(self.mesh, shard_state=True)
+            prog = jax.jit(fs._shard_map(
+                body, mesh=self.mesh,
+                in_specs=(spec.keys, spec.versions, spec.values),
+                out_specs=(spec.keys, spec.versions, spec.values,
+                           spec.overflow),
+                **fs._SHARD_MAP_NO_CHECK,
+            ))
+        else:
+
+            def prog_fn(keys, vers, vals):
+                res = jax.vmap(
+                    lambda k, v, va: ws.resize(
+                        ws.HashState(k, v, va), new_nb
+                    )
+                )(keys, vers, vals)
+                return (res.state.keys, res.state.versions,
+                        res.state.values, res.overflow.astype(U32))
+
+            prog = jax.jit(prog_fn)
+        self._resizes[new_nb] = prog
+        return prog
+
+    def resize(self, new_n_buckets: int) -> ReanchorInfo:
+        """Halve/double the channel's world state between windows.
+
+        The epoch boundary of the elastic state: drains the in-flight
+        window (the window write log assumes one partition per window, so
+        with ``pipeline_depth > 1`` a resize may only land here, between
+        ``commit_window`` calls), exchanges/compacts the bucket shards,
+        latches any shrink overflow sticky, and returns the
+        :class:`ReanchorInfo` the engine must commit to its journal. The
+        next window re-jits for the new shapes automatically (jit caches
+        per input shape).
+        """
+        old_nb = self.n_buckets
+        if new_n_buckets == old_nb:
+            raise ValueError(f"resize to current size {old_nb}")
+        self.block_until_ready()  # window boundary: nothing in flight
+        keys, vers, vals, bits = self._resize_program(new_n_buckets)(
+            self.state.keys, self.state.versions, self.state.values
+        )
+        self.state = self.state._replace(
+            keys=keys, versions=vers, values=vals,
+            overflow=self.state.overflow | bits,
+        )
+        self._resizes.clear()  # programs are shape-specific to old_nb
+        return ReanchorInfo(
+            block_no=int(np.asarray(self.state.block_no[0])) - 1,
+            old_n_buckets=old_nb,
+            new_n_buckets=new_n_buckets,
+            n_shards=self.n_shards,
+            tree_head=self.tree_head(),
+            overflow_bits=int(np.asarray(self.state.overflow[0])),
+        )
+
     # -- durability-check surface (engine.verify) --------------------------
 
     def hash_state(self) -> ws.HashState:
@@ -125,6 +229,12 @@ class MeshWindowCommitter:
     def state_digest(self) -> np.ndarray:
         return np.asarray(ws.state_digest(self.hash_state()))
 
+    def tree_head(self) -> np.ndarray:
+        """(2,) u32 digest-tree head over the per-shard digests — the
+        layout-binding commitment re-anchor records and snapshot manifests
+        carry (world_state.tree_head)."""
+        return np.asarray(ws.tree_head(self.hash_state(), self.n_shards))
+
     @property
     def journal_head(self) -> np.ndarray:
         return np.asarray(self.state.journal_head[0])
@@ -134,7 +244,26 @@ class MeshWindowCommitter:
         """Sticky: any commit ever dropped a write on a full bucket —
         the channel's version accounting can no longer be trusted and
         ``FabricEngine.verify()`` reports it unhealthy."""
-        return bool(np.asarray(self.state.overflow[0]))
+        return bool(np.asarray(self.state.overflow[0]) != 0)
+
+    @property
+    def shard_overflow(self) -> np.ndarray:
+        """(M,) bool — WHICH bucket shards ever filled, decoded from the
+        sticky bitmask. The resize policy splits while this is still all
+        False (pressure-triggered) or repairs capacity once a bit sets."""
+        bits = int(np.asarray(self.state.overflow[0]))
+        return np.array(
+            [(bits >> m) & 1 for m in range(self.n_shards)], dtype=bool
+        )
+
+    def hot_shard(self) -> int:
+        """The shard a grow should relieve (recorded in the engine's
+        re-anchor log): the first overflowed shard if any bit is set,
+        else the fullest shard by occupancy (world_state.hot_shard)."""
+        return ws.hot_shard(
+            int(np.asarray(self.state.overflow[0])),
+            ws.shard_occupancy(self.hash_state(), self.n_shards),
+        )
 
     def block_until_ready(self) -> None:
         jax.block_until_ready(self.state.ledger_head)

@@ -176,7 +176,13 @@ def make_window_body(dims: types.FabricDims, cfg, msize: int, depth: int):
             )
             wl_bumps = wl_bumps.at[bt].set(plan.bumps)
             wl_new = wl_new.at[bt].set(plan.new)
-            ovf = ovf | plan.dropped.any().astype(U32)
+            # Sticky per-shard overflow bitmask: the plan is replicated on
+            # every rank, so the owner-shard fold is collective-free and
+            # must equal the depth-1 routed commit's mask bit for bit.
+            ovf = ovf | state_sharding.dropped_write_bits(
+                plan.keys, plan.dropped, nb_glob,
+                msize if cfg.shard_state else 1,
+            )
             mine = jax.lax.dynamic_slice_in_dim(
                 valid[prep.inv], rank * b_loc, b_loc
             )

@@ -180,9 +180,11 @@ def stage_mvcc_commit(st: ws.HashState, txb: types.TxBatch, ok_ord, cur,
     from the window-batched gather plus in-window adjustment
     (:mod:`repro.pipeline.batched_mvcc`). ``conflict``: optional
     precomputed conflict matrix (the pipeline's prepare stage computes it a
-    step early). Returns (new state, valid (B,) bool, overflow () bool) —
-    the depth-1 step latches ``overflow`` sticky on the mesh state (a
-    dropped insert is a silent version-accounting error otherwise).
+    step early). Returns (new state, valid (B,) bool, overflow () u32
+    BITMASK — bit m == shard m dropped a write on a full bucket; bit 0
+    for replicated state) — the depth-1 step ORs it sticky into the mesh
+    state (a dropped insert is a silent version-accounting error
+    otherwise, and the resize policy reads the hot shard off the bits).
     """
     res = mvcc.validate(txb, cur, checksum_ok=ok_ord, conflict=conflict)
     if cfg.shard_state:
@@ -190,9 +192,11 @@ def stage_mvcc_commit(st: ws.HashState, txb: types.TxBatch, ok_ord, cur,
             st, txb.write_keys, txb.write_vals, res.valid,
             n_buckets_global, n_shards, sequential=cfg.sequential_commit,
         )
+        bits = state_sharding.overflow_bits(cres.shard_overflow)
     else:
         cres = ws.commit(
             st, txb.write_keys, txb.write_vals, res.valid,
             sequential=cfg.sequential_commit,
         )
-    return cres.state, res.valid, cres.overflow
+        bits = cres.overflow.astype(U32)
+    return cres.state, res.valid, bits

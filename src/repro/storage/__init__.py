@@ -8,10 +8,14 @@ story that is O(journal suffix) instead:
   * :mod:`repro.storage.journal`  — append-only, digest-chained journal of
     per-block validated write sets (statejournal's "update a hash function
     with the stream of state updates" instead of a Merkle tree);
-  * :mod:`repro.storage.snapshot` — periodic compact world-state snapshots
-    (device→host dump + content digest, ``.npz`` persisted);
+  * :mod:`repro.storage.snapshot` — periodic world-state snapshots as
+    per-shard ``shard_*.npz`` files + a ``manifest_*.npz`` commitment
+    (shard digests, tree head, sticky overflow bitmask), manifest-last
+    atomic publication;
   * :mod:`repro.storage.recovery` — cold start: latest snapshot + journal
-    suffix, with the digest chain verified end to end.
+    suffix, with the digest chains verified end to end and resize
+    re-anchor epochs crossed; ``recover_shard`` rebuilds one bucket shard
+    without materializing the full table.
 """
 
 from repro.storage import journal, recovery, snapshot  # noqa: F401

@@ -22,6 +22,22 @@ split:
 
 The head chain is domain-separated from the ledger chain (``_JOURNAL_TAG``)
 so a journal head can never be confused with a block hash.
+
+Elastic state adds a third record kind: a **re-anchor record** committed at
+every resize epoch (the halve/double of the sharded world state's bucket
+count, world_state.resize / state_sharding.resize_sharded). A resize lands
+*between* blocks and rewrites no history, so re-anchors ride a parallel
+digest chain (``reanchor_head``, domain-separated by ``_REANCHOR_TAG``)
+instead of advancing the block-write-set head: the main journal head stays
+layout-independent (a channel that split mid-run carries the same journal
+head as one that ran on the final layout from block 0 — the equivalence
+the tests pin), while each re-anchor record binds (a) its boundary
+position via the main head at that block, (b) the layout change, (c) the
+post-resize digest-tree head, and (d) the sticky overflow bitmask. The
+snapshot manifest persists the re-anchor chain head, so recovery verifies
+the re-anchor suffix exactly like the block suffix, and ``replay`` applies
+the recorded resizes at their boundaries — replay and verification cross
+resize epochs.
 """
 
 from __future__ import annotations
@@ -41,6 +57,9 @@ GENESIS_HEAD = np.zeros((2,), np.uint32)
 
 # Domain separation word folded into every head update.
 _JOURNAL_TAG = jnp.uint32(0x4A524E4C)  # "JRNL"
+
+# Domain separation for the resize re-anchor chain.
+_REANCHOR_TAG = jnp.uint32(0x52414E43)  # "RANC"
 
 
 def write_set_digest(write_keys: jnp.ndarray, write_vals: jnp.ndarray,
@@ -90,8 +109,65 @@ def journal_head_update(prev_head, block_no, write_keys, write_vals, valid):
     )
 
 
+def reanchor_head_update(prev_reanchor, prev_head, block_no, old_n_buckets,
+                         new_n_buckets, n_shards, tree_head, overflow_bits
+                         ) -> np.ndarray:
+    """Re-anchor chain link, (2,) u32 (host-side; resizes are rare).
+
+    H(tag || prev_reanchor || main head at the boundary || boundary block
+    || old/new layout || post-resize tree head || overflow bitmask) — the
+    main-head word pins the record to its chain position, so a re-anchor
+    cannot be replayed at a different boundary.
+    """
+    words = jnp.concatenate([
+        jnp.atleast_1d(_REANCHOR_TAG),
+        jnp.asarray(prev_reanchor, U32),
+        jnp.asarray(prev_head, U32),
+        jnp.atleast_1d(jnp.uint32(block_no + 1)),  # +1: boundary -1 is u32-safe
+        jnp.atleast_1d(jnp.uint32(old_n_buckets)),
+        jnp.atleast_1d(jnp.uint32(new_n_buckets)),
+        jnp.atleast_1d(jnp.uint32(n_shards)),
+        jnp.asarray(tree_head, U32),
+        jnp.atleast_1d(jnp.uint32(overflow_bits)),
+    ])[None, :]
+    return np.asarray(jnp.stack([
+        hashing.hash_words(words, seed=hashing.SEED_A)[0],
+        hashing.hash_words(words, seed=hashing.SEED_B)[0],
+    ]))
+
+
+class ReanchorRecord(NamedTuple):
+    """One resize epoch: layout change + post-resize commitment.
+
+    Applies AFTER block ``block_no`` (the boundary's last committed block;
+    -1 == before any block). ``prev_head`` is the MAIN journal head at that
+    boundary — the record is bound to its position without advancing the
+    layout-independent main chain. ``head`` chains re-anchors among
+    themselves from ``prev_reanchor``.
+    """
+
+    block_no: int
+    old_n_buckets: int
+    new_n_buckets: int
+    n_shards: int
+    tree_head: np.ndarray  # (2,) u32 — shard_digest_tree of the new table
+    overflow_bits: int  # sticky per-shard overflow bitmask at the boundary
+    prev_head: np.ndarray  # (2,) u32 — main journal head at the boundary
+    prev_reanchor: np.ndarray  # (2,) u32
+    head: np.ndarray  # (2,) u32
+
+
 # One decode program per dims, shared by every StateJournal instance.
 _decode_jit = jax.jit(unmarshal.unmarshal, static_argnames="dims")
+
+
+class ReplayResult(NamedTuple):
+    """Result of :meth:`StateJournal.replay`: the rebuilt state plus
+    whether any replayed commit/shrink dropped a write on a full bucket
+    (deterministically re-derived — recovery re-latches it)."""
+
+    state: ws.HashState
+    overflow: bool
 
 
 class JournalRecord(NamedTuple):
@@ -130,6 +206,11 @@ class StateJournal:
         # are covered by a snapshot; the chain re-anchors at base_head.
         self.base_block_no = -1
         self.base_head = GENESIS_HEAD.copy()
+        # Resize re-anchor records + their own digest chain (see module
+        # docstring): the main head stays layout-independent.
+        self.reanchors: list[ReanchorRecord] = []
+        self.reanchor_head = GENESIS_HEAD.copy()
+        self.base_reanchor_head = GENESIS_HEAD.copy()
         self._spill_dir = spill_dir
 
     # --- append path (storage-role thread) --------------------------------
@@ -173,15 +254,63 @@ class StateJournal:
             )
         return rec
 
+    def append_reanchor(self, block_no: int, *, old_n_buckets: int,
+                        new_n_buckets: int, n_shards: int, tree_head,
+                        overflow_bits: int = 0) -> ReanchorRecord:
+        """Commit a resize epoch at the CURRENT boundary (after the last
+        appended block — the caller drains the storage role first so the
+        main head really is at ``block_no``)."""
+        tip = self.records[-1].block_no if self.records else self.base_block_no
+        if block_no != tip:
+            raise ValueError(
+                f"re-anchor at block {block_no} but journal tip is {tip} "
+                "(drain the storage role before resizing)"
+            )
+        prev_r = self.reanchor_head
+        tree = np.asarray(tree_head).astype(np.uint32)
+        head = reanchor_head_update(
+            prev_r, self.head, block_no, old_n_buckets, new_n_buckets,
+            n_shards, tree, overflow_bits,
+        )
+        rec = ReanchorRecord(
+            block_no=int(block_no), old_n_buckets=int(old_n_buckets),
+            new_n_buckets=int(new_n_buckets), n_shards=int(n_shards),
+            tree_head=tree, overflow_bits=int(overflow_bits),
+            prev_head=self.head.copy(), prev_reanchor=prev_r, head=head,
+        )
+        self.reanchors.append(rec)
+        self.reanchor_head = head
+        if self._spill_dir is not None:
+            seq = sum(r.block_no == rec.block_no for r in self.reanchors) - 1
+            np.savez(
+                f"{self._spill_dir}/reanchor_{rec.block_no + 1:08d}_"
+                f"{seq:04d}.npz",
+                block_no=np.int64(rec.block_no),
+                old_n_buckets=np.uint32(rec.old_n_buckets),
+                new_n_buckets=np.uint32(rec.new_n_buckets),
+                n_shards=np.uint32(rec.n_shards),
+                tree_head=rec.tree_head,
+                overflow_bits=np.uint32(rec.overflow_bits),
+                prev_head=rec.prev_head,
+                prev_reanchor=rec.prev_reanchor,
+                head=rec.head,
+            )
+        return rec
+
     # --- authentication ---------------------------------------------------
 
     def verify_chain(self, *, base_head: np.ndarray | None = None,
-                     after_block_no: int | None = None) -> bool:
-        """Recompute the digest chain over (a suffix of) the records.
+                     after_block_no: int | None = None,
+                     reanchor_base: np.ndarray | None = None) -> bool:
+        """Recompute the digest chains over (a suffix of) the records.
 
         With no arguments, verifies every retained record from the prune
         base. ``base_head``/``after_block_no`` verify a suffix against a
-        trusted anchor (a snapshot's journal head) — the recovery check.
+        trusted anchor (a snapshot's journal head) — the recovery check;
+        ``reanchor_base`` is then the snapshot manifest's re-anchor chain
+        head (defaults to the prune base). Re-anchor records in the suffix
+        must chain from that anchor AND bind to the main head at their
+        boundary block — so verification crosses resize epochs.
         """
         if after_block_no is None:
             after_block_no = self.base_block_no
@@ -190,6 +319,8 @@ class StateJournal:
             if base_head is None:
                 raise ValueError("after_block_no requires a base_head anchor")
             prev = base_head
+        # Main head at each boundary in the suffix (for re-anchor binding).
+        head_at = {after_block_no: np.asarray(prev)}
         expect_no = after_block_no + 1
         for rec in self.suffix(after_block_no):
             if rec.block_no != expect_no:  # gap: records missing
@@ -206,7 +337,26 @@ class StateJournal:
             if not np.array_equal(recomputed, rec.head):
                 return False
             prev = rec.head
+            head_at[rec.block_no] = rec.head
             expect_no += 1
+        # Re-anchor chain over the same suffix.
+        prev_r = (self.base_reanchor_head if reanchor_base is None
+                  else np.asarray(reanchor_base))
+        for rec in self.suffix_reanchors(after_block_no):
+            if rec.block_no not in head_at:  # boundary not in the suffix
+                return False
+            if not np.array_equal(rec.prev_head, head_at[rec.block_no]):
+                return False
+            if not np.array_equal(rec.prev_reanchor, prev_r):
+                return False
+            recomputed = reanchor_head_update(
+                prev_r, rec.prev_head, rec.block_no, rec.old_n_buckets,
+                rec.new_n_buckets, rec.n_shards, rec.tree_head,
+                rec.overflow_bits,
+            )
+            if not np.array_equal(recomputed, rec.head):
+                return False
+            prev_r = rec.head
         return True
 
     # --- replay / compaction ----------------------------------------------
@@ -214,30 +364,96 @@ class StateJournal:
     def suffix(self, after_block_no: int) -> list[JournalRecord]:
         return [r for r in self.records if r.block_no > after_block_no]
 
-    def replay(self, state: ws.HashState, *, after_block_no: int = -1
-               ) -> ws.HashState:
-        """Apply journaled write sets (block order) onto ``state``.
+    def suffix_reanchors(self, after_block_no: int) -> list[ReanchorRecord]:
+        """Re-anchors strictly after ``after_block_no``. A re-anchor at
+        boundary b is COVERED by a snapshot at block b (resizes land before
+        the snapshot at the same boundary), so it is excluded — except at
+        boundary -1: genesis is not a snapshot, so a pre-genesis resize
+        (engine sized up before its first round) is always part of the
+        from-genesis suffix and stays authenticated/replayed."""
+        return [r for r in self.reanchors
+                if r.block_no > after_block_no
+                or (r.block_no == -1 and after_block_no == -1)]
+
+    def replay(self, state: ws.HashState, *, after_block_no: int = -1,
+               check_reanchors: bool = False) -> "ReplayResult":
+        """Apply journaled write sets (block order) onto ``state``,
+        CROSSING resize epochs: every re-anchor record in the suffix
+        applies ``world_state.resize`` at its boundary, so the replay of a
+        channel that split mid-run lands on the final layout. Returns
+        :class:`ReplayResult` — ``overflow`` reports whether any replayed
+        commit (or shrink) dropped a write, so recovery can re-latch
+        overflow that struck AFTER the last snapshot persisted its mask.
 
         MVCC guarantees valid write sets within a block are disjoint, so
         each record is one conflict-free vectorized commit — replay cost is
         O(suffix), independent of payload size (no unmarshal, no
-        re-validation).
+        re-validation). With ``check_reanchors`` the post-resize state is
+        checked against the record's committed digest-tree head (the
+        recovery path's proof that the rebuilt table matches the one the
+        live peer re-anchored to).
         """
+        by_boundary: dict[int, list[ReanchorRecord]] = {}
+        for r in self.suffix_reanchors(after_block_no):
+            by_boundary.setdefault(r.block_no, []).append(r)
+        ovf = jnp.asarray(False)
+
+        def cross(state, ovf, boundary):
+            for r in by_boundary.pop(boundary, ()):
+                if r.old_n_buckets != state.n_buckets:
+                    raise ValueError(
+                        f"re-anchor at block {r.block_no} expects "
+                        f"{r.old_n_buckets} buckets, state has "
+                        f"{state.n_buckets}"
+                    )
+                res = ws.resize(state, r.new_n_buckets)
+                state, ovf = res.state, ovf | res.overflow
+                if check_reanchors:
+                    tree = np.asarray(ws.tree_head(state, r.n_shards))
+                    if not np.array_equal(tree, r.tree_head):
+                        raise ValueError(
+                            f"re-anchor at block {r.block_no}: rebuilt "
+                            "digest tree head does not match the record"
+                        )
+            return state, ovf
+
         for rec in self.suffix(after_block_no):
-            state = ws.commit_vectorized(
+            state, ovf = cross(state, ovf, rec.block_no - 1)
+            res = ws.commit_vectorized(
                 state,
                 jnp.asarray(rec.write_keys),
                 jnp.asarray(rec.write_vals),
                 jnp.asarray(rec.valid),
-            ).state
-        return state
+            )
+            state, ovf = res.state, ovf | res.overflow
+            state, ovf = cross(state, ovf, rec.block_no)
+        # Re-anchors past the last retained record (resize at the tip).
+        for boundary in sorted(by_boundary):
+            state, ovf = cross(state, ovf, boundary)
+        return ReplayResult(state=state, overflow=bool(np.asarray(ovf)))
 
     def prune_upto(self, block_no: int) -> int:
         """Drop records covered by a snapshot at ``block_no`` — from memory
-        and from the spill directory. Returns the number dropped. Call only
-        with the storage role drained."""
+        and from the spill directory; re-anchors at covered boundaries go
+        with them (their chain re-anchors at ``base_reanchor_head``, which
+        the covering snapshot's manifest also carries). Returns the number
+        of block records dropped. Call only with the storage role
+        drained."""
+        import glob
         import os
 
+        dropped_r = [r for r in self.reanchors if r.block_no <= block_no]
+        if dropped_r:
+            self.reanchors = self.suffix_reanchors(block_no)
+            self.base_reanchor_head = dropped_r[-1].head
+            if self._spill_dir is not None:
+                for path in sorted(glob.glob(
+                    os.path.join(self._spill_dir, "reanchor_*.npz")
+                )):
+                    with np.load(path) as z:
+                        covered = int(z["block_no"]) <= block_no
+                    if covered:
+                        os.remove(path)
         dropped = [r for r in self.records if r.block_no <= block_no]
         if dropped:
             self.records = self.suffix(block_no)
@@ -256,7 +472,9 @@ class StateJournal:
 
     @classmethod
     def load(cls, dims: types.FabricDims, spill_dir: str) -> "StateJournal":
-        """Rebuild a journal from its spill directory (cold start)."""
+        """Rebuild a journal from its spill directory (cold start) —
+        block records AND resize re-anchor records (their file names are
+        keyed by boundary+1 so a pre-genesis re-anchor sorts first)."""
         import glob
         import os
 
@@ -277,5 +495,22 @@ class StateJournal:
                 j.base_head = rec.prev_head.copy()
             j.records.append(rec)
             j.head = rec.head
+        for p in sorted(glob.glob(os.path.join(spill_dir, "reanchor_*.npz"))):
+            with np.load(p) as z:
+                rec = ReanchorRecord(
+                    block_no=int(z["block_no"]),
+                    old_n_buckets=int(z["old_n_buckets"]),
+                    new_n_buckets=int(z["new_n_buckets"]),
+                    n_shards=int(z["n_shards"]),
+                    tree_head=z["tree_head"],
+                    overflow_bits=int(z["overflow_bits"]),
+                    prev_head=z["prev_head"],
+                    prev_reanchor=z["prev_reanchor"],
+                    head=z["head"],
+                )
+            if not j.reanchors:
+                j.base_reanchor_head = rec.prev_reanchor.copy()
+            j.reanchors.append(rec)
+            j.reanchor_head = rec.head
         j._spill_dir = spill_dir
         return j

@@ -1,18 +1,34 @@
-"""Cold-start recovery: latest snapshot + journal suffix, fully verified.
+"""Cold-start recovery: latest snapshot + journal suffix, fully verified —
+now shard-aware and resize-epoch-aware.
 
 The restart story that lets P-I keep no database: load the most recent
-snapshot (verifying its content digest), verify the journal's digest chain
-from the snapshot's journal head forward, then replay only that suffix of
-write sets — O(blocks since last snapshot) instead of the O(chain length)
-full ``BlockStore.replay_state``. The recovered peer proves it matches the
+snapshot (verifying its per-shard digests + tree head), verify the
+journal's digest chains from the snapshot's heads forward (block records
+AND resize re-anchor records), then replay only that suffix of write sets
+— crossing resize boundaries by applying each re-anchor's recorded
+halve/double, and proving each rebuilt table against the re-anchor's
+committed digest-tree head. The recovered peer proves it matches the
 crashed one by comparing ``state_digest`` and the terminal journal head
-against the live values (engine.verify's ``recovery_ok``).
+against the live values (engine.verify's ``recovery_ok``), and re-latches
+the STICKY overflow bitmask persisted in the manifest/re-anchor records
+(an overflowed peer must not come back reporting healthy).
+
+:func:`recover_shard` is the sharded peer's path: it loads ONLY the shard
+parts that feed one target bucket shard (for K grow epochs in the suffix,
+the 2^K-aligned run of pre-resize shards the butterfly exchange draws
+from — one final-shard's worth of bytes, never the full table), replays
+the suffix with write sets masked to the owned bucket range, and steps
+through each re-anchor with a local mask + compact. Because an aligned
+bucket range behaves exactly like a shard-local table (the low bucket
+bits ARE the local index), the partial replay is array-exact against the
+live shard.
 """
 
 from __future__ import annotations
 
 from typing import NamedTuple
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import types
@@ -32,6 +48,9 @@ class RecoveryResult(NamedTuple):
     state_digest: np.ndarray  # (2,) u32 — digest of recovered state
     snapshot_block_no: int  # -1 if recovered from genesis
     replayed_records: int  # journal suffix length
+    n_buckets: int  # FINAL layout (resize epochs in the suffix applied)
+    overflow_bits: int  # sticky per-shard overflow bitmask, re-latched
+    crossed_reanchors: int  # resize epochs crossed during replay
 
 
 def recover(
@@ -43,12 +62,16 @@ def recover(
     slots: int,
     value_width: int,
 ) -> RecoveryResult:
-    """Rebuild world state from ``snapshot`` (or the newest in
+    """Rebuild world state from ``snapshot`` (or the newest complete one in
     ``snapshot_dir``, or genesis) + the journal suffix after it.
 
-    Raises :class:`RecoveryError` if the snapshot digest does not match its
-    arrays, the journal chain does not verify from the snapshot's head, or
-    the journal does not cover the suffix (pruned past the snapshot).
+    Raises :class:`RecoveryError` if the snapshot digests do not match its
+    arrays, either journal chain does not verify from the snapshot's
+    anchors, a re-anchor's rebuilt table does not match its committed tree
+    head, or the journal does not cover the suffix (pruned past the
+    snapshot). ``n_buckets`` is the GENESIS layout — re-anchor records in
+    the suffix carry every later resize, so the result lands on the final
+    layout whichever base it starts from.
     """
     if snapshot is None and snapshot_dir is not None:
         snapshot = snapshot_mod.latest(snapshot_dir)
@@ -56,30 +79,48 @@ def recover(
     if snapshot is not None:
         if not snapshot_mod.verify(snapshot):
             raise RecoveryError(
-                f"snapshot at block {snapshot.block_no}: state digest "
-                "mismatch (corrupt or tampered)"
+                f"snapshot at block {snapshot.block_no}: shard digest / "
+                "tree head mismatch (corrupt or tampered)"
             )
         state = snapshot_mod.to_state(snapshot)
         after = snapshot.block_no
         anchor = np.asarray(snapshot.journal_head)
+        reanchor_anchor = np.asarray(snapshot.manifest.reanchor_head)
+        overflow_bits = snapshot.manifest.overflow_bits
     else:
         state = ws.create(n_buckets, slots, value_width)
         after = -1
         anchor = journal_mod.GENESIS_HEAD
+        reanchor_anchor = journal_mod.GENESIS_HEAD
+        overflow_bits = 0
 
     if jrnl.base_block_no > after:
         raise RecoveryError(
             f"journal pruned up to block {jrnl.base_block_no} but recovery "
             f"needs records after block {after} (no covering snapshot)"
         )
-    if not jrnl.verify_chain(base_head=anchor, after_block_no=after):
+    if not jrnl.verify_chain(base_head=anchor, after_block_no=after,
+                             reanchor_base=reanchor_anchor):
         raise RecoveryError(
             f"journal chain does not authenticate after block {after} "
             "(corrupt, tampered, or missing records)"
         )
 
     suffix = jrnl.suffix(after)
-    state = jrnl.replay(state, after_block_no=after)
+    reanchors = jrnl.suffix_reanchors(after)
+    try:
+        rep = jrnl.replay(state, after_block_no=after,
+                          check_reanchors=True)
+    except ValueError as e:
+        raise RecoveryError(str(e)) from e
+    state = rep.state
+    for rec in reanchors:
+        overflow_bits |= rec.overflow_bits
+    # Overflow that struck in the suffix AFTER the last persisted mask is
+    # re-derived by the replay itself. The merged replay cannot localize
+    # the drop, so it latches bit 0 — health (bits != 0) stays honest;
+    # exact shard attribution comes from re-anchor records/manifests.
+    overflow_bits |= int(rep.overflow)
     head = suffix[-1].head if suffix else anchor
     return RecoveryResult(
         state=state,
@@ -88,6 +129,169 @@ def recover(
         state_digest=np.asarray(ws.state_digest(state)),
         snapshot_block_no=snapshot.block_no if snapshot is not None else -1,
         replayed_records=len(suffix),
+        n_buckets=state.n_buckets,
+        overflow_bits=int(overflow_bits),
+        crossed_reanchors=len(reanchors),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Per-shard recovery (sharded peer: one bucket shard per host).
+# ---------------------------------------------------------------------------
+
+
+class ShardRecoveryResult(NamedTuple):
+    state: ws.HashState  # the recovered LOCAL bucket shard
+    shard: int
+    n_shards: int
+    block_no: int
+    journal_head: np.ndarray  # (2,) u32 — the (global) journal head
+    shard_digest: np.ndarray  # (2,) u32 — content digest of the shard
+    loaded_parts: int  # snapshot shard files read (<< n_shards)
+    replayed_records: int
+    crossed_reanchors: int
+
+
+def _range_schedule(shard: int, n_shards: int, nbs: list[int]
+                    ) -> list[tuple[int, int]]:
+    """Per-epoch (start, size) of the aligned global bucket range that
+    feeds ``shard``'s final range, walked BACKWARD from the last epoch.
+
+    A grow maps old bucket g to g or g + nb_old (one more key bit), so the
+    preimage of an aligned range [a, a+s) under one doubling is
+    [a mod nb_old, +s) — still aligned — capped at the whole older table
+    when s exceeds it. ``nbs`` is the global bucket count per epoch
+    (snapshot layout first, post-resize layouts after)."""
+    nb_loc_final = nbs[-1] // n_shards
+    start, size = shard * nb_loc_final, nb_loc_final
+    out = [(start, size)]
+    for nb in reversed(nbs[:-1]):
+        size = min(size, nb)
+        start = start % nb
+        start -= start % size  # keep the range aligned to its size
+        out.append((start, size))
+    return out[::-1]
+
+
+def recover_shard(
+    jrnl: journal_mod.StateJournal,
+    *,
+    snapshot_dir: str,
+    shard: int,
+) -> ShardRecoveryResult:
+    """Recover ONE bucket shard from per-shard snapshot files + the journal
+    suffix, across grow re-anchors, without materializing the full table.
+
+    Shrink epochs in the suffix are refused (a halve merges buckets from
+    non-adjacent shards; recover the merged table via :func:`recover` and
+    re-split) — the overflow-recovery path only ever grows.
+    """
+    man = snapshot_mod.latest_manifest(snapshot_dir)
+    if man is None:
+        raise RecoveryError(f"no complete snapshot in {snapshot_dir}")
+    if jrnl.base_block_no > man.block_no:
+        raise RecoveryError(
+            f"journal pruned up to block {jrnl.base_block_no} past the "
+            f"snapshot at block {man.block_no}"
+        )
+    if not jrnl.verify_chain(
+        base_head=np.asarray(man.journal_head), after_block_no=man.block_no,
+        reanchor_base=np.asarray(man.reanchor_head),
+    ):
+        raise RecoveryError(
+            f"journal chain does not authenticate after block {man.block_no}"
+        )
+    reanchors = jrnl.suffix_reanchors(man.block_no)
+    for r in reanchors:
+        if r.new_n_buckets < r.old_n_buckets:
+            raise RecoveryError(
+                f"re-anchor at block {r.block_no} shrinks the table: "
+                "per-shard recovery only crosses grow epochs"
+            )
+        if r.n_shards != man.n_shards:
+            raise RecoveryError("shard count changed across the suffix")
+    m = man.n_shards
+    if not 0 <= shard < m:
+        raise RecoveryError(f"shard {shard} out of range for {m} shards")
+
+    # Per-epoch bucket range feeding the target shard, walked backward from
+    # the final layout; epoch 0 names the snapshot shard parts to load.
+    nbs = [man.n_buckets] + [r.new_n_buckets for r in reanchors]
+    sched = _range_schedule(shard, m, nbs)
+    nb_loc0 = man.n_buckets // m
+    start0, size0 = sched[0]
+    lo, cnt = start0 // nb_loc0, size0 // nb_loc0
+    parts = []
+    for s in range(lo, lo + cnt):
+        part = snapshot_mod.load_shard(snapshot_dir, man.block_no, s)
+        if not snapshot_mod.verify_shard(man, part):
+            raise RecoveryError(
+                f"snapshot shard {s} at block {man.block_no}: digest "
+                "mismatch (corrupt or tampered)"
+            )
+        parts.append(part)
+    state = ws.HashState(
+        keys=jnp.asarray(np.concatenate([p.keys for p in parts])),
+        versions=jnp.asarray(np.concatenate([p.versions for p in parts])),
+        values=jnp.asarray(np.concatenate([p.values for p in parts])),
+    )
+
+    # The partial table covers an ALIGNED global bucket range, so the low
+    # bucket bits are its local index and it behaves as one shard of a
+    # coarser partition (nb // size groups) — ownership masks reuse
+    # shard_of, commits/resizes run the unmodified local machinery.
+    epoch = 0
+    nb, (start, _) = nbs[0], sched[0]
+    by_boundary: dict[int, list] = {}
+    for k, r in enumerate(reanchors):
+        by_boundary.setdefault(r.block_no, []).append((k, r))
+
+    def cross(state, epoch, boundary):
+        for k, r in by_boundary.pop(boundary, ()):
+            if r.old_n_buckets != nbs[k]:
+                raise RecoveryError(
+                    f"re-anchor at block {r.block_no} expects "
+                    f"{r.old_n_buckets} buckets, epoch has {nbs[k]}"
+                )
+            new_nb = r.new_n_buckets
+            new_start, new_size = sched[k + 1]
+            mine = ws.shard_of(new_nb, new_nb // new_size, state.keys) == (
+                new_start // new_size)
+            masked = state._replace(
+                keys=jnp.where(mine[..., None], state.keys, jnp.uint32(0))
+            )
+            state = ws.resize(masked, new_size).state
+            epoch = k + 1
+        return state, epoch
+
+    suffix = jrnl.suffix(man.block_no)
+    for rec in suffix:
+        state, epoch = cross(state, epoch, rec.block_no - 1)
+        nb, (start, size) = nbs[epoch], sched[epoch]
+        wk = jnp.asarray(rec.write_keys)
+        mine = ws.shard_of(nb, nb // size, wk) == (start // size)
+        state = ws.commit_vectorized(
+            state,
+            jnp.where(mine[..., None], wk, jnp.uint32(0)),
+            jnp.asarray(rec.write_vals),
+            jnp.asarray(rec.valid),
+        ).state
+        state, epoch = cross(state, epoch, rec.block_no)
+    for boundary in sorted(by_boundary):
+        state, epoch = cross(state, epoch, boundary)
+
+    # The final scheduled range IS the target shard's range by construction.
+    head = suffix[-1].head if suffix else np.asarray(man.journal_head)
+    return ShardRecoveryResult(
+        state=state,
+        shard=shard,
+        n_shards=m,
+        block_no=suffix[-1].block_no if suffix else man.block_no,
+        journal_head=np.asarray(head),
+        shard_digest=np.asarray(ws.state_digest(state)),
+        loaded_parts=cnt,
+        replayed_records=len(suffix),
+        crossed_reanchors=len(reanchors),
     )
 
 
@@ -111,4 +315,7 @@ def full_replay(store, dims: types.FabricDims, *, n_buckets: int,
         state_digest=np.asarray(ws.state_digest(state)),
         snapshot_block_no=-1,
         replayed_records=len(store.chain),
+        n_buckets=state.n_buckets,
+        overflow_bits=0,
+        crossed_reanchors=0,
     )

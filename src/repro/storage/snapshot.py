@@ -1,20 +1,41 @@
-"""Compact world-state snapshots: device→host dump + content digest.
+"""Shard-aware world-state snapshots: per-shard files + a manifest.
 
 A snapshot freezes the peer's hash-table world state (core/world_state.py)
-*as of* a block number, together with the two authentication heads current
-at that block (ledger chain hash, journal head). Persistence is one
-``snapshot_XXXXXXXX.npz`` per snapshot (the BlockStore spill pattern),
-published atomically via tmp-file + rename.
+*as of* a block number, together with the authentication heads current at
+that block (ledger chain hash, journal head, journal re-anchor head). The
+elastic sharded state made the old one-``HashState``-per-file layout a
+scaling bug — recovery of a sharded peer had to materialize the full table
+on one host — so persistence is now:
 
-Integrity: ``state_digest`` is the order-independent entry digest from
-``world_state.state_digest`` recomputed over the dumped arrays —
-``verify`` re-derives it, so any tampering with the persisted arrays is
-detected before recovery replays on top of them.
+  * ``shard_XXXXXXXX_MMMM.npz``  — ONE bucket shard's arrays (the high-bit
+    partition of world_state.split_table), written first;
+  * ``manifest_XXXXXXXX.npz``    — the commitment over all shards: layout
+    (n_buckets/slots/value_width/n_shards), per-shard digests, the
+    digest-tree head (world_state.shard_digest_tree), the XOR-fold
+    state digest, the heads, and the STICKY overflow bitmask — written
+    LAST, tmp-file + rename.
+
+The manifest-last write order makes the whole snapshot atomic: a torn save
+leaves shard files without a manifest, and :func:`latest` only considers
+blocks whose manifest loads AND whose shard files are all present — a torn
+snapshot is never selected. Foreign files in the directory are ignored by
+every listing/GC path (strict filename patterns), and :func:`gc` drops a
+block's manifest BEFORE its shard files so no reader ever sees a manifest
+with missing shards.
+
+Integrity: per-shard digests are recomputed over the loaded arrays
+(``verify`` / ``verify_shard``), the tree head over the shard digests, and
+the XOR decomposition ties them to the full-table digest — any tampering
+with persisted arrays is detected before recovery replays on top of them.
+Persisting the overflow bitmask closes the ROADMAP hole where an
+overflowed peer that snapshotted and restarted came back reporting
+healthy (the dropped inserts are not derivable from the table).
 """
 
 from __future__ import annotations
 
 import os
+import re
 from typing import NamedTuple
 
 import jax
@@ -23,103 +44,305 @@ import numpy as np
 
 from repro.core import world_state as ws
 
+_MANIFEST_RE = re.compile(r"^manifest_(\d{8})\.npz$")
+_SHARD_RE = re.compile(r"^shard_(\d{8})_(\d{4})\.npz$")
 
-class Snapshot(NamedTuple):
-    """World state at ``block_no`` (the last applied block), host-side."""
+
+class Manifest(NamedTuple):
+    """The snapshot commitment: layout + digests + heads + health flag."""
 
     block_no: int
     journal_head: np.ndarray  # (2,) u32 — journal head after block_no
     ledger_head: np.ndarray  # (2,) u32 — chain hash after block_no
-    state_digest: np.ndarray  # (2,) u32 — world_state.state_digest
-    keys: np.ndarray  # (NB, S, 2) u32
-    versions: np.ndarray  # (NB, S) u32
-    values: np.ndarray  # (NB, S, VW) u32
+    reanchor_head: np.ndarray  # (2,) u32 — journal re-anchor chain head
+    state_digest: np.ndarray  # (2,) u32 — XOR-fold full-table digest
+    n_buckets: int  # GLOBAL bucket count at block_no (resize epochs vary it)
+    slots: int
+    value_width: int
+    n_shards: int
+    shard_digests: np.ndarray  # (M, 2) u32 — per-shard content digests
+    tree_head: np.ndarray  # (2,) u32 — shard_digest_tree(shard_digests)
+    overflow_bits: int  # sticky per-shard overflow bitmask (bit m ==
+    # shard m filled) — persisted so the flag survives a restart
+
+    @property
+    def overflow(self) -> bool:
+        """Health flag: any shard ever overflowed."""
+        return bool(self.overflow_bits)
 
 
-def take(state: ws.HashState, *, block_no: int, journal_head,
-         ledger_head) -> Snapshot:
-    """Dump ``state`` to host with its digest (the commit path is not
-    blocked: callers run this between rounds / off the timed window)."""
-    digest = np.asarray(jax.device_get(ws.state_digest(state)))
-    return Snapshot(
+class ShardPart(NamedTuple):
+    """One bucket shard's arrays (shard m owns buckets [m*NB/M, (m+1)*NB/M))."""
+
+    shard: int
+    keys: np.ndarray  # (NB/M, S, 2) u32
+    versions: np.ndarray  # (NB/M, S) u32
+    values: np.ndarray  # (NB/M, S, VW) u32
+
+
+class Snapshot(NamedTuple):
+    """A full snapshot held in memory: manifest + every shard part.
+
+    Sharded recovery paths should prefer :func:`load_manifest` +
+    :func:`load_shard` (one part per host); this merged view serves the
+    single-host engine and the verification oracles.
+    """
+
+    manifest: Manifest
+    shards: tuple  # tuple[ShardPart, ...], in shard order
+
+    @property
+    def block_no(self) -> int:
+        return self.manifest.block_no
+
+    @property
+    def journal_head(self) -> np.ndarray:
+        return self.manifest.journal_head
+
+    @property
+    def ledger_head(self) -> np.ndarray:
+        return self.manifest.ledger_head
+
+    @property
+    def state_digest(self) -> np.ndarray:
+        return self.manifest.state_digest
+
+
+def take(state: ws.HashState, *, block_no: int, journal_head, ledger_head,
+         n_shards: int = 1, overflow_bits: int = 0,
+         reanchor_head=None) -> Snapshot:
+    """Dump ``state`` to host as ``n_shards`` parts + manifest (the commit
+    path is not blocked: callers run this between rounds / off the timed
+    window). ``overflow_bits`` is the peer's sticky per-shard overflow
+    bitmask — persisted so a restarted peer still reports unhealthy."""
+    keys = np.asarray(jax.device_get(state.keys))
+    vers = np.asarray(jax.device_get(state.versions))
+    vals = np.asarray(jax.device_get(state.values))
+    sk, sv, sva = ws.split_table(keys, vers, vals, n_shards)
+    parts, digests = [], []
+    for m in range(n_shards):
+        parts.append(ShardPart(shard=m, keys=sk[m], versions=sv[m],
+                               values=sva[m]))
+        digests.append(np.asarray(ws.state_digest(
+            ws.HashState(jnp.asarray(sk[m]), jnp.asarray(sv[m]),
+                         jnp.asarray(sva[m]))
+        )))
+    shard_digests = np.stack(digests).astype(np.uint32)
+    tree = np.asarray(ws.shard_digest_tree(jnp.asarray(shard_digests)))
+    # XOR decomposition: full-table digest without a second full pass.
+    full = np.bitwise_xor.reduce(shard_digests, axis=0)
+    manifest = Manifest(
         block_no=int(block_no),
-        journal_head=np.asarray(jax.device_get(journal_head)).astype(np.uint32),
-        ledger_head=np.asarray(jax.device_get(ledger_head)).astype(np.uint32),
-        state_digest=digest,
-        keys=np.asarray(jax.device_get(state.keys)),
-        versions=np.asarray(jax.device_get(state.versions)),
-        values=np.asarray(jax.device_get(state.values)),
+        journal_head=np.asarray(
+            jax.device_get(journal_head)).astype(np.uint32),
+        ledger_head=np.asarray(
+            jax.device_get(ledger_head)).astype(np.uint32),
+        reanchor_head=(np.zeros(2, np.uint32) if reanchor_head is None
+                       else np.asarray(reanchor_head).astype(np.uint32)),
+        state_digest=full,
+        n_buckets=int(keys.shape[0]),
+        slots=int(keys.shape[1]),
+        value_width=int(vals.shape[2]),
+        n_shards=int(n_shards),
+        shard_digests=shard_digests,
+        tree_head=tree,
+        overflow_bits=int(overflow_bits),
     )
+    return Snapshot(manifest=manifest, shards=tuple(parts))
 
 
 def to_state(snap: Snapshot) -> ws.HashState:
-    """Re-place the snapshot arrays on device."""
+    """Re-place the merged snapshot arrays on device (single-host view;
+    concatenating the shard parts in order IS the high-bit partition)."""
     return ws.HashState(
-        keys=jnp.asarray(snap.keys),
-        versions=jnp.asarray(snap.versions),
-        values=jnp.asarray(snap.values),
+        keys=jnp.asarray(np.concatenate([p.keys for p in snap.shards])),
+        versions=jnp.asarray(
+            np.concatenate([p.versions for p in snap.shards])),
+        values=jnp.asarray(np.concatenate([p.values for p in snap.shards])),
     )
 
 
+def verify_shard(manifest: Manifest, part: ShardPart) -> bool:
+    """Recompute one shard's digest against the manifest."""
+    got = np.asarray(ws.state_digest(ws.HashState(
+        jnp.asarray(part.keys), jnp.asarray(part.versions),
+        jnp.asarray(part.values),
+    )))
+    return bool(np.array_equal(got, manifest.shard_digests[part.shard]))
+
+
 def verify(snap: Snapshot) -> bool:
-    """Recompute the state digest over the (possibly reloaded) arrays."""
-    got = np.asarray(ws.state_digest(to_state(snap)))
-    return bool(np.array_equal(got, snap.state_digest))
+    """Full verification: every shard digest, the tree head, and the XOR
+    decomposition down to the full-table digest."""
+    man = snap.manifest
+    if len(snap.shards) != man.n_shards:
+        return False
+    if not all(verify_shard(man, p) for p in snap.shards):
+        return False
+    tree = np.asarray(
+        ws.shard_digest_tree(jnp.asarray(man.shard_digests)))
+    if not np.array_equal(tree, man.tree_head):
+        return False
+    full = np.bitwise_xor.reduce(man.shard_digests, axis=0)
+    return bool(np.array_equal(full, man.state_digest))
+
+
+# ---------------------------------------------------------------------------
+# Persistence: shard files first, manifest last (atomic unit).
+# ---------------------------------------------------------------------------
 
 
 def path_for(directory: str, block_no: int) -> str:
-    return os.path.join(directory, f"snapshot_{block_no:08d}.npz")
+    return os.path.join(directory, f"manifest_{block_no:08d}.npz")
+
+
+def shard_path_for(directory: str, block_no: int, shard: int) -> str:
+    return os.path.join(directory, f"shard_{block_no:08d}_{shard:04d}.npz")
+
+
+def _atomic_savez(path: str, **arrays) -> None:
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f, **arrays)
+    os.replace(tmp, path)
 
 
 def save(directory: str, snap: Snapshot) -> str:
-    """Persist atomically: write to a tmp name, then rename-publish."""
+    """Persist: every shard part (tmp + rename each), THEN the manifest.
+    Until the manifest lands the snapshot does not exist to readers."""
     os.makedirs(directory, exist_ok=True)
-    final = path_for(directory, snap.block_no)
-    tmp = final + ".tmp"
-    with open(tmp, "wb") as f:
-        np.savez(
-            f,
-            block_no=np.uint32(snap.block_no),
-            journal_head=snap.journal_head,
-            ledger_head=snap.ledger_head,
-            state_digest=snap.state_digest,
-            keys=snap.keys,
-            versions=snap.versions,
-            values=snap.values,
+    man = snap.manifest
+    for part in snap.shards:
+        _atomic_savez(
+            shard_path_for(directory, man.block_no, part.shard),
+            shard=np.uint32(part.shard),
+            block_no=np.int64(man.block_no),
+            keys=part.keys, versions=part.versions, values=part.values,
         )
-    os.replace(tmp, final)
+    final = path_for(directory, man.block_no)
+    _atomic_savez(
+        final,
+        block_no=np.int64(man.block_no),
+        journal_head=man.journal_head,
+        ledger_head=man.ledger_head,
+        reanchor_head=man.reanchor_head,
+        state_digest=man.state_digest,
+        n_buckets=np.uint32(man.n_buckets),
+        slots=np.uint32(man.slots),
+        value_width=np.uint32(man.value_width),
+        n_shards=np.uint32(man.n_shards),
+        shard_digests=man.shard_digests,
+        tree_head=man.tree_head,
+        overflow_bits=np.uint32(man.overflow_bits),
+    )
     return final
 
 
-def load(path: str) -> Snapshot:
+def load_manifest(path: str) -> Manifest:
     with np.load(path) as z:
-        return Snapshot(
+        bits = int(z["overflow_bits"])
+        return Manifest(
             block_no=int(z["block_no"]),
             journal_head=z["journal_head"],
             ledger_head=z["ledger_head"],
+            reanchor_head=z["reanchor_head"],
             state_digest=z["state_digest"],
-            keys=z["keys"],
-            versions=z["versions"],
-            values=z["values"],
+            n_buckets=int(z["n_buckets"]),
+            slots=int(z["slots"]),
+            value_width=int(z["value_width"]),
+            n_shards=int(z["n_shards"]),
+            shard_digests=z["shard_digests"],
+            tree_head=z["tree_head"],
+            overflow_bits=bits,
         )
 
 
+def load_shard(directory: str, block_no: int, shard: int) -> ShardPart:
+    """One shard's arrays — the sharded-recovery path loads ONLY the parts
+    it needs, never the whole table."""
+    with np.load(shard_path_for(directory, block_no, shard)) as z:
+        return ShardPart(shard=int(z["shard"]), keys=z["keys"],
+                         versions=z["versions"], values=z["values"])
+
+
+def load(directory: str, block_no: int | None = None) -> Snapshot:
+    """Load manifest + every shard part (single-host view). With no
+    ``block_no``, loads the newest complete snapshot."""
+    if block_no is None:
+        snap = latest(directory)
+        if snap is None:
+            raise FileNotFoundError(f"no complete snapshot in {directory}")
+        return snap
+    man = load_manifest(path_for(directory, block_no))
+    parts = tuple(
+        load_shard(directory, block_no, m) for m in range(man.n_shards)
+    )
+    return Snapshot(manifest=man, shards=parts)
+
+
+def _complete(directory: str, block_no: int) -> bool:
+    """A snapshot is complete iff its manifest loads and every shard file
+    it names exists — the selection rule that makes torn saves invisible."""
+    try:
+        man = load_manifest(path_for(directory, block_no))
+    except Exception:
+        return False
+    return all(
+        os.path.exists(shard_path_for(directory, block_no, m))
+        for m in range(man.n_shards)
+    )
+
+
 def list_blocks(directory: str) -> list[int]:
+    """Block numbers of COMPLETE snapshots, ascending. Foreign files (and
+    torn manifests / missing shard parts) are ignored, never errors."""
     if not os.path.isdir(directory):
         return []
     out = []
     for name in os.listdir(directory):
-        if name.startswith("snapshot_") and name.endswith(".npz"):
-            out.append(int(name[len("snapshot_"):-len(".npz")]))
+        m = _MANIFEST_RE.match(name)
+        if m and _complete(directory, int(m.group(1))):
+            out.append(int(m.group(1)))
     return sorted(out)
 
 
 def latest(directory: str) -> Snapshot | None:
     blocks = list_blocks(directory)
-    return load(path_for(directory, blocks[-1])) if blocks else None
+    return load(directory, blocks[-1]) if blocks else None
+
+
+def latest_manifest(directory: str) -> Manifest | None:
+    blocks = list_blocks(directory)
+    return load_manifest(path_for(directory, blocks[-1])) if blocks else None
 
 
 def gc(directory: str, *, keep: int = 2) -> None:
-    """Drop all but the newest ``keep`` snapshots."""
-    for bno in list_blocks(directory)[:-keep]:
-        os.remove(path_for(directory, bno))
+    """Drop all but the newest ``keep`` complete snapshots, manifest+shards
+    as a unit: the manifest goes FIRST (the snapshot stops existing), then
+    its shard files. Shard files orphaned by earlier torn GCs of dropped
+    blocks are swept too; files that match neither pattern are foreign and
+    untouched, and parts of a save still in flight (block newer than every
+    manifest) are preserved."""
+    if not os.path.isdir(directory):
+        return
+    blocks = list_blocks(directory)
+    keep_set = set(blocks[-keep:]) if keep else set()
+    newest = blocks[-1] if blocks else -1
+    # Manifests first.
+    for name in sorted(os.listdir(directory)):
+        m = _MANIFEST_RE.match(name)
+        if m and int(m.group(1)) not in keep_set:
+            _rm(os.path.join(directory, name))
+    # Then shard files of dropped/orphaned blocks (an in-flight save has a
+    # block number past the newest manifest — leave it alone).
+    for name in sorted(os.listdir(directory)):
+        m = _SHARD_RE.match(name)
+        if m and int(m.group(1)) not in keep_set and int(m.group(1)) <= newest:
+            _rm(os.path.join(directory, name))
+
+
+def _rm(path: str) -> None:
+    try:
+        os.remove(path)
+    except OSError:
+        pass

@@ -189,7 +189,7 @@ def test_overflow_window_equals_oracle_replicated(depth):
     wire, ids = _overflow_window(depth)
     v, st = _assert_identical(fs.FASTFABRIC_STEP, mesh, wire, ids, depth,
                               n_buckets=8, slots=2)
-    assert int(st.overflow[0]) == 1  # sticky flag latched on both paths
+    assert int(st.overflow[0]) != 0  # sticky bitmask latched on both paths
     assert 0 < int(v.sum()) < v.size  # poisoned repairs invalidate SOME
     # transactions (all-valid would mean the drop was never observed,
     # all-invalid that the window never committed anything)
@@ -201,7 +201,7 @@ def test_overflow_window_equals_oracle_sharded_degenerate(depth):
     wire, ids = _overflow_window(depth)
     _, st = _assert_identical(fs.FASTFABRIC_SHARDED_STEP, mesh, wire, ids,
                               depth, n_buckets=8, slots=2)
-    assert int(st.overflow[0]) == 1
+    assert int(st.overflow[0]) != 0
 
 
 @multi_device
@@ -209,12 +209,15 @@ def test_overflow_window_equals_oracle_sharded_degenerate(depth):
 def test_overflow_window_equals_oracle_sharded_multi_rank(depth):
     """Overflow accounting must survive the routed path: free-slot counts
     gather from the owner shards and the fused commit applies owner-side,
-    yet the validity bits and state stay byte-identical to the oracle."""
+    yet the validity bits and state stay byte-identical to the oracle —
+    including the per-shard overflow BITMASK (bit m == shard m filled),
+    which the depth-1 routed commit and the pipelined planner must agree
+    on without an extra collective."""
     mesh = jax.make_mesh((1, min(MAX_M, 4)), ("data", "model"))
     wire, ids = _overflow_window(depth, n=16)
     _, st = _assert_identical(fs.FASTFABRIC_SHARDED_STEP, mesh, wire, ids,
                               depth, n_buckets=8, slots=2)
-    assert int(st.overflow[0]) == 1
+    assert int(st.overflow[0]) != 0
 
 
 def test_overflow_window_equals_oracle_sequential_baseline():
@@ -224,7 +227,7 @@ def test_overflow_window_equals_oracle_sequential_baseline():
     wire, ids = _overflow_window(4)
     _, st = _assert_identical(fs.FABRIC_V12_STEP, mesh, wire, ids, 4,
                               n_buckets=8, slots=2)
-    assert int(st.overflow[0]) == 1
+    assert int(st.overflow[0]) != 0
 
 
 def test_overflow_window_store_chain_and_journal():
@@ -344,14 +347,21 @@ def test_engine_window_committer_matches_per_block_engine(tmp_path):
     )
 
 
-def test_engine_window_committer_rejects_snapshots():
+def test_engine_window_committer_supports_snapshots(tmp_path):
+    """Snapshots used to be rejected with a window committer; the elastic
+    refactor made the manifest cover the mesh-backed state instead (full
+    durability coverage lives in tests/test_rebalance.py)."""
     wc = engine_bridge.MeshWindowCommitter(
         DIMS, fs.FabricStepConfig(pipeline_depth=2))
-    with pytest.raises(ValueError, match="window"):
-        engine.FabricEngine(
-            engine.EngineConfig(dims=DIMS, snapshot_every_blocks=4),
-            window_committer=wc,
-        )
+    eng = engine.FabricEngine(
+        engine.EngineConfig(dims=DIMS, snapshot_every_blocks=4,
+                            snapshot_dir=str(tmp_path)),
+        window_committer=wc,
+    )
+    eng.run_round(eng.make_proposals(600, seed=0))
+    assert eng.snapshots and eng.snapshots[-1].block_no >= 4
+    assert eng.verify()["recovery_ok"]
+    eng.store.close()
 
 
 # -------------------------------------------------------------- benchmark

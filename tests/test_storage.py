@@ -100,7 +100,7 @@ def test_journal_replay_matches_direct_commits():
             direct, jnp.asarray(rec.write_keys), jnp.asarray(rec.write_vals),
             jnp.asarray(rec.valid),
         ).state
-    replayed = j.replay(ws.create(256, 8, DIMS.vw))
+    replayed = j.replay(ws.create(256, 8, DIMS.vw)).state
     np.testing.assert_array_equal(
         np.asarray(ws.state_digest(replayed)),
         np.asarray(ws.state_digest(direct)),
@@ -110,19 +110,24 @@ def test_journal_replay_matches_direct_commits():
 # -------------------------------------------------------------------- snapshot
 
 
-def test_snapshot_roundtrip_and_tamper(tmp_path):
-    st = ws.create(64, 4, DIMS.vw)
-    txb = types.make_transfer_batch(DIMS, 16, seed=7)
-    st = ws.commit_vectorized(
-        st, txb.write_keys, txb.write_vals, jnp.ones(16, bool)
+def _populated_state(n_buckets=64, slots=4, n=16, seed=7):
+    st = ws.create(n_buckets, slots, DIMS.vw)
+    txb = types.make_transfer_batch(DIMS, n, seed=seed)
+    return ws.commit_vectorized(
+        st, txb.write_keys, txb.write_vals, jnp.ones(n, bool)
     ).state
+
+
+def test_snapshot_roundtrip_and_tamper(tmp_path):
+    st = _populated_state()
     snap = snapshot.take(
         st, block_no=5, journal_head=np.arange(2, dtype=np.uint32),
-        ledger_head=np.zeros(2, np.uint32),
+        ledger_head=np.zeros(2, np.uint32), n_shards=4,
     )
     assert snapshot.verify(snap)
-    path = snapshot.save(str(tmp_path), snap)
-    loaded = snapshot.load(path)
+    assert len(snap.shards) == 4
+    snapshot.save(str(tmp_path), snap)
+    loaded = snapshot.load(str(tmp_path), 5)
     assert loaded.block_no == 5
     assert snapshot.verify(loaded)
     np.testing.assert_array_equal(
@@ -130,16 +135,86 @@ def test_snapshot_roundtrip_and_tamper(tmp_path):
         np.asarray(ws.state_digest(st)),
     )
     # latest() picks the highest block number.
-    snapshot.save(str(tmp_path), snap._replace(block_no=2))
+    older = snapshot.take(
+        st, block_no=2, journal_head=np.arange(2, dtype=np.uint32),
+        ledger_head=np.zeros(2, np.uint32), n_shards=4,
+    )
+    snapshot.save(str(tmp_path), older)
     assert snapshot.latest(str(tmp_path)).block_no == 5
-    # Tampering with the persisted arrays breaks the content digest.
-    bad = loaded._replace(versions=loaded.versions + 1)
+    # Tampering with a persisted shard breaks its digest (and the manifest
+    # tree head binds the shard layout).
+    part = loaded.shards[1]
+    bad_part = part._replace(versions=part.versions + 1)
+    assert not snapshot.verify_shard(loaded.manifest, bad_part)
+    bad = loaded._replace(
+        shards=tuple(bad_part if p.shard == 1 else p for p in loaded.shards)
+    )
     assert not snapshot.verify(bad)
-    with pytest.raises(recovery.RecoveryError, match="digest mismatch"):
+    with pytest.raises(recovery.RecoveryError, match="mismatch"):
         recovery.recover(
             journal_mod.StateJournal(DIMS), snapshot=bad,
             n_buckets=64, slots=4, value_width=DIMS.vw,
         )
+
+
+def test_snapshot_manifest_persists_overflow_and_layout(tmp_path):
+    st = _populated_state()
+    snap = snapshot.take(
+        st, block_no=3, journal_head=np.zeros(2, np.uint32),
+        ledger_head=np.zeros(2, np.uint32), n_shards=2, overflow_bits=0b10,
+    )
+    snapshot.save(str(tmp_path), snap)
+    man = snapshot.load_manifest(snapshot.path_for(str(tmp_path), 3))
+    assert man.overflow is True and man.overflow_bits == 0b10
+    assert man.n_buckets == 64 and man.n_shards == 2 and man.slots == 4
+    # Per-shard loading never touches the other shard's file.
+    part = snapshot.load_shard(str(tmp_path), 3, 1)
+    assert snapshot.verify_shard(man, part)
+
+
+def test_snapshot_listing_ignores_foreign_files(tmp_path):
+    """Satellite: list_blocks/latest/gc must skip files they do not own,
+    and a torn manifest (missing shard files, or an unreadable manifest)
+    must never be selected by latest()."""
+    st = _populated_state()
+    for bno in (2, 5):
+        snapshot.save(str(tmp_path), snapshot.take(
+            st, block_no=bno, journal_head=np.zeros(2, np.uint32),
+            ledger_head=np.zeros(2, np.uint32), n_shards=2,
+        ))
+    # Foreign files of every flavor.
+    (tmp_path / "notes.txt").write_text("keep me")
+    (tmp_path / "manifest_bogus.npz").write_text("not a number")
+    (tmp_path / "manifest_00000009.npz").write_text("torn write")
+    (tmp_path / "shard_00000009_0000.npz").write_text("torn write")
+    assert snapshot.list_blocks(str(tmp_path)) == [2, 5]
+    assert snapshot.latest(str(tmp_path)).block_no == 5
+    # A manifest whose shard file vanished is torn: never selected.
+    import os
+
+    os.remove(snapshot.shard_path_for(str(tmp_path), 5, 1))
+    assert snapshot.list_blocks(str(tmp_path)) == [2]
+    assert snapshot.latest(str(tmp_path)).block_no == 2
+    # Foreign files survive gc untouched.
+    snapshot.gc(str(tmp_path), keep=1)
+    assert (tmp_path / "notes.txt").read_text() == "keep me"
+    assert (tmp_path / "manifest_bogus.npz").exists()
+
+
+def test_snapshot_gc_drops_manifest_and_shards_as_unit(tmp_path):
+    st = _populated_state()
+    for bno in (1, 2, 3):
+        snapshot.save(str(tmp_path), snapshot.take(
+            st, block_no=bno, journal_head=np.zeros(2, np.uint32),
+            ledger_head=np.zeros(2, np.uint32), n_shards=2,
+        ))
+    snapshot.gc(str(tmp_path), keep=2)
+    assert snapshot.list_blocks(str(tmp_path)) == [2, 3]
+    names = sorted(p.name for p in tmp_path.iterdir())
+    # Block 1's manifest AND shard files are gone (GC'd as a unit).
+    assert not any("00000001" in n for n in names)
+    # Blocks 2/3 keep manifest + both shards each.
+    assert len(names) == 2 * 3
 
 
 # ------------------------------------------------------- end-to-end recovery
@@ -257,10 +332,13 @@ def test_engine_recovery_detects_snapshot_tamper():
         eng.run_round(eng.make_proposals(150, seed=40 + i))
     eng.store.drain()
     snap = eng.snapshots[-1]
-    keys = snap.keys.copy()
+    part = snap.shards[0]
+    keys = part.keys.copy()
     keys[0, 0, 0] ^= 1
-    eng.snapshots[-1] = snap._replace(keys=keys)
-    with pytest.raises(recovery.RecoveryError, match="digest mismatch"):
+    eng.snapshots[-1] = snap._replace(
+        shards=(part._replace(keys=keys),) + snap.shards[1:]
+    )
+    with pytest.raises(recovery.RecoveryError, match="mismatch"):
         eng.recover()
     assert eng.verify()["recovery_ok"] is False
     eng.store.close()
