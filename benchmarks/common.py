@@ -83,8 +83,8 @@ def make_endorsed_wire(dims: types.FabricDims, n: int, *, seed: int = 0,
     return jax.block_until_ready(wire), txb.tx_id, txb.client
 
 
-def timed(fn, *args, warmup: int = 1, iters: int = 3):
-    """Median wall time of fn(*args) with block_until_ready."""
+def timed_samples(fn, *args, warmup: int = 1, iters: int = 3) -> list[float]:
+    """Wall-time samples of fn(*args) with block_until_ready."""
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
     ts = []
@@ -92,4 +92,47 @@ def timed(fn, *args, warmup: int = 1, iters: int = 3):
         t0 = time.perf_counter()
         jax.block_until_ready(fn(*args))
         ts.append(time.perf_counter() - t0)
-    return float(np.median(ts))
+    return ts
+
+
+def timed(fn, *args, warmup: int = 1, iters: int = 3):
+    """Median wall time of fn(*args) with block_until_ready."""
+    return float(np.median(timed_samples(fn, *args, warmup=warmup,
+                                         iters=iters)))
+
+
+def latency_hist(samples):
+    """Fold wall-clock samples (seconds) into a repro.obs Histogram —
+    benchmarks report percentiles through the same fixed-bucket log2
+    semantics the engine registry uses, so rows and live metrics agree."""
+    from repro.obs.metrics import Histogram
+
+    h = Histogram()
+    for s in samples:
+        h.record(float(s))
+    return h
+
+
+def percentile_cols(hist, prefix: str = "commit") -> dict:
+    """p50/p95/p99 columns (ms) from an obs Histogram."""
+    return {
+        f"{prefix}_p50_ms": 1e3 * hist.percentile(50),
+        f"{prefix}_p95_ms": 1e3 * hist.percentile(95),
+        f"{prefix}_p99_ms": 1e3 * hist.percentile(99),
+    }
+
+
+def metrics_cols(collected: dict, name: str = "commit.latency",
+                 prefix: str = "commit") -> dict:
+    """Absorb one histogram out of a ``Registry.collect()`` snapshot into
+    row columns (p50/p95/p99 in ms + count). Empty when the metric is
+    absent (obs off or the path never recorded)."""
+    snap = collected.get(name)
+    if not snap or not snap.get("count"):
+        return {}
+    return {
+        f"{prefix}_p50_ms": 1e3 * snap["p50"],
+        f"{prefix}_p95_ms": 1e3 * snap["p95"],
+        f"{prefix}_p99_ms": 1e3 * snap["p99"],
+        f"{prefix}_n": snap["count"],
+    }

@@ -57,6 +57,7 @@ def _mk_engine(policy, n_buckets, slots, block_size, *, n_shards=1,
         snapshot_every_blocks=snapshot_every,
         snapshot_dir=snapshot_dir,
         journal_dir=journal_dir,
+        obs=True,  # per-engine registry: commit latency + resize events
     )
     return engine.FabricEngine(cfg)
 
@@ -84,12 +85,16 @@ def run(rounds: int, round_txs: int, n_buckets: int, slots: int,
                     overflow=int(eng.overflowed()),
                 )
             out = eng.verify()
+            m = eng.metrics()
             common.row(
                 "fig12", f"{label}/final", overflow_ok=out["overflow_ok"],
                 n_buckets=eng.n_buckets,
                 n_resizes=len(eng.reanchor_log),
                 verify_ok=all(out.values()) if label == "elastic"
                 else all(v for k, v in out.items() if k != "overflow_ok"),
+                resize_grows=m.get("resize.grow", 0),
+                overflow_latches=m.get("overflow.latches", 0),
+                **common.metrics_cols(m),
             )
 
         # Equivalence: whole workload replayed on the FINAL layout == the

@@ -1,0 +1,106 @@
+"""CI perf-trajectory gate: compare a benchmark JSON against the baseline.
+
+    PYTHONPATH=src python -m benchmarks.perf_gate BENCH_pr6.json out/bench.json
+
+Joins rows on ``(bench, name)`` and fails (exit 1) when:
+
+  * TPS regresses by more than ``--tps-tolerance`` (default 25%) on any
+    row both runs measured — the per-PR throughput trajectory;
+  * a CONTRACT column flips: ``overflow_ok`` (fig12's static-overflows /
+    elastic-stays-healthy contrast), ``commit_scatters`` (fig11's fused
+    ONE-scatter-per-window commit), ``identical`` (the pipelined ==
+    depth-1-oracle equivalence rows);
+  * a baseline row carrying a contract column is missing from the current
+    run (a silently skipped check must not pass the gate).
+
+TPS *improvements* and new rows never fail. Latency percentile columns
+(``commit_p50_ms``...) are reported for drift but not gated — wall-clock
+noise across CI hosts would make a hard latency gate flaky; the TPS
+tolerance already bounds sustained regressions.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+CONTRACT_COLS = ("overflow_ok", "commit_scatters", "identical")
+
+
+def _index(rows: list[dict]) -> dict:
+    return {(r.get("bench"), r.get("name")): r for r in rows
+            if r.get("bench") and r.get("name")}
+
+
+def compare(baseline: list[dict], current: list[dict],
+            tps_tolerance: float = 0.25) -> tuple[list[str], list[str]]:
+    """(failures, notes) of current vs baseline."""
+    base, cur = _index(baseline), _index(current)
+    failures, notes = [], []
+    for key, brow in sorted(base.items()):
+        crow = cur.get(key)
+        label = f"{key[0]}/{key[1]}"
+        has_contract = any(c in brow for c in CONTRACT_COLS)
+        if crow is None:
+            if has_contract:
+                failures.append(f"{label}: contract row missing from "
+                                "current run")
+            else:
+                notes.append(f"{label}: row missing from current run")
+            continue
+        for col in CONTRACT_COLS:
+            if col in brow:
+                if col not in crow:
+                    failures.append(f"{label}: contract column {col} "
+                                    "missing from current run")
+                elif bool(crow[col]) != bool(brow[col]):
+                    failures.append(
+                        f"{label}: {col} flipped "
+                        f"{brow[col]} -> {crow[col]}"
+                    )
+        btps, ctps = brow.get("tps"), crow.get("tps")
+        if isinstance(btps, (int, float)) and isinstance(ctps, (int, float)) \
+                and btps > 0:
+            ratio = ctps / btps
+            if ratio < 1.0 - tps_tolerance:
+                failures.append(
+                    f"{label}: tps {btps:,.0f} -> {ctps:,.0f} "
+                    f"({100 * (1 - ratio):.1f}% regression, tolerance "
+                    f"{100 * tps_tolerance:.0f}%)"
+                )
+            elif ratio < 1.0:
+                notes.append(f"{label}: tps {100 * (1 - ratio):.1f}% down "
+                             "(within tolerance)")
+        for col in ("commit_p50_ms", "commit_p95_ms", "commit_p99_ms"):
+            b, c = brow.get(col), crow.get(col)
+            if isinstance(b, (int, float)) and isinstance(c, (int, float)) \
+                    and b > 0 and c > 2 * b:
+                notes.append(f"{label}: {col} {b:.3g} -> {c:.3g} ms "
+                             "(reported, not gated)")
+    return failures, notes
+
+
+def main(argv: list[str] | None = None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("baseline", help="committed baseline rows (JSON)")
+    p.add_argument("current", help="this run's rows (JSON)")
+    p.add_argument("--tps-tolerance", type=float, default=0.25,
+                   help="allowed fractional TPS regression (default 0.25)")
+    args = p.parse_args(argv)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.current) as f:
+        current = json.load(f)
+    failures, notes = compare(baseline, current, args.tps_tolerance)
+    for n in notes:
+        print(f"  note: {n}")
+    for fmsg in failures:
+        print(f"  FAIL: {fmsg}")
+    print(f"perf gate: {len(failures)} failure(s), {len(notes)} note(s) "
+          f"over {len(_index(baseline))} baseline rows")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -29,6 +29,9 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="CI-sized figures (currently scales fig11 down "
                          "to a smoke run; other figures keep defaults)")
+    ap.add_argument("--obs-dir", default=None,
+                    help="dump fig11's obs trace + metrics snapshot here "
+                         "(trace.jsonl / trace_chrome.json / metrics.json)")
     args = ap.parse_args()
     which = args.only.split(",") if args.only else list(ALL)
 
@@ -66,10 +69,13 @@ def main() -> None:
         print("== Fig 11: device-side block pipeline ==")
         # --quick keeps the full depth sweep (the CI artifact asserts the
         # fused commit at depth 8) on a small block/table size.
-        fig11_pipeline.main(
+        fig11_args = (
             ["--depths", "1", "2", "8", "--b-round", "32",
              "--n-buckets", "1024", "--iters", "1"] if args.quick else []
         )
+        if args.obs_dir:
+            fig11_args += ["--obs-dir", args.obs_dir]
+        fig11_pipeline.main(fig11_args)
     if "fig12" in which:
         from benchmarks import fig12_rebalance
         print("== Fig 12: elastic state (overflow-driven shard split) ==")

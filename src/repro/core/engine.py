@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs as obs_mod
 from repro.core import (
     committer,
     endorser,
@@ -89,6 +90,13 @@ class EngineConfig:
     # with its own shard count).
     resize_policy: ResizePolicy | None = None
     snapshot_shards: int = 1
+    # Observability (repro/obs): True builds a per-engine tracer + metrics
+    # registry and instruments the round path (per-stage spans, the
+    # commit.latency histogram, tx/overflow/journal counters, resize
+    # events). False routes every probe to the shared no-op sinks — the
+    # hot path gains only null calls, no device syncs. An obs.Obs instance
+    # is also accepted (benchmarks sharing one registry across engines).
+    obs: bool | object = False
 
     @property
     def name(self) -> str:
@@ -131,6 +139,20 @@ class FabricEngine:
                 "the journal the storage role materializes"
             )
         self.cfg = cfg
+        # Observability handle: per-engine tracer + registry, or the shared
+        # no-op pair. The window committer (if any) reports through the
+        # same handle, so one collect() covers the whole engine.
+        if isinstance(cfg.obs, obs_mod.Obs):
+            self.obs = cfg.obs
+        else:
+            self.obs = (obs_mod.Obs.enabled() if cfg.obs
+                        else obs_mod.Obs.disabled())
+        if window_committer is not None and self.obs.on:
+            window_committer.attach_obs(self.obs)
+        # Overflow bits already reported through the labeled shard gauge /
+        # latch counter (obs): gauges re-set each round, the counter fires
+        # once per newly latched bit.
+        self._obs_seen_bits = 0
         # Optional device-side block pipeline: an adapter (see
         # repro/pipeline/engine_bridge.MeshWindowCommitter) that commits a
         # WINDOW of pipeline-depth blocks per mesh-step invocation instead
@@ -148,7 +170,8 @@ class FabricEngine:
         # restart story keep the seed's storage-role cost and memory profile.
         # The commit-path head (PeerConfig.journal) is independent and cheap.
         self.journal = (
-            state_journal.StateJournal(cfg.dims, spill_dir=cfg.journal_dir)
+            state_journal.StateJournal(cfg.dims, spill_dir=cfg.journal_dir,
+                                       metrics=self.obs.registry)
             if (cfg.store_blocks and cfg.peer.journal
                 and (cfg.snapshot_every_blocks > 0
                      or cfg.journal_dir is not None))
@@ -226,21 +249,25 @@ class FabricEngine:
             n_endorsers=cfg.n_endorsers,
         )
         wire = jax.block_until_ready(unmarshal.marshal(txb, cfg.dims))
+        tracer, reg = self.obs.tracer, self.obs.registry
         t0 = time.perf_counter()
 
         # Order.
-        blocks = orderer.order_batch_jit(
-            wire, txb.tx_id, txb.client, self.log_head, cfg.orderer
-        )
-        self.log_head = blocks.log_head
+        with tracer.span("round.order",
+                         sync=lambda: blocks.log_head):
+            blocks = orderer.order_batch_jit(
+                wire, txb.tx_id, txb.client, self.log_head, cfg.orderer
+            )
+            self.log_head = blocks.log_head
 
         if self.window_committer is not None:
             # Device-side block pipeline: hand the mesh step a window of
             # blocks per invocation (depth blocks in flight ON device,
             # batched consensus + MVCC gathers) instead of per-block
             # dispatch.
-            retired = self._commit_windows(blocks)
-            self.window_committer.block_until_ready()
+            with tracer.span("round.commit", n_blocks=blocks.wire.shape[0]):
+                retired = self._commit_windows(blocks)
+                self.window_committer.block_until_ready()
         else:
             # Commit block by block; up to pipeline_depth blocks in flight
             # (JAX async dispatch = the paper's block-shepherd goroutines).
@@ -248,40 +275,58 @@ class FabricEngine:
             # block needs after retirement (its number, the pre-commit
             # head) is carried host-side / copied — the in-flight tuple
             # never references donated buffers.
-            in_flight = []
-            retired = []
-            for b in range(blocks.wire.shape[0]):
-                bno = int(self._next_block_no)
-                self._next_block_no += 1
-                prev_head = jnp.array(self.peer_state.ledger_head, copy=True)
-                res = committer.commit_block(
-                    self.peer_state, blocks.wire[b], cfg.dims, cfg.peer
-                )
-                self.peer_state = res.state
-                self._overflow = self._overflow | res.overflow
-                in_flight.append((blocks.wire[b], bno, prev_head,
-                                  res.block_hash, res.valid))
-                if len(in_flight) >= max(cfg.peer.pipeline_depth, 1):
+            n_blocks = blocks.wire.shape[0]
+            with tracer.span("round.commit", n_blocks=n_blocks,
+                             sync=lambda: self.peer_state.ledger_head):
+                in_flight = []
+                retired = []
+                for b in range(n_blocks):
+                    bno = int(self._next_block_no)
+                    self._next_block_no += 1
+                    prev_head = jnp.array(self.peer_state.ledger_head,
+                                          copy=True)
+                    res = committer.commit_block(
+                        self.peer_state, blocks.wire[b], cfg.dims, cfg.peer
+                    )
+                    self.peer_state = res.state
+                    self._overflow = self._overflow | res.overflow
+                    in_flight.append((blocks.wire[b], bno, prev_head,
+                                      res.block_hash, res.valid))
+                    if len(in_flight) >= max(cfg.peer.pipeline_depth, 1):
+                        retired.append(self._ship(*in_flight.pop(0)))
+                while in_flight:
                     retired.append(self._ship(*in_flight.pop(0)))
-            while in_flight:
-                retired.append(self._ship(*in_flight.pop(0)))
 
-            jax.block_until_ready(self.peer_state.ledger_head)
+                jax.block_until_ready(self.peer_state.ledger_head)
+            # Per-block commit latency: blocks stay in flight async (the
+            # paper's block shepherds), so individual block walls don't
+            # exist — amortize the round's order+commit wall over its
+            # blocks (the window path amortizes per window the same way).
+            dt = (time.perf_counter() - t0) / n_blocks
+            hist = reg.histogram("commit.latency")
+            for _ in range(n_blocks):
+                hist.record(dt)
         wall = time.perf_counter() - t0
 
         # Post-window: endorser-cluster replica updates (their hardware).
         n_valid = 0
-        for wire_b, valid in retired:
-            dec = unmarshal.unmarshal(wire_b, self.cfg.dims)
-            self.endorser_state = endorser.apply_validated_jit(
-                self.endorser_state, dec.txb, valid
-            )
-            n_valid += int(valid.sum())
+        with tracer.span("round.endorser_replay",
+                         sync=lambda: self.endorser_state.versions):
+            for wire_b, valid in retired:
+                dec = unmarshal.unmarshal(wire_b, self.cfg.dims)
+                self.endorser_state = endorser.apply_validated_jit(
+                    self.endorser_state, dec.txb, valid
+                )
+                n_valid += int(valid.sum())
 
         self._maybe_resize()
         self._maybe_snapshot()
         self.total_valid += n_valid
         self.total_txs += n
+        reg.counter("txs.valid").inc(n_valid)
+        reg.counter("txs.invalid").inc(n - n_valid)
+        if self.obs.on:
+            self._record_overflow_metrics()
         return RoundStats(
             n_txs=n, n_blocks=blocks.wire.shape[0], n_valid=n_valid,
             wall_s=wall,
@@ -310,8 +355,34 @@ class FabricEngine:
     def _ship(self, wire_b, bno: int, prev_head, block_hash, valid):
         """Block leaves the pipeline: async handoff to the storage role."""
         if self.store is not None:
-            self.store.submit(bno, prev_head, block_hash, wire_b, valid)
+            with self.obs.tracer.span("block.ship", block_no=bno):
+                self.store.submit(bno, prev_head, block_hash, wire_b, valid)
         return wire_b, valid
+
+    # -- observability ---------------------------------------------------------
+
+    def metrics(self) -> dict:
+        """One-call snapshot of every engine metric (repro.obs Registry
+        collect): counters/gauges as numbers, histograms as
+        count/sum/mean/p50/p95/p99 dicts. Empty when obs is off."""
+        return self.obs.registry.collect()
+
+    @property
+    def tracer(self):
+        return self.obs.tracer
+
+    def _record_overflow_metrics(self) -> None:
+        """Per-shard overflow bits as a labeled gauge + a latch counter
+        that fires once per NEWLY set bit. One tiny host transfer per
+        round; only runs with obs on."""
+        bits = self.overflow_bits()
+        reg = self.obs.registry
+        new = bits & ~self._obs_seen_bits
+        if new:
+            reg.counter("overflow.latches").inc(bin(new).count("1"))
+            self._obs_seen_bits |= bits
+        for m in range(self.n_shards):
+            reg.gauge("state.shard_overflow", shard=m).set((bits >> m) & 1)
 
     # -- elastic state (resize epochs) -----------------------------------------
 
@@ -338,7 +409,7 @@ class FabricEngine:
         Restored bits (a restart re-latching a persisted mask) OR in, so a
         mesh peer's which-shard information survives a host-side restore."""
         if self.window_committer is not None:
-            bits = int(np.asarray(self.window_committer.state.overflow[0]))
+            bits = self.window_committer.overflow_bits
         else:
             bits = int(bool(np.asarray(self._overflow)))
         return bits | self._restored_overflow_bits
@@ -367,11 +438,20 @@ class FabricEngine:
                 and self.overflow_bits() & ~self._repaired_bits)
         )
         if grow and self.n_buckets * 2 <= pol.max_buckets:
+            self.obs.tracer.event(
+                "resize.decision", action="grow", min_free=min_free,
+                overflow_bits=self.overflow_bits(),
+                n_buckets=self.n_buckets,
+            )
             self._repaired_bits |= self.overflow_bits()
             return self.resize(self.n_buckets * 2)
         if (pol.shrink_fill and self.n_buckets // 2 >= pol.min_buckets
                 and occ.sum() < pol.shrink_fill
                 * (self.n_buckets // 2) * st.slots):
+            self.obs.tracer.event(
+                "resize.decision", action="shrink",
+                occupancy=int(occ.sum()), n_buckets=self.n_buckets,
+            )
             return self.resize(self.n_buckets // 2)
         return None
 
@@ -411,6 +491,10 @@ class FabricEngine:
             "hot_shard": hot,
         }
         self.reanchor_log.append(info)
+        self.obs.registry.counter(
+            "resize.grow" if new_n_buckets > old_nb else "resize.shrink"
+        ).inc()
+        self.obs.tracer.event("resize.epoch", **info)
         return info
 
     def _hot_shard(self) -> int:
@@ -435,20 +519,23 @@ class FabricEngine:
         if tip - last < cfg.snapshot_every_blocks:
             return
         self.store.drain()  # journal must cover every shipped block
-        snap = snapshot.take(
-            self._state_view(),
-            block_no=tip,
-            journal_head=self._peer_journal_head(),
-            ledger_head=self._ledger_head(),
-            n_shards=self.n_shards,
-            overflow_bits=self.overflow_bits(),
-            reanchor_head=(self.journal.reanchor_head
-                           if self.journal is not None else None),
-        )
+        with self.obs.tracer.span("snapshot.take", block_no=tip):
+            snap = snapshot.take(
+                self._state_view(),
+                block_no=tip,
+                journal_head=self._peer_journal_head(),
+                ledger_head=self._ledger_head(),
+                n_shards=self.n_shards,
+                overflow_bits=self.overflow_bits(),
+                reanchor_head=(self.journal.reanchor_head
+                               if self.journal is not None else None),
+            )
         self.snapshots.append(snap)
         if cfg.snapshot_dir is not None:
-            snapshot.save(cfg.snapshot_dir, snap)
-            snapshot.gc(cfg.snapshot_dir, keep=2)
+            snapshot.save(cfg.snapshot_dir, snap,
+                          registry=self.obs.registry)
+            snapshot.gc(cfg.snapshot_dir, keep=2,
+                        registry=self.obs.registry)
         if cfg.prune_chain and len(self.snapshots) >= 2:
             base = self.snapshots[-2].block_no
             self.store.prune_upto(base)
@@ -486,7 +573,9 @@ class FabricEngine:
                 "restore requires journal_dir and snapshot_dir"
             )
         eng = cls(cfg)
-        jrnl = state_journal.StateJournal.load(cfg.dims, cfg.journal_dir)
+        jrnl = state_journal.StateJournal.load(
+            cfg.dims, cfg.journal_dir, metrics=eng.obs.registry
+        )
         eng.journal = jrnl
         if eng.store is not None:
             eng.store.close()

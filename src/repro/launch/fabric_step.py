@@ -72,8 +72,9 @@ class FabricMeshState(NamedTuple):
     ledger_head: jnp.ndarray  # (C, 2)
     journal_head: jnp.ndarray  # (C, 2) — state-journal digest chain
     block_no: jnp.ndarray  # (C,) — next block number (journal chain input)
-    overflow: jnp.ndarray  # (C,) u32 — STICKY per-shard BITMASK: bit m set
-    # == shard m (bit 0 for replicated state) ever dropped a write because
+    overflow: jnp.ndarray  # (C, LANES) u32 — STICKY per-shard BITMASK in
+    # state_sharding.OVERFLOW_LANES lane words: bit m of lane m//32 set ==
+    # shard m (bit 0 for replicated state) ever dropped a write because
     # a bucket ran out of slots. An overflowed channel's version accounting
     # is no longer trustworthy (the dropped insert never bumped), so
     # FabricEngine.verify() reports it unhealthy — and the elastic-state
@@ -94,7 +95,7 @@ def create_mesh_state(n_channels: int, dims: types.FabricDims,
         ledger_head=z(n_channels, 2),
         journal_head=z(n_channels, 2),
         block_no=z(n_channels),
-        overflow=z(n_channels),
+        overflow=z(n_channels, state_sharding.OVERFLOW_LANES),
     )
 
 
@@ -109,7 +110,7 @@ def state_specs(mesh, *, shard_state: bool = False) -> FabricMeshState:
     st = s if shard_state else c
     return FabricMeshState(
         keys=st(3), versions=st(2), values=st(3), log_head=c(1),
-        ledger_head=c(1), journal_head=c(1), block_no=c(0), overflow=c(0),
+        ledger_head=c(1), journal_head=c(1), block_no=c(0), overflow=c(1),
     )
 
 

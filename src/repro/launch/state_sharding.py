@@ -165,24 +165,36 @@ def commit_window_routed(local: ws.HashState, log_keys: jnp.ndarray,
     )
 
 
-def overflow_bits(shard_overflow: jnp.ndarray) -> jnp.ndarray:
-    """Per-shard overflow vector (M,) bool -> sticky BITMASK () u32.
+# Sticky overflow bitmask lanes. JAX disables 64-bit ints by default, so
+# the mask is carried as OVERFLOW_LANES u32 words (lane l holds shard bits
+# [32*l, 32*l+32)) instead of one u64 — 64 model ranks of exact hot-shard
+# reporting. Host-side code converts with bits_to_int / int_to_lanes.
+OVERFLOW_LANES = 2
+MAX_OVERFLOW_SHARDS = 32 * OVERFLOW_LANES
 
-    Bit m set == shard m dropped a write on a full bucket. The mesh state
-    latches this word sticky (FabricMeshState.overflow), so the resize
-    policy can pick the hot shard without a second collective; M <= 32
-    (one mesh axis of model ranks)."""
+
+def overflow_bits(shard_overflow: jnp.ndarray) -> jnp.ndarray:
+    """Per-shard overflow vector (M,) bool -> sticky BITMASK (LANES,) u32.
+
+    Bit m of lane m//32 set == shard m dropped a write on a full bucket.
+    The mesh state latches these words sticky (FabricMeshState.overflow),
+    so the resize policy can pick the hot shard without a second
+    collective; M <= 32 * OVERFLOW_LANES (one mesh axis of model ranks)."""
     m = shard_overflow.shape[0]
-    if m > 32:
-        raise ValueError(f"overflow bitmask supports <= 32 shards, got {m}")
-    return (
-        shard_overflow.astype(U32) << jnp.arange(m, dtype=U32)
-    ).sum(dtype=U32)
+    if m > MAX_OVERFLOW_SHARDS:
+        raise ValueError(
+            f"overflow bitmask supports <= {MAX_OVERFLOW_SHARDS} shards, "
+            f"got {m}"
+        )
+    idx = jnp.arange(m)
+    word = shard_overflow.astype(U32) << (idx % 32).astype(U32)  # (M,)
+    lane = (idx // 32)[:, None] == jnp.arange(OVERFLOW_LANES)  # (M, LANES)
+    return (word[:, None] * lane).sum(axis=0, dtype=U32)  # (LANES,)
 
 
 def dropped_write_bits(keys: jnp.ndarray, dropped: jnp.ndarray,
                        n_buckets_global: int, n_shards: int) -> jnp.ndarray:
-    """Overflow bitmask of a window's dropped writes, () u32.
+    """Overflow bitmask of a window's dropped writes, (LANES,) u32.
 
     ``keys`` (L, 2) / ``dropped`` (L,) bool are the write planner's log row
     (pipeline/batched_mvcc.plan_block_writes) — replicated on every rank,
@@ -193,6 +205,24 @@ def dropped_write_bits(keys: jnp.ndarray, dropped: jnp.ndarray,
         (owner[:, None] == jnp.arange(n_shards)) & dropped[:, None]
     ).any(axis=0)  # (M,)
     return overflow_bits(onehot)
+
+
+def bits_to_int(lanes) -> int:
+    """Host-side decode: (LANES,) u32 lane words -> one Python int."""
+    import numpy as np
+
+    arr = np.asarray(lanes).reshape(-1).astype(np.uint64)
+    return int(sum(int(w) << (32 * l) for l, w in enumerate(arr)))
+
+
+def int_to_lanes(bits: int):
+    """Host-side encode: Python int -> (LANES,) u32 lane words."""
+    import numpy as np
+
+    return np.array(
+        [(bits >> (32 * l)) & 0xFFFFFFFF for l in range(OVERFLOW_LANES)],
+        dtype=np.uint32,
+    )
 
 
 class RoutedResizeResult(NamedTuple):

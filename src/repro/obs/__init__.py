@@ -1,0 +1,55 @@
+"""Engine-wide observability: span tracing + metrics registry.
+
+Stdlib-only (no jax/numpy at import time) so any layer of the repro —
+core, pipeline, storage, launch, serving, benchmarks — can depend on it
+without cycles. See :mod:`repro.obs.trace` and :mod:`repro.obs.metrics`
+for the design contracts (device-sync boundaries, exact histogram merge).
+
+Typical wiring::
+
+    from repro import obs
+
+    o = obs.Obs.enabled()             # or obs.Obs.disabled()
+    with o.tracer.span("commit.block", sync=lambda: state):
+        state = commit(state, block)
+    o.registry.counter("txs.valid").inc(n_valid)
+    print(o.registry.to_prometheus())
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from .metrics import (  # noqa: F401
+    NULL_REGISTRY, Counter, Gauge, Histogram, NullRegistry, Registry,
+    null_registry,
+)
+from .trace import (  # noqa: F401
+    NULL_TRACER, NullTracer, Span, Tracer, null_tracer,
+)
+
+__all__ = [
+    "Obs", "Counter", "Gauge", "Histogram", "Registry", "NullRegistry",
+    "Span", "Tracer", "NullTracer", "NULL_REGISTRY", "NULL_TRACER",
+    "null_registry", "null_tracer",
+]
+
+
+@dataclass
+class Obs:
+    """One handle bundling a tracer + registry, on or off together."""
+
+    tracer: object = field(default_factory=lambda: NULL_TRACER)
+    registry: object = field(default_factory=lambda: NULL_REGISTRY)
+
+    @classmethod
+    def enabled(cls) -> "Obs":
+        return cls(tracer=Tracer(), registry=Registry())
+
+    @classmethod
+    def disabled(cls) -> "Obs":
+        return cls()
+
+    @property
+    def on(self) -> bool:
+        return not isinstance(self.tracer, NullTracer)

@@ -1,0 +1,316 @@
+"""Metrics registry: counters, gauges, and log2 latency histograms.
+
+Dependency-free (stdlib only) so every layer — core, pipeline, storage,
+serving, benchmarks — can emit metrics without import cycles or optional
+deps. The paper's whole method is per-stage measurement (§IV: find where
+peer time goes, then remove it); this registry is the engine-wide carrier
+for those measurements.
+
+Three instrument kinds:
+
+  * :class:`Counter` — monotonically increasing total (txs validated,
+    journal appends, overflow latches).
+  * :class:`Gauge`   — last-set value (admission-queue depth, per-shard
+    overflow bits, compiled-program collective counts).
+  * :class:`Histogram` — fixed log2 buckets over a [lo, hi) value range.
+    Bucket edges are ``lo * 2**i``, so two histograms with the same range
+    have IDENTICAL bucket boundaries and :meth:`Histogram.merge` (count
+    addition) is *exact*: the merged histogram equals the histogram of the
+    pooled samples, bucket for bucket — which makes percentiles of merged
+    per-shard/per-round histograms well-defined, not approximated twice.
+    Percentiles use the nearest-rank rule (``ceil(q/100 * n)``) over
+    bucket counts and report the bucket's upper edge: a conservative bound
+    that is within one bucket ratio (2x) of the exact sample percentile
+    (``numpy.percentile(..., method="inverted_cdf")``), pinned by
+    tests/test_obs.py.
+
+Instruments support labels (``registry.gauge("state.shard_overflow",
+shard=3)``); a labeled instrument is keyed ``name{shard=3}`` in
+:meth:`Registry.collect` snapshots. ``Registry.to_prometheus`` renders the
+standard text exposition (histograms as cumulative ``_bucket{le=...}``
+series) for the serving path's ``stats_text`` endpoint hook.
+
+``NULL_REGISTRY`` is a shared no-op registry: instrumented code paths take
+a registry argument defaulting to it, so observability-off engines pay one
+attribute lookup and a no-op call, nothing else.
+"""
+
+from __future__ import annotations
+
+import math
+import threading
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "Registry", "NULL_REGISTRY",
+    "null_registry",
+]
+
+
+class Counter:
+    """Monotonic counter. ``inc`` with a negative amount is an error."""
+
+    __slots__ = ("value",)
+
+    def __init__(self) -> None:
+        self.value = 0
+
+    def inc(self, amount: int | float = 1) -> None:
+        if amount < 0:
+            raise ValueError(f"counter decrement: {amount}")
+        self.value += amount
+
+
+class Gauge:
+    """Last-written value."""
+
+    __slots__ = ("value",)
+
+    def __init__(self) -> None:
+        self.value = 0
+
+    def set(self, value) -> None:
+        self.value = value
+
+    def inc(self, amount: int | float = 1) -> None:
+        self.value += amount
+
+    def dec(self, amount: int | float = 1) -> None:
+        self.value -= amount
+
+
+class Histogram:
+    """Fixed-bucket log2 histogram over ``[lo, hi)``.
+
+    Bucket 0 holds values ``<= lo``; bucket ``1 + i`` holds
+    ``(lo * 2**i, lo * 2**(i+1)]``; the last bucket holds values beyond
+    ``hi`` (reported as ``inf`` by :meth:`percentile`). Defaults cover
+    100ns..~1700s — the full latency range of a block commit, a snapshot
+    save, or a whole benchmark round — in 35 buckets.
+    """
+
+    __slots__ = ("lo", "n_buckets", "counts", "count", "sum", "_edges")
+
+    def __init__(self, lo: float = 1e-7, hi: float = 1e3) -> None:
+        if not (lo > 0 and hi > lo):
+            raise ValueError(f"bad histogram range [{lo}, {hi})")
+        self.lo = float(lo)
+        self.n_buckets = int(math.ceil(math.log2(hi / lo))) + 2
+        self.counts = [0] * self.n_buckets
+        self.count = 0
+        self.sum = 0.0
+        self._edges = [lo * 2.0 ** i for i in range(self.n_buckets - 1)]
+
+    def record(self, value: float) -> None:
+        self.count += 1
+        self.sum += value
+        if value <= self.lo:
+            self.counts[0] += 1
+        else:
+            i = int(math.ceil(math.log2(value / self.lo)))
+            self.counts[min(i, self.n_buckets - 1)] += 1
+
+    @property
+    def edges(self) -> list[float]:
+        """Upper edges of the finite buckets (the last bucket is +inf)."""
+        return list(self._edges)
+
+    def percentile(self, q: float) -> float:
+        """Nearest-rank percentile, reported as the bucket's upper edge.
+
+        Exact modulo bucket resolution: the true sample at rank
+        ``ceil(q/100 * count)`` lies in the returned bucket, so the result
+        over-reports by at most one bucket ratio (2x). Returns ``nan`` on
+        an empty histogram and ``inf`` when the rank falls in the overflow
+        bucket (values past ``hi`` — widen the range if that matters).
+        """
+        if self.count == 0:
+            return float("nan")
+        rank = max(1, math.ceil(q / 100.0 * self.count))
+        acc = 0
+        for i, c in enumerate(self.counts):
+            acc += c
+            if acc >= rank:
+                return (self._edges[i] if i < len(self._edges)
+                        else float("inf"))
+        return float("inf")  # unreachable: acc ends at count
+
+    def merge(self, other: "Histogram") -> None:
+        """Exact pooled merge (bucket edges must match)."""
+        if other.lo != self.lo or other.n_buckets != self.n_buckets:
+            raise ValueError("histogram ranges differ: merge is not exact")
+        for i, c in enumerate(other.counts):
+            self.counts[i] += c
+        self.count += other.count
+        self.sum += other.sum
+
+    def snapshot(self) -> dict:
+        """count/sum/mean + the standard percentiles, one dict."""
+        mean = self.sum / self.count if self.count else float("nan")
+        return {
+            "count": self.count, "sum": self.sum, "mean": mean,
+            "p50": self.percentile(50), "p95": self.percentile(95),
+            "p99": self.percentile(99),
+        }
+
+
+def _key(name: str, labels: dict) -> str:
+    if not labels:
+        return name
+    inner = ",".join(f"{k}={labels[k]}" for k in sorted(labels))
+    return f"{name}{{{inner}}}"
+
+
+class Registry:
+    """Get-or-create instrument store with a one-call snapshot.
+
+    Thread-safe creation (the storage role's writer thread records journal
+    metrics concurrently with the engine thread); individual increments
+    ride the GIL like every other host-side counter in the repo.
+    """
+
+    def __init__(self) -> None:
+        self._instruments: dict[str, object] = {}
+        self._kinds: dict[str, str] = {}
+        self._lock = threading.Lock()
+
+    def _get(self, name: str, labels: dict, kind: str, factory):
+        key = _key(name, labels)
+        inst = self._instruments.get(key)
+        if inst is not None:
+            if self._kinds[key] != kind:
+                raise TypeError(
+                    f"{key} already registered as {self._kinds[key]}"
+                )
+            return inst
+        with self._lock:
+            inst = self._instruments.get(key)
+            if inst is None:
+                inst = factory()
+                self._instruments[key] = inst
+                self._kinds[key] = kind
+            elif self._kinds[key] != kind:
+                raise TypeError(
+                    f"{key} already registered as {self._kinds[key]}"
+                )
+            return inst
+
+    def counter(self, name: str, **labels) -> Counter:
+        return self._get(name, labels, "counter", Counter)
+
+    def gauge(self, name: str, **labels) -> Gauge:
+        return self._get(name, labels, "gauge", Gauge)
+
+    def histogram(self, name: str, lo: float = 1e-7, hi: float = 1e3,
+                  **labels) -> Histogram:
+        return self._get(name, labels, "histogram",
+                         lambda: Histogram(lo, hi))
+
+    def collect(self) -> dict:
+        """Flat snapshot: ``name{labels}`` -> value (histograms -> the
+        count/sum/mean/p50/p95/p99 dict). Safe to call any time; values
+        are plain Python numbers, JSON-ready."""
+        out = {}
+        for key, inst in sorted(self._instruments.items()):
+            if isinstance(inst, Histogram):
+                out[key] = inst.snapshot()
+            else:
+                out[key] = inst.value
+        return out
+
+    def to_prometheus(self) -> str:
+        """Prometheus text exposition (metric names sanitized to
+        ``[a-zA-Z0-9_]``, histograms as cumulative ``le`` buckets)."""
+        by_name: dict[str, list] = {}
+        for key, inst in sorted(self._instruments.items()):
+            name, _, rest = key.partition("{")
+            labels = rest[:-1] if rest else ""
+            by_name.setdefault(name, []).append((labels, inst))
+        lines = []
+        for name, entries in sorted(by_name.items()):
+            pname = "".join(
+                c if c.isalnum() or c == "_" else "_" for c in name
+            )
+            kind = self._kinds[_key(name, {})] if name in self._kinds \
+                else self._kinds[
+                    next(k for k in self._kinds if k.startswith(name + "{"))]
+            ptype = {"counter": "counter", "gauge": "gauge",
+                     "histogram": "histogram"}[kind]
+            lines.append(f"# TYPE {pname} {ptype}")
+            for labels, inst in entries:
+                plabels = labels.replace("=", '="').replace(",", '",') \
+                    + ('"' if labels else "")
+                sfx = f"{{{plabels}}}" if labels else ""
+                if isinstance(inst, Histogram):
+                    acc = 0
+                    for i, c in enumerate(inst.counts):
+                        acc += c
+                        le = (f"{inst.edges[i]:.9g}" if i < len(inst.edges)
+                              else "+Inf")
+                        sep = "," if labels else ""
+                        lines.append(
+                            f'{pname}_bucket{{{plabels}{sep}le="{le}"}} '
+                            f"{acc}"
+                        )
+                    lines.append(f"{pname}_sum{sfx} {inst.sum:.9g}")
+                    lines.append(f"{pname}_count{sfx} {inst.count}")
+                else:
+                    lines.append(f"{pname}{sfx} {inst.value}")
+        return "\n".join(lines) + "\n"
+
+
+class _NullInstrument:
+    """Absorbs every instrument method; always reads as empty/0."""
+
+    value = 0
+    count = 0
+    sum = 0.0
+
+    def inc(self, amount=1) -> None:
+        pass
+
+    def dec(self, amount=1) -> None:
+        pass
+
+    def set(self, value) -> None:
+        pass
+
+    def record(self, value) -> None:
+        pass
+
+    def merge(self, other) -> None:
+        pass
+
+    def percentile(self, q) -> float:
+        return float("nan")
+
+    def snapshot(self) -> dict:
+        return {}
+
+
+_NULL_INSTRUMENT = _NullInstrument()
+
+
+class NullRegistry:
+    """No-op registry: obs-off engines route here (one call, no state)."""
+
+    def counter(self, name, **labels):
+        return _NULL_INSTRUMENT
+
+    def gauge(self, name, **labels):
+        return _NULL_INSTRUMENT
+
+    def histogram(self, name, lo=1e-7, hi=1e3, **labels):
+        return _NULL_INSTRUMENT
+
+    def collect(self) -> dict:
+        return {}
+
+    def to_prometheus(self) -> str:
+        return ""
+
+
+NULL_REGISTRY = NullRegistry()
+
+
+def null_registry() -> NullRegistry:
+    return NULL_REGISTRY

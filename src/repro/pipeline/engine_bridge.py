@@ -17,12 +17,14 @@ durability checks against :meth:`MeshWindowCommitter.state_digest` /
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs as obs_mod
 from repro.core import ledger, types
 from repro.core import world_state as ws
 from repro.launch import fabric_step as fs
@@ -92,6 +94,20 @@ class MeshWindowCommitter:
         self.prev_hash = jnp.zeros((2,), U32)
         self._steps: dict[int, object] = {}
         self._resizes: dict[int, object] = {}
+        self.obs = obs_mod.Obs.disabled()
+        self._hlo_gauged: set[int] = set()
+
+    def attach_obs(self, obs) -> None:
+        """Route window spans + metrics through ``obs`` (repro.obs.Obs).
+
+        Span boundaries per window (see repro.obs.trace): ``window.fill``
+        covers the async dispatch of the step AND the store-chain hash
+        fold (host enqueue only), ``window.steady`` blocks until the
+        device finishes the window's validate/commit work,
+        ``window.drain`` covers the host transfer of the per-block
+        hashes. With obs detached nothing syncs that didn't before, and
+        with it attached nothing serializes that overlapped before."""
+        self.obs = obs
 
     @property
     def depth(self) -> int:
@@ -120,21 +136,71 @@ class MeshWindowCommitter:
                       ) -> WindowResult:
         """Commit ``wire`` (D, B, WB) / ``tx_ids`` (D, B, 2), D <= depth."""
         d = wire.shape[0]
+        tracer, reg = self.obs.tracer, self.obs.registry
+        t0 = time.perf_counter()
         block_no0 = self.state.block_no[0]
         step = self._step_for(d)
-        if d == 1:
-            self.state, valid = step(self.state, wire[0][None],
-                                     tx_ids[0][None])
-            valid = valid[:, None]  # (1, 1, B)
-        else:
-            self.state, valid = step(self.state, wire[None], tx_ids[None])
-        valid = valid[0]  # (D, B)
-        prevs, hashes = _chain_hashes(self.prev_hash, block_no0, wire, valid)
-        self.prev_hash = hashes[-1]
+        if self.obs.on and d not in self._hlo_gauged:
+            self._record_hlo_gauges(step, d, wire, tx_ids)
+        with tracer.span("window.fill", depth=d):
+            # Async dispatch only: the span measures host enqueue time of
+            # the whole window — the step AND the store-chain hash fold
+            # (dispatching both before any sync preserves the overlap the
+            # uninstrumented path has; a sync between them would serialize
+            # the device against the hash fold's enqueue).
+            if d == 1:
+                self.state, valid = step(self.state, wire[0][None],
+                                         tx_ids[0][None])
+                valid = valid[:, None]  # (1, 1, B)
+            else:
+                self.state, valid = step(self.state, wire[None],
+                                         tx_ids[None])
+            valid = valid[0]  # (D, B)
+            prevs_d, hashes_d = _chain_hashes(
+                self.prev_hash, block_no0, wire, valid
+            )
+            self.prev_hash = hashes_d[-1]
+        with tracer.span("window.steady", depth=d,
+                         sync=lambda: self.state.ledger_head):
+            pass  # device executes the dispatched window inside this span
+        with tracer.span("window.drain", depth=d):
+            # Host transfer of the per-block chain hashes (the storage
+            # role's input). This is the sync the obs-off path pays too.
+            prevs, hashes = np.asarray(prevs_d), np.asarray(hashes_d)
+        # Per-block commit latency, amortized over the window (blocks
+        # inside a window retire together — the fused commit is the point).
+        dt = (time.perf_counter() - t0) / d
+        hist = reg.histogram("commit.latency")
+        for _ in range(d):
+            hist.record(dt)
+        reg.counter("window.commits").inc()
+        reg.counter("blocks.committed").inc(d)
         return WindowResult(
-            valid=valid, prev_hash=np.asarray(prevs),
-            block_hash=np.asarray(hashes),
+            valid=valid, prev_hash=prevs, block_hash=hashes,
         )
+
+    def _record_hlo_gauges(self, jstep, d: int, wire, tx_ids) -> None:
+        """Fold the compiled window program's cost model into gauges
+        (launch/hlo_cost): collective count, wire bytes, scatter count —
+        the contract numbers fig11 asserts, now visible per depth on any
+        obs-enabled run. One-time per depth (AOT-lowers the same jit)."""
+        from repro.launch import hlo_cost
+
+        self._hlo_gauged.add(d)
+        args = ((self.state, wire[0][None], tx_ids[0][None]) if d == 1
+                else (self.state, wire[None], tx_ids[None]))
+        try:
+            an = hlo_cost.analyze(jstep.lower(*args).compile().as_text())
+        except Exception:
+            return  # cost model is best-effort; never fail a commit
+        reg = self.obs.registry
+        reg.gauge("hlo.collectives", depth=d).set(
+            sum(v["count"] for v in an["collectives"].values())
+        )
+        reg.gauge("hlo.collective_wire_bytes", depth=d).set(
+            an["collective_wire_bytes"]
+        )
+        reg.gauge("hlo.scatter_count", depth=d).set(an["scatter_count"])
 
     # -- elastic state: resize epochs --------------------------------------
 
@@ -174,8 +240,11 @@ class MeshWindowCommitter:
                         ws.HashState(k, v, va), new_nb
                     )
                 )(keys, vers, vals)
+                bits = jax.vmap(
+                    lambda o: state_sharding.overflow_bits(o[None])
+                )(res.overflow)  # (C, LANES)
                 return (res.state.keys, res.state.versions,
-                        res.state.values, res.overflow.astype(U32))
+                        res.state.values, bits)
 
             prog = jax.jit(prog_fn)
         self._resizes[new_nb] = prog
@@ -205,14 +274,20 @@ class MeshWindowCommitter:
             overflow=self.state.overflow | bits,
         )
         self._resizes.clear()  # programs are shape-specific to old_nb
-        return ReanchorInfo(
+        info = ReanchorInfo(
             block_no=int(np.asarray(self.state.block_no[0])) - 1,
             old_n_buckets=old_nb,
             new_n_buckets=new_n_buckets,
             n_shards=self.n_shards,
             tree_head=self.tree_head(),
-            overflow_bits=int(np.asarray(self.state.overflow[0])),
+            overflow_bits=state_sharding.bits_to_int(self.state.overflow[0]),
         )
+        self.obs.tracer.event(
+            "reanchor.epoch", block_no=info.block_no,
+            old_n_buckets=old_nb, new_n_buckets=new_n_buckets,
+            overflow_bits=info.overflow_bits,
+        )
+        return info
 
     # -- durability-check surface (engine.verify) --------------------------
 
@@ -244,14 +319,20 @@ class MeshWindowCommitter:
         """Sticky: any commit ever dropped a write on a full bucket —
         the channel's version accounting can no longer be trusted and
         ``FabricEngine.verify()`` reports it unhealthy."""
-        return bool(np.asarray(self.state.overflow[0]) != 0)
+        return bool(np.asarray(self.state.overflow[0]).any())
+
+    @property
+    def overflow_bits(self) -> int:
+        """Sticky per-shard bitmask as one host int (lane words folded by
+        state_sharding.bits_to_int; bit m == shard m ever filled)."""
+        return state_sharding.bits_to_int(self.state.overflow[0])
 
     @property
     def shard_overflow(self) -> np.ndarray:
         """(M,) bool — WHICH bucket shards ever filled, decoded from the
         sticky bitmask. The resize policy splits while this is still all
         False (pressure-triggered) or repairs capacity once a bit sets."""
-        bits = int(np.asarray(self.state.overflow[0]))
+        bits = self.overflow_bits
         return np.array(
             [(bits >> m) & 1 for m in range(self.n_shards)], dtype=bool
         )
@@ -261,7 +342,7 @@ class MeshWindowCommitter:
         re-anchor log): the first overflowed shard if any bit is set,
         else the fullest shard by occupancy (world_state.hot_shard)."""
         return ws.hot_shard(
-            int(np.asarray(self.state.overflow[0])),
+            self.overflow_bits,
             ws.shard_occupancy(self.hash_state(), self.n_shards),
         )
 

@@ -73,7 +73,8 @@ def make_window_body(dims: types.FabricDims, cfg, msize: int, depth: int):
 
     Local input shapes (channel dim already peeled by the caller):
       keys (NB_loc, S, 2), versions, values, log/ledger/journal heads (2,),
-      block_no () u32, overflow () u32, wire (D, B_loc, WB) u8,
+      block_no () u32, overflow (LANES,) u32 (the sticky per-shard bitmask
+      lanes, state_sharding.OVERFLOW_LANES), wire (D, B_loc, WB) u8,
       ids (D, B_loc, 2) u32.
     Returns (state arrays..., heads..., block_no, overflow, valid
     (D, B_loc)) with ``valid`` in ingest order for this rank's slice of

@@ -180,11 +180,12 @@ def stage_mvcc_commit(st: ws.HashState, txb: types.TxBatch, ok_ord, cur,
     from the window-batched gather plus in-window adjustment
     (:mod:`repro.pipeline.batched_mvcc`). ``conflict``: optional
     precomputed conflict matrix (the pipeline's prepare stage computes it a
-    step early). Returns (new state, valid (B,) bool, overflow () u32
-    BITMASK — bit m == shard m dropped a write on a full bucket; bit 0
-    for replicated state) — the depth-1 step ORs it sticky into the mesh
-    state (a dropped insert is a silent version-accounting error
-    otherwise, and the resize policy reads the hot shard off the bits).
+    step early). Returns (new state, valid (B,) bool, overflow (LANES,)
+    u32 BITMASK — bit m of lane m//32 == shard m dropped a write on a full
+    bucket; bit 0 for replicated state) — the depth-1 step ORs it sticky
+    into the mesh state (a dropped insert is a silent version-accounting
+    error otherwise, and the resize policy reads the hot shard off the
+    bits).
     """
     res = mvcc.validate(txb, cur, checksum_ok=ok_ord, conflict=conflict)
     if cfg.shard_state:
@@ -198,5 +199,5 @@ def stage_mvcc_commit(st: ws.HashState, txb: types.TxBatch, ok_ord, cur,
             st, txb.write_keys, txb.write_vals, res.valid,
             sequential=cfg.sequential_commit,
         )
-        bits = cres.overflow.astype(U32)
+        bits = state_sharding.overflow_bits(cres.overflow[None])
     return cres.state, res.valid, bits

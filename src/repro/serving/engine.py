@@ -22,6 +22,7 @@ and lowers for the production mesh via launch/serve.py.
 from __future__ import annotations
 
 import dataclasses
+import time
 from functools import partial
 from typing import Optional
 
@@ -33,6 +34,7 @@ from repro.core import hashing, orderer
 from repro.core import world_state as ws
 from repro.models import layers
 from repro.models.lm import LM, Batch, DecodeCache
+from repro.obs.metrics import Registry
 
 U32 = jnp.uint32
 
@@ -153,12 +155,18 @@ class ServeEngine:
     """Slot-based continuous batching with fabric-style bookkeeping."""
 
     def __init__(self, model: LM, params, *, slots: int = 4,
-                 max_len: int = 256, greedy: bool = True):
+                 max_len: int = 256, greedy: bool = True,
+                 registry: Registry | None = None):
         self.model = model
         self.params = params
         self.n_slots = slots
         self.max_len = max_len
         self.greedy = greedy
+        # Metrics sink (repro.obs): admission-queue depth, active slots,
+        # decode-step latency, token/request counters. Always a REAL
+        # registry — serving stats are cheap host-side bookkeeping, and
+        # stats_text() should work out of the box.
+        self.registry = registry if registry is not None else Registry()
         self.cache = model.init_cache(slots, max_len)
         self.pos = np.zeros((slots,), np.int32)
         self.slot_req: list[Optional[Request]] = [None] * slots
@@ -198,6 +206,8 @@ class ServeEngine:
         ).reshape(len(requests), 2)
         order = np.asarray(orderer.consensus_order(ids))
         self.queue.extend(requests[i] for i in order)
+        self.registry.counter("serving.requests.submitted").inc(len(requests))
+        self.registry.gauge("serving.queue.depth").set(len(self.queue))
 
     # ---- scheduling loop ----
 
@@ -217,6 +227,8 @@ class ServeEngine:
             self.slot_req[s] = req
             self.pos[s] = len(req.prompt)
             self._commit_state(req.rid, s, 1, 0)
+            self.registry.counter("serving.prefills").inc()
+            self.registry.gauge("serving.queue.depth").set(len(self.queue))
 
     def step(self) -> int:
         """One engine step: assign slots, one batched decode. Returns the
@@ -225,8 +237,12 @@ class ServeEngine:
         active_mask = np.asarray(
             [r is not None and not r.done for r in self.slot_req]
         )
+        self.registry.gauge("serving.slots.active").set(
+            int(active_mask.sum())
+        )
         if not active_mask.any():
             return 0
+        t0 = time.perf_counter()
         last_tok = np.asarray(
             [(r.out[-1] if r is not None and r.out else 0)
              for r in self.slot_req], np.int32,
@@ -235,7 +251,10 @@ class ServeEngine:
             self.params, self.cache, jnp.asarray(last_tok),
             jnp.asarray(self.pos), jnp.asarray(active_mask),
         )
-        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))  # syncs the step
+        self.registry.histogram("serving.decode.latency").record(
+            time.perf_counter() - t0
+        )
         self.steps += 1
         for s, r in enumerate(self.slot_req):
             if r is None or not active_mask[s]:
@@ -248,6 +267,10 @@ class ServeEngine:
                 r.done = True
                 self._commit_state(r.rid, s, len(r.out), 1)
                 self.slot_req[s] = None  # slot freed (cyclic reuse)
+                self.registry.counter("serving.requests.completed").inc()
+        self.registry.counter("serving.tokens.out").inc(
+            int(active_mask.sum())
+        )
         return int(active_mask.sum())
 
     def run(self, requests: list[Request], *, max_steps: int = 10_000
@@ -257,3 +280,14 @@ class ServeEngine:
             if not self.step() and not self.queue:
                 break
         return requests
+
+    # ---- observability ----
+
+    def metrics(self) -> dict:
+        """Flat snapshot of the serving metrics (repro.obs collect)."""
+        return self.registry.collect()
+
+    def stats_text(self) -> str:
+        """Prometheus text exposition of the serving metrics — the scrape
+        endpoint body for an HTTP wrapper (or a log line for smoke runs)."""
+        return self.registry.to_prometheus()

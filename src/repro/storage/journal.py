@@ -42,6 +42,7 @@ resize epochs.
 
 from __future__ import annotations
 
+import time
 from typing import NamedTuple
 
 import jax
@@ -50,6 +51,7 @@ import numpy as np
 
 from repro.core import hashing, types, unmarshal
 from repro.core import world_state as ws
+from repro.obs.metrics import NULL_REGISTRY
 
 U32 = jnp.uint32
 
@@ -119,6 +121,7 @@ def reanchor_head_update(prev_reanchor, prev_head, block_no, old_n_buckets,
     main-head word pins the record to its chain position, so a re-anchor
     cannot be replayed at a different boundary.
     """
+    overflow_bits = int(overflow_bits)  # numpy scalars shift unsafely at 32
     words = jnp.concatenate([
         jnp.atleast_1d(_REANCHOR_TAG),
         jnp.asarray(prev_reanchor, U32),
@@ -128,7 +131,10 @@ def reanchor_head_update(prev_reanchor, prev_head, block_no, old_n_buckets,
         jnp.atleast_1d(jnp.uint32(new_n_buckets)),
         jnp.atleast_1d(jnp.uint32(n_shards)),
         jnp.asarray(tree_head, U32),
-        jnp.atleast_1d(jnp.uint32(overflow_bits)),
+        # Bitmask widened past 32 shards: fold as lo/hi u32 words so the
+        # link stays u32-native (JAX x64 off) and covers 64 shard bits.
+        jnp.asarray([overflow_bits & 0xFFFFFFFF,
+                     (overflow_bits >> 32) & 0xFFFFFFFF], U32),
     ])[None, :]
     return np.asarray(jnp.stack([
         hashing.hash_words(words, seed=hashing.SEED_A)[0],
@@ -194,12 +200,16 @@ class StateJournal:
     block spill), which ``StateJournal.load`` can rebuild for a cold start.
     """
 
-    def __init__(self, dims: types.FabricDims, *, spill_dir: str | None = None):
+    def __init__(self, dims: types.FabricDims, *, spill_dir: str | None = None,
+                 metrics=None):
         if spill_dir is not None:
             import os
 
             os.makedirs(spill_dir, exist_ok=True)
         self.dims = dims
+        # Metrics sink (repro.obs.metrics.Registry); appends run on the
+        # storage writer thread, so the registry must be thread-safe (it is).
+        self._metrics = metrics if metrics is not None else NULL_REGISTRY
         self.records: list[JournalRecord] = []
         self.head = GENESIS_HEAD.copy()
         # Pruning base: records up to base_block_no were compacted away and
@@ -224,6 +234,7 @@ class StateJournal:
 
     def append_writes(self, block_no: int, write_keys, write_vals,
                       valid) -> JournalRecord:
+        t0 = time.perf_counter()
         prev = self.head
         head = np.asarray(
             journal_head_update(
@@ -242,6 +253,13 @@ class StateJournal:
         )
         self.records.append(rec)
         self.head = head
+        self._metrics.counter("journal.appends").inc()
+        self._metrics.counter("journal.bytes").inc(
+            rec.write_keys.nbytes + rec.write_vals.nbytes + rec.valid.nbytes
+        )
+        self._metrics.histogram("journal.append.latency").record(
+            time.perf_counter() - t0
+        )
         if self._spill_dir is not None:
             np.savez(
                 f"{self._spill_dir}/journal_{rec.block_no:08d}.npz",
@@ -280,6 +298,7 @@ class StateJournal:
         )
         self.reanchors.append(rec)
         self.reanchor_head = head
+        self._metrics.counter("journal.reanchors").inc()
         if self._spill_dir is not None:
             seq = sum(r.block_no == rec.block_no for r in self.reanchors) - 1
             np.savez(
@@ -290,7 +309,7 @@ class StateJournal:
                 new_n_buckets=np.uint32(rec.new_n_buckets),
                 n_shards=np.uint32(rec.n_shards),
                 tree_head=rec.tree_head,
-                overflow_bits=np.uint32(rec.overflow_bits),
+                overflow_bits=np.uint64(rec.overflow_bits),
                 prev_head=rec.prev_head,
                 prev_reanchor=rec.prev_reanchor,
                 head=rec.head,
@@ -471,14 +490,17 @@ class StateJournal:
     # --- cold-start reload ------------------------------------------------
 
     @classmethod
-    def load(cls, dims: types.FabricDims, spill_dir: str) -> "StateJournal":
+    def load(cls, dims: types.FabricDims, spill_dir: str, *,
+             metrics=None) -> "StateJournal":
         """Rebuild a journal from its spill directory (cold start) —
         block records AND resize re-anchor records (their file names are
-        keyed by boundary+1 so a pre-genesis re-anchor sorts first)."""
+        keyed by boundary+1 so a pre-genesis re-anchor sorts first).
+        Reloaded records do NOT count as appends (``metrics`` only sees
+        post-restore appends — restore must not double count)."""
         import glob
         import os
 
-        j = cls(dims, spill_dir=None)
+        j = cls(dims, spill_dir=None, metrics=metrics)
         paths = sorted(glob.glob(os.path.join(spill_dir, "journal_*.npz")))
         for p in paths:
             with np.load(p) as z:

@@ -36,6 +36,7 @@ from __future__ import annotations
 
 import os
 import re
+import time
 from typing import NamedTuple
 
 import jax
@@ -43,6 +44,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import world_state as ws
+from repro.obs.metrics import NULL_REGISTRY
 
 _MANIFEST_RE = re.compile(r"^manifest_(\d{8})\.npz$")
 _SHARD_RE = re.compile(r"^shard_(\d{8})_(\d{4})\.npz$")
@@ -207,12 +209,16 @@ def _atomic_savez(path: str, **arrays) -> None:
     os.replace(tmp, path)
 
 
-def save(directory: str, snap: Snapshot) -> str:
+def save(directory: str, snap: Snapshot, *, registry=None) -> str:
     """Persist: every shard part (tmp + rename each), THEN the manifest.
     Until the manifest lands the snapshot does not exist to readers."""
+    reg = registry if registry is not None else NULL_REGISTRY
+    t0 = time.perf_counter()
     os.makedirs(directory, exist_ok=True)
     man = snap.manifest
+    nbytes = 0
     for part in snap.shards:
+        nbytes += part.keys.nbytes + part.versions.nbytes + part.values.nbytes
         _atomic_savez(
             shard_path_for(directory, man.block_no, part.shard),
             shard=np.uint32(part.shard),
@@ -233,8 +239,11 @@ def save(directory: str, snap: Snapshot) -> str:
         n_shards=np.uint32(man.n_shards),
         shard_digests=man.shard_digests,
         tree_head=man.tree_head,
-        overflow_bits=np.uint32(man.overflow_bits),
+        overflow_bits=np.uint64(man.overflow_bits),
     )
+    reg.counter("snapshot.saves").inc()
+    reg.counter("snapshot.bytes").inc(nbytes)
+    reg.histogram("snapshot.save.latency").record(time.perf_counter() - t0)
     return final
 
 
@@ -265,18 +274,23 @@ def load_shard(directory: str, block_no: int, shard: int) -> ShardPart:
                          versions=z["versions"], values=z["values"])
 
 
-def load(directory: str, block_no: int | None = None) -> Snapshot:
+def load(directory: str, block_no: int | None = None, *,
+         registry=None) -> Snapshot:
     """Load manifest + every shard part (single-host view). With no
     ``block_no``, loads the newest complete snapshot."""
+    reg = registry if registry is not None else NULL_REGISTRY
+    t0 = time.perf_counter()
     if block_no is None:
-        snap = latest(directory)
-        if snap is None:
+        blocks = list_blocks(directory)
+        if not blocks:
             raise FileNotFoundError(f"no complete snapshot in {directory}")
-        return snap
+        block_no = blocks[-1]
     man = load_manifest(path_for(directory, block_no))
     parts = tuple(
         load_shard(directory, block_no, m) for m in range(man.n_shards)
     )
+    reg.counter("snapshot.loads").inc()
+    reg.histogram("snapshot.load.latency").record(time.perf_counter() - t0)
     return Snapshot(manifest=man, shards=parts)
 
 
@@ -316,7 +330,7 @@ def latest_manifest(directory: str) -> Manifest | None:
     return load_manifest(path_for(directory, blocks[-1])) if blocks else None
 
 
-def gc(directory: str, *, keep: int = 2) -> None:
+def gc(directory: str, *, keep: int = 2, registry=None) -> None:
     """Drop all but the newest ``keep`` complete snapshots, manifest+shards
     as a unit: the manifest goes FIRST (the snapshot stops existing), then
     its shard files. Shard files orphaned by earlier torn GCs of dropped
@@ -325,20 +339,27 @@ def gc(directory: str, *, keep: int = 2) -> None:
     manifest) are preserved."""
     if not os.path.isdir(directory):
         return
+    reg = registry if registry is not None else NULL_REGISTRY
+    t0 = time.perf_counter()
     blocks = list_blocks(directory)
     keep_set = set(blocks[-keep:]) if keep else set()
     newest = blocks[-1] if blocks else -1
+    dropped = 0
     # Manifests first.
     for name in sorted(os.listdir(directory)):
         m = _MANIFEST_RE.match(name)
         if m and int(m.group(1)) not in keep_set:
             _rm(os.path.join(directory, name))
+            dropped += 1
     # Then shard files of dropped/orphaned blocks (an in-flight save has a
     # block number past the newest manifest — leave it alone).
     for name in sorted(os.listdir(directory)):
         m = _SHARD_RE.match(name)
         if m and int(m.group(1)) not in keep_set and int(m.group(1)) <= newest:
             _rm(os.path.join(directory, name))
+    if dropped:
+        reg.counter("snapshot.gc.dropped").inc(dropped)
+        reg.histogram("snapshot.gc.latency").record(time.perf_counter() - t0)
 
 
 def _rm(path: str) -> None:

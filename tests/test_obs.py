@@ -1,0 +1,398 @@
+"""Observability layer: histogram math, span tracing, engine metrics.
+
+Percentile properties run under hypothesis when it is installed and fall
+back to a seeded random sweep otherwise (same property, fixed seeds).
+"""
+
+import json
+import os
+import time
+
+import numpy as np
+import pytest
+
+from repro.launch import state_sharding
+from repro.obs import Obs
+from repro.obs.metrics import (
+    Histogram,
+    NULL_REGISTRY,
+    Registry,
+)
+from repro.obs.trace import NULL_TRACER, Tracer
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+# ---------------------------------------------------------------------------
+# Histogram percentiles vs numpy (property)
+# ---------------------------------------------------------------------------
+
+
+def _check_percentiles(samples):
+    """The pinned bound: nearest-rank numpy percentile <= histogram
+    percentile <= 2x (one log2 bucket ratio), for samples inside the
+    histogram's finite range."""
+    h = Histogram()
+    for v in samples:
+        h.record(v)
+    for q in (50.0, 90.0, 95.0, 99.0):
+        true = float(np.percentile(samples, q, method="inverted_cdf"))
+        est = h.percentile(q)
+        assert true <= est <= 2.0 * true, (q, true, est)
+
+
+def _log_uniform(rng, n):
+    # Strictly inside (lo, hi): the bound needs value > lo (bucket 0
+    # reports lo itself) and value <= hi (overflow reports inf).
+    return np.exp(rng.uniform(np.log(2e-7), np.log(5e2), size=n))
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=50, deadline=None)
+    @given(
+        st.lists(
+            st.floats(min_value=2e-7, max_value=5e2,
+                      allow_nan=False, allow_infinity=False),
+            min_size=1, max_size=300,
+        )
+    )
+    def test_percentiles_within_bucket_ratio(samples):
+        _check_percentiles(np.asarray(samples))
+
+else:
+
+    @pytest.mark.parametrize("seed", range(20))
+    def test_percentiles_within_bucket_ratio(seed):
+        rng = np.random.default_rng(seed)
+        n = int(rng.integers(1, 300))
+        _check_percentiles(_log_uniform(rng, n))
+
+
+def test_percentile_edges():
+    h = Histogram()
+    assert np.isnan(h.percentile(50))  # empty
+    h.record(1e-9)  # below lo -> bucket 0, reported as lo
+    assert h.percentile(50) == h.lo
+    h2 = Histogram()
+    h2.record(1e9)  # past hi -> overflow bucket, reported as inf
+    assert h2.percentile(50) == float("inf")
+    h3 = Histogram()
+    h3.record(1.0)
+    snap = h3.snapshot()
+    assert snap["count"] == 1 and snap["sum"] == 1.0
+    assert 1.0 <= snap["p50"] <= 2.0
+
+
+def test_merge_is_exact():
+    """Merged histogram == histogram of the pooled samples, bucket for
+    bucket — the property that makes per-shard percentile merges exact."""
+    rng = np.random.default_rng(7)
+    a, b = _log_uniform(rng, 200), _log_uniform(rng, 133)
+    ha, hb, hp = Histogram(), Histogram(), Histogram()
+    for v in a:
+        ha.record(v)
+        hp.record(v)
+    for v in b:
+        hb.record(v)
+        hp.record(v)
+    ha.merge(hb)
+    assert ha.counts == hp.counts
+    assert ha.count == hp.count
+    assert ha.percentile(95) == hp.percentile(95)
+    with pytest.raises(ValueError):
+        ha.merge(Histogram(lo=1e-6))  # different edges: not exact
+
+
+def test_registry_semantics():
+    reg = Registry()
+    reg.counter("c").inc(3)
+    reg.counter("c").inc()
+    assert reg.collect()["c"] == 4
+    with pytest.raises(ValueError):
+        reg.counter("c").inc(-1)
+    with pytest.raises(TypeError):
+        reg.gauge("c")  # kind mismatch on the same name
+    reg.gauge("g", shard=3).set(7)
+    reg.gauge("g", shard=1).set(5)
+    col = reg.collect()
+    assert col["g{shard=3}"] == 7 and col["g{shard=1}"] == 5
+    reg.histogram("h").record(0.5)
+    text = reg.to_prometheus()
+    assert "# TYPE c counter" in text
+    assert 'g{shard="3"} 7' in text
+    assert 'h_bucket{le="+Inf"} 1' in text
+    # null registry absorbs everything and stays empty
+    NULL_REGISTRY.counter("x").inc(10)
+    assert NULL_REGISTRY.collect() == {}
+    assert NULL_REGISTRY.to_prometheus() == ""
+
+
+# ---------------------------------------------------------------------------
+# Span tracer: nesting, ordering, export formats
+# ---------------------------------------------------------------------------
+
+
+def test_span_nesting_and_chrome_export(tmp_path):
+    tr = Tracer()
+    with tr.span("outer", kind="round"):
+        with tr.span("inner_a"):
+            time.sleep(0.002)
+        tr.event("marker", n=3)
+        with tr.span("inner_b"):
+            time.sleep(0.001)
+    recs = tr.records()
+    by_name = {r["name"]: r for r in recs}
+    assert by_name["outer"]["depth"] == 0
+    assert by_name["outer"]["parent"] is None
+    for child in ("inner_a", "inner_b", "marker"):
+        assert by_name[child]["depth"] == 1
+        assert by_name[child]["parent"] == "outer"
+    # records() orders by start time: outer first, then children in order
+    names = [r["name"] for r in recs]
+    assert names == ["outer", "inner_a", "marker", "inner_b"]
+    # children are contained in the parent's interval
+    o = by_name["outer"]
+    for child in ("inner_a", "inner_b"):
+        c = by_name[child]
+        assert o["ts"] <= c["ts"]
+        assert c["ts"] + c["dur"] <= o["ts"] + o["dur"] + 1e-9
+    # chrome export: spans are "X" complete events (us), events are "i"
+    ev = {e["name"]: e for e in tr.chrome_events()}
+    assert ev["outer"]["ph"] == "X"
+    assert ev["outer"]["dur"] == pytest.approx(o["dur"] * 1e6)
+    assert ev["marker"]["ph"] == "i"
+    assert ev["marker"]["args"] == {"n": 3}
+    # both dump formats round-trip as JSON
+    jl, cj = tmp_path / "t.jsonl", tmp_path / "t.json"
+    tr.dump_jsonl(str(jl))
+    lines = [json.loads(x) for x in jl.read_text().splitlines()]
+    assert [x["name"] for x in lines] == names
+    tr.dump_chrome(str(cj))
+    doc = json.loads(cj.read_text())
+    assert len(doc["traceEvents"]) == 4
+
+
+def test_span_sync_callable_and_set_sync():
+    tr = Tracer()
+    hit = []
+    with tr.span("s", sync=lambda: hit.append("exit") or None):
+        hit.append("body")
+    assert hit == ["body", "exit"]  # sync resolved at exit, after the body
+    with tr.span("s2") as sp:
+        sp.set_sync(lambda: hit.append("late") or None)
+    assert hit[-1] == "late"
+    # an exception skips the sync but still pops/emits the span
+    with pytest.raises(RuntimeError):
+        with tr.span("s3", sync=lambda: hit.append("never")):
+            raise RuntimeError("boom")
+    assert "never" not in hit
+    assert tr._stack() == []
+    assert {r["name"] for r in tr.records()} == {"s", "s2", "s3"}
+
+
+def test_null_tracer_never_syncs():
+    hit = []
+    with NULL_TRACER.span("x", sync=lambda: hit.append("sync")):
+        pass
+    assert hit == []  # obs-off must not add the span-edge device sync
+    assert NULL_TRACER.records() == []
+
+
+def test_obs_handle():
+    off = Obs.disabled()
+    assert not off.on
+    on = Obs.enabled()
+    assert on.on
+    with on.tracer.span("a"):
+        on.registry.counter("c").inc()
+    assert on.registry.collect()["c"] == 1
+    assert off.registry.collect() == {}
+
+
+# ---------------------------------------------------------------------------
+# Overflow bitmask lanes: >32 shards (the widened mask regression)
+# ---------------------------------------------------------------------------
+
+
+def test_overflow_bits_two_lanes():
+    import jax.numpy as jnp
+
+    for m, set_bits in ((40, [0, 5, 31, 32, 39]), (64, [33, 63])):
+        flags = np.zeros(m, bool)
+        flags[set_bits] = True
+        lanes = np.asarray(state_sharding.overflow_bits(jnp.asarray(flags)))
+        assert lanes.shape == (state_sharding.OVERFLOW_LANES,)
+        assert lanes.dtype == np.uint32
+        bits = state_sharding.bits_to_int(lanes)
+        assert bits == sum(1 << b for b in set_bits)
+        # bits above rank 31 live in lane 1, not truncated
+        assert any(b >= 32 for b in set_bits) == (lanes[1] != 0)
+
+
+def test_bits_int_lanes_roundtrip():
+    rng = np.random.default_rng(11)
+    for _ in range(50):
+        bits = int(rng.integers(0, 1 << 63, dtype=np.uint64))
+        lanes = state_sharding.int_to_lanes(bits)
+        assert lanes.dtype == np.uint32
+        assert state_sharding.bits_to_int(lanes) == bits
+
+
+def test_overflow_bits_over_max_raises():
+    import jax.numpy as jnp
+
+    flags = jnp.zeros(state_sharding.MAX_OVERFLOW_SHARDS + 1, bool)
+    with pytest.raises(ValueError):
+        state_sharding.overflow_bits(flags)
+
+
+def test_reanchor_head_binds_high_lane():
+    """The re-anchor chain link must see shard bits past rank 31 — a
+    lower-word-only fold would let two different overflow states share a
+    head."""
+    from repro.storage.journal import reanchor_head_update
+
+    common = dict(
+        prev_reanchor=np.zeros(2, np.uint32),
+        prev_head=np.zeros(2, np.uint32),
+        block_no=3, old_n_buckets=64, new_n_buckets=128, n_shards=40,
+        tree_head=np.zeros(2, np.uint32),
+    )
+    lo = reanchor_head_update(overflow_bits=1 << 3, **common)
+    hi = reanchor_head_update(overflow_bits=1 << 35, **common)
+    none = reanchor_head_update(overflow_bits=0, **common)
+    assert not np.array_equal(hi, none)  # high lane is bound
+    assert not np.array_equal(hi, lo)
+    # deterministic
+    assert np.array_equal(hi, reanchor_head_update(
+        overflow_bits=np.uint64(1 << 35), **common))
+
+
+# ---------------------------------------------------------------------------
+# Engine metrics: stability across snapshot / restore
+# ---------------------------------------------------------------------------
+
+
+def test_engine_metrics_stable_across_restore(tmp_path):
+    """A restored engine starts a fresh registry: reloading the journal
+    and snapshot must not replay appends/commits into the metrics (no
+    double counting), and post-restore rounds count from zero."""
+    from repro.core import engine as eng_mod
+    from repro.core import types
+
+    cfg = eng_mod.EngineConfig(
+        dims=types.TEST_DIMS, n_buckets=1 << 12,
+        snapshot_every_blocks=2,
+        snapshot_dir=str(tmp_path / "snap"),
+        journal_dir=str(tmp_path / "jrnl"),
+        obs=True,
+    )
+    eng = eng_mod.FabricEngine(cfg)
+    bs = cfg.orderer.block_size
+    eng.run_round(eng.make_proposals(4 * bs, seed=1))
+    m = eng.metrics()
+    assert m["journal.appends"] == 4
+    assert m["commit.latency"]["count"] == 4
+    assert m["txs.valid"] == 4 * bs
+    assert m["snapshot.saves"] == 1
+    names = {r["name"] for r in eng.tracer.records()}
+    assert {"round.order", "round.commit", "round.endorser_replay",
+            "block.ship", "snapshot.take"} <= names
+    eng.store.drain()
+    eng.store.close()
+
+    eng2 = eng_mod.FabricEngine.restore(cfg)
+    m2 = eng2.metrics()
+    assert m2.get("journal.appends", 0) == 0  # reload is not an append
+    assert "commit.latency" not in m2
+    eng2.run_round(eng2.make_proposals(2 * bs, seed=2))
+    m3 = eng2.metrics()
+    assert m3["journal.appends"] == 2
+    assert m3["commit.latency"]["count"] == 2
+    assert all(eng2.verify().values())
+
+
+def test_engine_obs_off_is_empty():
+    from repro.core import engine as eng_mod
+    from repro.core import types
+
+    eng = eng_mod.FabricEngine(eng_mod.EngineConfig(dims=types.TEST_DIMS))
+    eng.run_round(eng.make_proposals(2 * eng.cfg.orderer.block_size))
+    assert eng.metrics() == {}
+    assert eng.tracer.records() == []
+
+
+# ---------------------------------------------------------------------------
+# benchmarks/perf_gate.py — the CI perf-trajectory gate's join semantics
+# ---------------------------------------------------------------------------
+
+
+def test_perf_gate_compare():
+    from benchmarks.perf_gate import compare
+
+    base = [
+        {"bench": "fig11", "name": "pipe/d=8", "tps": 1000.0,
+         "commit_scatters": 1, "commit_p95_ms": 2.0},
+        {"bench": "fig12", "name": "elastic/final", "tps": 500.0,
+         "overflow_ok": True},
+        {"bench": "fig11", "name": "equivalence/d=8", "identical": True},
+        {"bench": "fig4", "name": "O-I@512B", "tps": 200.0},
+    ]
+    # Self-compare: clean.
+    failures, _ = compare(base, base)
+    assert failures == []
+    # Within-tolerance dip: note, not failure; improvements never fail.
+    cur = [dict(r) for r in base]
+    cur[0]["tps"] = 900.0
+    cur[3]["tps"] = 400.0
+    failures, notes = compare(base, cur)
+    assert failures == []
+    assert any("within tolerance" in n for n in notes)
+    # Past-tolerance TPS regression fails.
+    cur[0]["tps"] = 700.0
+    failures, _ = compare(base, cur)
+    assert any("pipe/d=8" in f and "regression" in f for f in failures)
+    # Contract flip fails even with healthy TPS.
+    cur[0]["tps"] = 1000.0
+    cur[1]["overflow_ok"] = False
+    cur[2]["identical"] = False
+    failures, _ = compare(base, cur)
+    assert any("overflow_ok flipped" in f for f in failures)
+    assert any("identical flipped" in f for f in failures)
+    # Missing contract row fails; missing plain row only notes.
+    failures, notes = compare(base, [base[0], base[1], base[3]])
+    assert any("equivalence/d=8" in f and "missing" in f for f in failures)
+    failures, notes = compare(base, base[:3])
+    assert failures == []
+    assert any("O-I@512B" in n and "missing" in n for n in notes)
+    # Latency drift >2x is reported, never gated.
+    cur = [dict(r) for r in base]
+    cur[1]["overflow_ok"] = True
+    cur[0]["commit_p95_ms"] = 5.0
+    failures, notes = compare(base, cur)
+    assert failures == []
+    assert any("commit_p95_ms" in n for n in notes)
+
+
+def test_perf_gate_main(tmp_path):
+    import json as _json
+
+    from benchmarks.perf_gate import main
+
+    rows = [{"bench": "fig11", "name": "pipe/d=8", "tps": 1000.0,
+             "commit_scatters": 1}]
+    bad = [{"bench": "fig11", "name": "pipe/d=8", "tps": 100.0,
+            "commit_scatters": 1}]
+    b, c = tmp_path / "base.json", tmp_path / "cur.json"
+    b.write_text(_json.dumps(rows))
+    c.write_text(_json.dumps(bad))
+    assert main([str(b), str(b)]) == 0
+    assert main([str(b), str(c)]) == 1
+    assert main([str(b), str(c), "--tps-tolerance", "0.95"]) == 0

@@ -103,7 +103,7 @@ def test_pipelined_equals_oracle_replicated(depth):
     wire, ids = _window(depth, n=16, seed=depth)
     v, st = _assert_identical(fs.FASTFABRIC_STEP, mesh, wire, ids, depth)
     assert int(v.sum()) == v.size  # disjoint accounts: all valid
-    assert int(st.overflow[0]) == 0  # amply sized table: flag stays clear
+    assert not np.asarray(st.overflow[0]).any()  # amply sized: flag clear
 
 
 def test_pipelined_equals_oracle_sharded_degenerate():
@@ -189,7 +189,7 @@ def test_overflow_window_equals_oracle_replicated(depth):
     wire, ids = _overflow_window(depth)
     v, st = _assert_identical(fs.FASTFABRIC_STEP, mesh, wire, ids, depth,
                               n_buckets=8, slots=2)
-    assert int(st.overflow[0]) != 0  # sticky bitmask latched on both paths
+    assert np.asarray(st.overflow[0]).any()  # sticky bitmask latched on both paths
     assert 0 < int(v.sum()) < v.size  # poisoned repairs invalidate SOME
     # transactions (all-valid would mean the drop was never observed,
     # all-invalid that the window never committed anything)
@@ -201,7 +201,7 @@ def test_overflow_window_equals_oracle_sharded_degenerate(depth):
     wire, ids = _overflow_window(depth)
     _, st = _assert_identical(fs.FASTFABRIC_SHARDED_STEP, mesh, wire, ids,
                               depth, n_buckets=8, slots=2)
-    assert int(st.overflow[0]) != 0
+    assert np.asarray(st.overflow[0]).any()
 
 
 @multi_device
@@ -217,7 +217,7 @@ def test_overflow_window_equals_oracle_sharded_multi_rank(depth):
     wire, ids = _overflow_window(depth, n=16)
     _, st = _assert_identical(fs.FASTFABRIC_SHARDED_STEP, mesh, wire, ids,
                               depth, n_buckets=8, slots=2)
-    assert int(st.overflow[0]) != 0
+    assert np.asarray(st.overflow[0]).any()
 
 
 def test_overflow_window_equals_oracle_sequential_baseline():
@@ -227,7 +227,7 @@ def test_overflow_window_equals_oracle_sequential_baseline():
     wire, ids = _overflow_window(4)
     _, st = _assert_identical(fs.FABRIC_V12_STEP, mesh, wire, ids, 4,
                               n_buckets=8, slots=2)
-    assert int(st.overflow[0]) != 0
+    assert np.asarray(st.overflow[0]).any()
 
 
 def test_overflow_window_store_chain_and_journal():

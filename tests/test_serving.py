@@ -79,3 +79,36 @@ def test_admission_order_deterministic(setup):
         return [r.rid for r in eng.queue]
 
     assert run_once() == run_once()  # consensus order is deterministic
+
+
+def test_serving_metrics_and_stats_text(setup):
+    """Admission-queue depth gauge tracks submit/assign; stats_text is
+    valid Prometheus exposition with the serving series present."""
+    cfg, model, params = setup
+    rng = np.random.default_rng(6)
+    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab, 4
+                                               ).astype(np.int32),
+                    max_new=3) for i in range(5)]
+    eng = ServeEngine(model, params, slots=2, max_len=16)
+    eng.submit(reqs)
+    m = eng.metrics()
+    assert m["serving.queue.depth"] == 5
+    assert m["serving.requests.submitted"] == 5
+    eng.run([])  # drain (requests already queued)
+    m = eng.metrics()
+    assert m["serving.queue.depth"] == 0
+    assert m["serving.requests.completed"] == 5
+    assert m["serving.tokens.out"] == eng.tokens_out
+    assert m["serving.decode.latency"]["count"] == eng.steps
+    assert m["serving.decode.latency"]["p95"] > 0
+    text = eng.stats_text()
+    assert "# TYPE serving_queue_depth gauge" in text
+    assert "serving_requests_completed 5" in text
+    assert "serving_decode_latency_bucket" in text
+    # every sample line is "name{labels} value" or "name value"
+    for line in text.splitlines():
+        if line.startswith("#") or not line:
+            continue
+        parts = line.rsplit(" ", 1)
+        assert len(parts) == 2 and parts[1] != "", line
+        float(parts[1])  # value parses
