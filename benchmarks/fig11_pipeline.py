@@ -65,10 +65,13 @@ def _window_inputs(dims: types.FabricDims, depth: int, b_round: int,
 
 def _table_scatters(stablehlo: str, nb_local: int, slots: int) -> int:
     """Scatter ops whose result is a state-table plane, i.e. a tensor with
-    leading dims (nb_local, slots) — exactly the commit's keys/versions/
-    values scatters. Counted on the PRE-optimization StableHLO because CPU
-    XLA expands scatters into loops before the final HLO (TPU keeps them;
-    hlo_cost's compiled-HLO ``scatter_count`` is reported alongside)."""
+    leading dims (nb_local, slots) — or (C, nb_local, slots) now that the
+    state carries a leading channel dim (the vmapped per-channel commit
+    lifts to one channel-batched scatter; still ONE fused pass) — exactly
+    the commit's keys/versions/values scatters. Counted on the
+    PRE-optimization StableHLO because CPU XLA expands scatters into loops
+    before the final HLO (TPU keeps them; hlo_cost's compiled-HLO
+    ``scatter_count`` is reported alongside)."""
     n, pos = 0, 0
     while True:
         i = stablehlo.find('"stablehlo.scatter"', pos)
@@ -77,11 +80,16 @@ def _table_scatters(stablehlo: str, nb_local: int, slots: int) -> int:
         j = stablehlo.find("-> tensor<", i)
         if j >= 0:
             dims = stablehlo[j + 10: j + 64].split("x")
-            try:
-                if int(dims[0]) == nb_local and int(dims[1]) == slots:
-                    n += 1
-            except (ValueError, IndexError):
-                pass
+            d = []
+            for x in dims[:4]:
+                try:
+                    d.append(int(x))
+                except ValueError:
+                    break
+            if len(d) >= 2 and d[0] == nb_local and d[1] == slots:
+                n += 1
+            elif len(d) >= 3 and d[1] == nb_local and d[2] == slots:
+                n += 1
         pos = i + 1
 
 
@@ -242,7 +250,7 @@ def _obs_overhead(dims, mesh, cfg, depth: int, b_round: int,
                 else n_buckets)
     hlo_args = ((wc.state, wire[0][None], ids[0][None]) if depth == 1
                 else (wc.state, wire[None], ids[None]))
-    _, _, commits = _hlo_counts(wc._step_for(depth), *hlo_args,
+    _, _, commits = _hlo_counts(wc._step_for(depth, (0,)), *hlo_args,
                                 nb_local, 8)
     assert commits == 1, (
         f"obs-overhead/d={depth}: expected 1 fused commit scatter, "

@@ -17,6 +17,16 @@ TPS *improvements* and new rows never fail. Latency percentile columns
 (``commit_p50_ms``...) are reported for drift but not gated — wall-clock
 noise across CI hosts would make a hard latency gate flaky; the TPS
 tolerance already bounds sustained regressions.
+
+Multi-channel table1 rows (``channel<i>`` / ``channels_x_tps`` /
+``fairness/*``) ride the same rules: their ``identical`` column is a
+contract column once a baseline carries it; their informational columns
+(``fairness``, ``load``, ``n_channels``, ``data_ranks``, ``n_buckets``,
+``skew``) are intentionally NOT gated — the comparison only reads
+``tps``, the contract columns, and the latency percentiles, so new
+columns added by later PRs pass through untouched. The multi-channel
+``identical`` contract is additionally asserted directly from the CI
+artifact (see .github/workflows/ci.yml), baseline or not.
 """
 
 from __future__ import annotations

@@ -88,8 +88,11 @@ def main() -> None:
         )
     if "table1" in which:
         from benchmarks import table1_endtoend
-        print("== Table I: end-to-end ==")
-        table1_endtoend.run()
+        print("== Table I: end-to-end + multi-channel scale-out ==")
+        # --quick shrinks round/window sizes but keeps every multi-channel
+        # contract row (per-channel identical, channels_x_tps aggregate,
+        # fairness under uniform + Zipf load) the CI artifact asserts.
+        table1_endtoend.run(quick=args.quick)
     if "roofline" in which:
         from benchmarks import roofline
         print("== Roofline (from dry-run artifacts) ==")

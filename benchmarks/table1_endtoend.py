@@ -1,31 +1,56 @@
-"""Table I — end-to-end throughput: Fabric 1.2 vs FastFabric.
+"""Table I — end-to-end throughput: Fabric 1.2 vs FastFabric, plus the
+multi-channel scale-out rows.
 
 Paper (15 servers): 3,185 +/- 62 -> 19,112 +/- 811 tx/s (~6x). Single-CPU
 absolute numbers differ; the claim validated here is the RATIO between the
 two configs under the full client->endorse->order->commit->store flow.
+
+FastFabric's deployment unit is the channel and the paper's numbers are
+per channel; production deployments multiply throughput by running many.
+The multi-channel section commits N independent channels through ONE
+mesh dispatch per window (vmapped over the `data` axis, channel 1
+resizing its table mid-run) and reports:
+
+  * one row per channel with ``identical`` — the channel's end state
+    byte-compared against a single-channel oracle replay (a CONTRACT
+    column: the CI artifact assert + perf gate both pin it);
+  * an aggregate ``channels_x_tps`` row (the scale-out multiplier);
+  * ``fairness/uniform`` and ``fairness/zipf`` rows — min/max
+    per-channel TPS ratio under uniform and Zipf-skewed per-channel
+    load on the engine round path.
 """
 
 from __future__ import annotations
 
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common
-from repro.core import engine
+from repro.core import endorser, engine, types, unmarshal
+from repro.launch import fabric_step as fs
+from repro.pipeline import engine_bridge
 
 ROUND = 1_000
 N_ROUNDS = 3
+N_CHANNELS = 2
+ZIPF_S = 1.2
 
 
-def run() -> dict:
+def run(quick: bool = False) -> dict:
     out = {}
+    n_round = 300 if quick else ROUND
     for name, cfg in (("fabric-1.2", engine.FABRIC_V12),
                       ("fastfabric", engine.FASTFABRIC)):
         eng = engine.FabricEngine(cfg)
-        eng.run_round(eng.make_proposals(ROUND, seed=99))  # warmup/compile
+        eng.run_round(eng.make_proposals(n_round, seed=99))  # warmup/compile
         tps = []
         for i in range(N_ROUNDS):
-            stats = eng.run_round(eng.make_proposals(ROUND, seed=i))
-            assert stats.n_valid == ROUND
+            stats = eng.run_round(eng.make_proposals(n_round, seed=i))
+            assert stats.n_valid == n_round
             tps.append(stats.tps)
         verify = eng.verify()
         assert all(verify.values()), verify
@@ -36,7 +61,141 @@ def run() -> dict:
                    std=float(np.std(tps)))
     common.row("table1", "speedup", ratio=out["fastfabric"]
                / out["fabric-1.2"])
+    out.update(run_multichannel(quick=quick))
     return out
+
+
+# ------------------------------------------------ multi-channel rows
+
+
+def _windows(n_windows, depth, n, seed):
+    """Pre-endorsed wire windows for one channel's stream."""
+    dims = types.TEST_DIMS
+    eng = engine.FabricEngine(
+        engine.EngineConfig(dims=dims, store_blocks=False))
+    outs = []
+    for w in range(n_windows):
+        wires, idss = [], []
+        for k in range(depth):
+            props = eng.make_proposals(n, seed=seed + 31 * (w * depth + k))
+            txb = endorser.execute_and_endorse(
+                eng.endorser_state, props, dims)
+            wires.append(unmarshal.marshal(txb, dims))
+            idss.append(txb.tx_id)
+            eng.endorser_state = endorser.apply_validated(
+                eng.endorser_state, txb, jnp.ones(n, bool))
+        outs.append((jnp.stack(wires), jnp.stack(idss)))
+    return outs
+
+
+def run_multichannel(quick: bool = False) -> dict:
+    """N channels lockstep through the mesh committer, channel 1 resized
+    mid-run; per-channel oracle equivalence + aggregate TPS + fairness."""
+    dims = types.TEST_DIMS
+    n_dev = len(jax.devices())
+    data = 2 if n_dev >= 2 else 1
+    model = 2 if n_dev >= 4 else 1
+    depth = 2
+    n = 64 if quick else 256
+    n_windows = 5 if quick else 8
+    nb = 512 if quick else 1 << 11
+    mesh = jax.make_mesh((data, model), ("data", "model"))
+    cfg = fs.FabricStepConfig(shard_state=model > 1, pipeline_depth=depth)
+    streams = [_windows(n_windows, depth, n, seed=7 * (c + 1))
+               for c in range(N_CHANNELS)]
+
+    live = engine_bridge.MeshWindowCommitter(
+        dims, cfg, mesh, n_buckets=nb, slots=8, n_channels=N_CHANNELS)
+    valid_live = []
+
+    def commit(w):
+        wires = jnp.stack([s[w][0] for s in streams])
+        ids = jnp.stack([s[w][1] for s in streams])
+        valid_live.append(live.commit_windows(wires, ids).valid)
+
+    # Windows 0-1 at the initial layout, resize channel 1, window 2
+    # compiles the post-resize grouping; windows 3.. are the timed
+    # steady state.
+    for w in range(2):
+        commit(w)
+    live.resize(2 * nb, channel=1)
+    commit(2)
+    live.block_until_ready()
+    t0 = time.perf_counter()
+    for w in range(3, n_windows):
+        commit(w)
+    live.block_until_ready()
+    wall = time.perf_counter() - t0
+    timed_txs = (n_windows - 3) * depth * n
+
+    out = {}
+    per_channel_tps = []
+    for c, wins in enumerate(streams):
+        oracle = engine_bridge.MeshWindowCommitter(
+            dims, cfg, mesh, n_buckets=nb, slots=8)
+        ident = True
+        for w in range(n_windows):
+            if c == 1 and w == 2:
+                oracle.resize(2 * nb)
+            v = oracle.commit_window(*wins[w]).valid
+            ident &= bool(
+                np.array_equal(np.asarray(v), np.asarray(valid_live[w][c])))
+        for a, b in zip(live.channel_state(c), oracle.state):
+            ident &= bool(np.array_equal(np.asarray(a), np.asarray(b)))
+        ident &= bool(np.array_equal(live.tree_head(c), oracle.tree_head()))
+        ident &= bool(np.array_equal(
+            live.journal_head_for(c), np.asarray(oracle.journal_head)))
+        ident &= live.overflow_bits_for(c) == oracle.overflow_bits
+        tps_c = timed_txs / wall
+        per_channel_tps.append(tps_c)
+        out[f"channel{c}"] = ident
+        common.row("table1", f"channel{c}", tps=tps_c, identical=ident,
+                   n_buckets=live.n_buckets_for(c))
+    agg = float(np.sum(per_channel_tps))
+    common.row("table1", "channels_x_tps", tps=agg,
+               n_channels=N_CHANNELS, data_ranks=data,
+               fairness=float(np.min(per_channel_tps)
+                              / np.max(per_channel_tps)))
+    out["channels_x_tps"] = agg
+
+    out["fairness/uniform"] = _fairness_row(
+        "uniform", [128] * 4, quick=quick)
+    weights = np.array([(c + 1) ** -ZIPF_S for c in range(4)])
+    total = 512
+    sizes = np.maximum(32, (total * weights / weights.sum())
+                       // 32 * 32).astype(int)
+    out["fairness/zipf"] = _fairness_row(
+        "zipf", [int(s) for s in sizes], quick=quick, skew=ZIPF_S)
+    return out
+
+
+def _fairness_row(label, sizes, quick=False, **extra) -> float:
+    """Min/max per-channel TPS ratio on the engine round path (lockstep
+    rounds share one wall clock, so the ratio is the per-channel load
+    the round actually retired)."""
+    eng = engine.FabricEngine(engine.EngineConfig(
+        dims=types.TEST_DIMS,
+        orderer=dataclasses.replace(engine.FASTFABRIC.orderer,
+                                    block_size=32),
+        store_blocks=False, n_channels=len(sizes),
+    ))
+    mk = lambda r: [eng.make_proposals(s, seed=100 * r + c)
+                    for c, s in enumerate(sizes)]
+    eng.run_rounds(mk(99))  # warmup/compile
+    n_rounds = 2 if quick else 4
+    txs = np.zeros(len(sizes))
+    wall = 0.0
+    for r in range(n_rounds):
+        stats = eng.run_rounds(mk(r))
+        wall += stats[0].wall_s
+        for c, s in enumerate(stats):
+            txs[c] += s.n_txs
+    tps = txs / wall
+    fair = float(tps.min() / tps.max())
+    common.row("table1", f"fairness/{label}", tps=float(tps.sum()),
+               fairness=fair, n_channels=len(sizes),
+               load=":".join(str(s) for s in sizes), **extra)
+    return fair
 
 
 if __name__ == "__main__":

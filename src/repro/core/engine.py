@@ -16,6 +16,7 @@ launch/fabric_step.py; semantics are identical.
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 from typing import NamedTuple
 
@@ -73,6 +74,19 @@ class EngineConfig:
     slots: int = 8
     n_endorsers: int = 3
     store_blocks: bool = True
+    # Multi-channel scale-out: N independent Fabric channels (the paper's
+    # numbers are per channel; production deployments multiply throughput
+    # by running many). Every channel gets its own world state, heads,
+    # journal, snapshots and resize epochs; ONE BlockStore writer
+    # multiplexes their chains, and a mesh window committer vmaps their
+    # validation over the `data` axis. Channel 0 is the implicit channel
+    # of the whole single-channel API.
+    n_channels: int = 1
+    # Block spill directory for the storage role (per-channel subdirs via
+    # ledger.channel_dir): enables restore() from a snapshot that TRAILS
+    # the journal tip by rebuilding the suffix's ledger head from the
+    # spilled blocks.
+    block_dir: str | None = None
     # Durability layer (storage/): snapshot every N committed blocks
     # (0 = off), optionally persisted to snapshot_dir; journal_dir spills
     # journal records for cold-start recovery (StateJournal.load);
@@ -123,6 +137,40 @@ class RoundStats(NamedTuple):
         return self.n_txs / self.wall_s if self.wall_s else float("inf")
 
 
+class _Channel:
+    """One channel's mutable engine-side state (world state replicas,
+    heads, durability layer, resize history). ``FabricEngine`` holds one
+    per configured channel; channel 0 doubles as the target of the whole
+    single-channel API (property shims on the engine)."""
+
+    __slots__ = (
+        "peer_state", "endorser_state", "log_head", "journal", "snapshots",
+        "next_block_no", "overflow", "n_buckets", "reanchor_log",
+        "repaired_bits", "restored_overflow_bits", "obs_seen_bits",
+        "total_valid", "total_txs",
+    )
+
+    def __init__(self, cfg: EngineConfig, journal):
+        self.peer_state = committer.create_peer_state(
+            cfg.dims, n_buckets=cfg.n_buckets, slots=cfg.slots
+        )
+        self.endorser_state = ws.create(
+            cfg.n_buckets, cfg.slots, cfg.dims.vw
+        )
+        self.log_head = jnp.zeros((2,), U32)
+        self.journal = journal
+        self.snapshots: list[snapshot.Snapshot] = []
+        self.next_block_no = 0
+        self.overflow = jnp.asarray(False)
+        self.n_buckets = cfg.n_buckets
+        self.reanchor_log: list = []
+        self.repaired_bits = 0
+        self.restored_overflow_bits = 0
+        self.obs_seen_bits = 0
+        self.total_valid = 0
+        self.total_txs = 0
+
+
 class FabricEngine:
     """Single-host engine holding all roles (the paper's 15-server testbed
     collapsed onto one device; role separation is preserved logically and
@@ -149,60 +197,133 @@ class FabricEngine:
                         else obs_mod.Obs.disabled())
         if window_committer is not None and self.obs.on:
             window_committer.attach_obs(self.obs)
-        # Overflow bits already reported through the labeled shard gauge /
-        # latch counter (obs): gauges re-set each round, the counter fires
-        # once per newly latched bit.
-        self._obs_seen_bits = 0
         # Optional device-side block pipeline: an adapter (see
         # repro/pipeline/engine_bridge.MeshWindowCommitter) that commits a
         # WINDOW of pipeline-depth blocks per mesh-step invocation instead
-        # of one block per commit_block call. The engine still orders the
-        # round and ships every retired block to the storage role.
+        # of one block per commit_block call — for multi-channel engines
+        # it commits ALL channels' windows per invocation (vmapped over
+        # the mesh `data` axis). The engine still orders each round and
+        # ships every retired block to the storage role.
         self.window_committer = window_committer
-        self.peer_state = committer.create_peer_state(
-            cfg.dims, n_buckets=cfg.n_buckets, slots=cfg.slots
-        )
-        self.endorser_state = ws.create(cfg.n_buckets, cfg.slots, cfg.dims.vw)
-        self.log_head = jnp.zeros((2,), U32)
+        if (window_committer is not None
+                and getattr(window_committer, "n_channels", 1)
+                != cfg.n_channels):
+            raise ValueError(
+                f"window committer drives "
+                f"{window_committer.n_channels} channels, engine is "
+                f"configured for {cfg.n_channels}"
+            )
+        if cfg.n_channels < 1:
+            raise ValueError(f"n_channels must be >= 1, got {cfg.n_channels}")
         # Journal materialization rides the storage role's writer thread —
         # attached only when the durability layer is configured (a snapshot
         # cadence or an on-disk journal), so engines that never asked for a
         # restart story keep the seed's storage-role cost and memory profile.
         # The commit-path head (PeerConfig.journal) is independent and cheap.
-        self.journal = (
-            state_journal.StateJournal(cfg.dims, spill_dir=cfg.journal_dir,
-                                       metrics=self.obs.registry)
-            if (cfg.store_blocks and cfg.peer.journal
-                and (cfg.snapshot_every_blocks > 0
-                     or cfg.journal_dir is not None))
-            else None
-        )
-        self.store = (
-            ledger.BlockStore(journal=self.journal)
-            if cfg.store_blocks else None
-        )
-        self.snapshots: list[snapshot.Snapshot] = []
+        # Each channel journals independently (spill namespaced per channel
+        # via ledger.channel_dir).
+        want_journal = (cfg.store_blocks and cfg.peer.journal
+                        and (cfg.snapshot_every_blocks > 0
+                             or cfg.journal_dir is not None))
+
+        def make_journal(c: int):
+            if not want_journal:
+                return None
+            spill = (ledger.channel_dir(cfg.journal_dir, c)
+                     if cfg.journal_dir is not None else None)
+            return state_journal.StateJournal(
+                cfg.dims, spill_dir=spill, metrics=self.obs.registry
+            )
+
+        self.chans = [
+            _Channel(cfg, make_journal(c)) for c in range(cfg.n_channels)
+        ]
+        if window_committer is not None:
+            for ch in self.chans:
+                ch.n_buckets = window_committer.n_buckets
+        # ONE store multiplexes every channel (channel-tagged submits,
+        # per-channel chains + journals — the paper's storage cluster).
+        if cfg.store_blocks:
+            if cfg.block_dir is not None:
+                os.makedirs(cfg.block_dir, exist_ok=True)
+            self.store = ledger.BlockStore(
+                cfg.block_dir, journal=self.chans[0].journal
+            )
+            for c in range(1, cfg.n_channels):
+                if self.chans[c].journal is not None:
+                    self.store.set_journal(c, self.chans[c].journal)
+        else:
+            self.store = None
         self.total_valid = 0
         self.total_txs = 0
-        self._next_block_no = 0
-        # Sticky commit-overflow flag (device scalar, ORed lazily so block
-        # commits stay async; materialized by verify()). A dropped insert
-        # never bumped its key's version, so an overflowed peer must report
-        # unhealthy instead of silently miscounting — and the flag is
-        # PERSISTED via the snapshot manifest / re-anchor records, so a
-        # peer that overflows, snapshots and restarts stays unhealthy.
-        self._overflow = jnp.asarray(False)
-        # Elastic state: current layout (resize epochs move it away from
-        # cfg.n_buckets) and the resize history of this process.
-        self.n_buckets = (window_committer.n_buckets
-                          if window_committer is not None else cfg.n_buckets)
-        self.reanchor_log: list = []
-        # Overflow bits an overflow-triggered grow already repaired: the
-        # sticky mask never un-latches, so the repair trigger compares
-        # against this to fire once per NEWLY overflowed shard (not once
-        # per process, and not once per round).
-        self._repaired_bits = 0
-        self._restored_overflow_bits = 0
+
+    # -- channel-0 shims: the single-channel API is channel 0's view ---------
+    # (tests/examples predating multi-channel read AND write these).
+
+    peer_state = property(
+        lambda self: self.chans[0].peer_state,
+        lambda self, v: setattr(self.chans[0], "peer_state", v),
+        doc="Channel 0's committer-peer state.",
+    )
+    endorser_state = property(
+        lambda self: self.chans[0].endorser_state,
+        lambda self, v: setattr(self.chans[0], "endorser_state", v),
+    )
+    log_head = property(
+        lambda self: self.chans[0].log_head,
+        lambda self, v: setattr(self.chans[0], "log_head", v),
+    )
+    journal = property(
+        lambda self: self.chans[0].journal,
+        lambda self, v: setattr(self.chans[0], "journal", v),
+    )
+    snapshots = property(
+        lambda self: self.chans[0].snapshots,
+        lambda self, v: setattr(self.chans[0], "snapshots", v),
+    )
+    reanchor_log = property(
+        lambda self: self.chans[0].reanchor_log,
+        lambda self, v: setattr(self.chans[0], "reanchor_log", v),
+    )
+    n_buckets = property(
+        lambda self: self.chans[0].n_buckets,
+        lambda self, v: setattr(self.chans[0], "n_buckets", v),
+        doc="Channel 0's CURRENT table layout (resize epochs move it).",
+    )
+    _next_block_no = property(
+        lambda self: self.chans[0].next_block_no,
+        lambda self, v: setattr(self.chans[0], "next_block_no", v),
+    )
+    # Sticky commit-overflow flag (device scalar, ORed lazily so block
+    # commits stay async; materialized by verify()). A dropped insert
+    # never bumped its key's version, so an overflowed peer must report
+    # unhealthy instead of silently miscounting — and the flag is
+    # PERSISTED via the snapshot manifest / re-anchor records, so a
+    # peer that overflows, snapshots and restarts stays unhealthy.
+    _overflow = property(
+        lambda self: self.chans[0].overflow,
+        lambda self, v: setattr(self.chans[0], "overflow", v),
+    )
+    # Overflow bits an overflow-triggered grow already repaired: the
+    # sticky mask never un-latches, so the repair trigger compares
+    # against this to fire once per NEWLY overflowed shard (not once
+    # per process, and not once per round).
+    _repaired_bits = property(
+        lambda self: self.chans[0].repaired_bits,
+        lambda self, v: setattr(self.chans[0], "repaired_bits", v),
+    )
+    _restored_overflow_bits = property(
+        lambda self: self.chans[0].restored_overflow_bits,
+        lambda self, v: setattr(self.chans[0], "restored_overflow_bits", v),
+    )
+    _obs_seen_bits = property(
+        lambda self: self.chans[0].obs_seen_bits,
+        lambda self, v: setattr(self.chans[0], "obs_seen_bits", v),
+    )
+
+    @property
+    def n_channels(self) -> int:
+        return self.cfg.n_channels
 
     # -- client --------------------------------------------------------------
 
@@ -226,8 +347,10 @@ class FabricEngine:
 
     # -- one full round --------------------------------------------------------
 
-    def run_round(self, proposals: endorser.Proposal) -> RoundStats:
-        """One round: endorse (untimed) -> order -> commit -> retire.
+    def run_round(self, proposals: endorser.Proposal,
+                  channel: int = 0) -> RoundStats:
+        """One round on ``channel``: endorse (untimed) -> order -> commit
+        -> retire.
 
         Timing boundary follows the paper's §IV-D measurement: the client
         sends *pre-endorsed* transactions, so endorsement/marshaling is
@@ -235,8 +358,50 @@ class FabricEngine:
         the endorser-replica updates after validation run on the endorser
         cluster's hardware (P-II role separation) and are applied after
         the timed window here (block handoff itself is async).
+
+        A multi-channel engine backed by a mesh window committer commits
+        all channels per dispatch — drive it with :meth:`run_rounds`;
+        per-channel rounds there would serialize the mesh per channel.
+        Host-path engines (no committer) run any channel's round alone.
         """
+        if self.window_committer is not None and self.cfg.n_channels > 1:
+            raise ValueError(
+                "multi-channel window committer commits all channels per "
+                "dispatch: drive rounds with run_rounds(proposals_by_"
+                "channel)"
+            )
+        return self._round(proposals, channel)
+
+    def run_rounds(self, proposals_by_channel: list) -> list[RoundStats]:
+        """One lockstep round on EVERY channel (entry c drives channel c).
+
+        With a mesh window committer the channels' windows commit in ONE
+        device dispatch per window (vmapped over the mesh `data` axis) —
+        the multi-channel scale-out path; rounds must therefore be
+        shape-uniform across channels (same tx count and block size — pad
+        light channels with filler streams, as the fairness benchmark
+        does). Without a committer this is just the per-channel host path
+        run back to back under one wall clock. Returns per-channel
+        :class:`RoundStats` whose ``wall_s`` is the SHARED round wall (the
+        channels ran concurrently), so per-channel TPS = that channel's
+        txs over the common wall."""
+        if len(proposals_by_channel) != self.cfg.n_channels:
+            raise ValueError(
+                f"expected {self.cfg.n_channels} proposal batches, got "
+                f"{len(proposals_by_channel)}"
+            )
+        if self.window_committer is None:
+            t0 = time.perf_counter()
+            stats = [self._round(p, c)
+                     for c, p in enumerate(proposals_by_channel)]
+            wall = time.perf_counter() - t0
+            return [s._replace(wall_s=wall) for s in stats]
+        return self._rounds_meshed(proposals_by_channel)
+
+    def _round(self, proposals: endorser.Proposal, channel: int
+               ) -> RoundStats:
         cfg = self.cfg
+        ch = self.chans[channel]
         n = int(proposals.src.shape[0])
         bs = cfg.orderer.block_size
         if n % bs:
@@ -245,7 +410,7 @@ class FabricEngine:
         # Endorse (endorser cluster; separate hardware under P-II). The
         # replica must reflect all previously retired blocks first.
         txb = endorser.endorse_jit(
-            self.endorser_state, proposals, cfg.dims,
+            ch.endorser_state, proposals, cfg.dims,
             n_endorsers=cfg.n_endorsers,
         )
         wire = jax.block_until_ready(unmarshal.marshal(txb, cfg.dims))
@@ -253,20 +418,21 @@ class FabricEngine:
         t0 = time.perf_counter()
 
         # Order.
-        with tracer.span("round.order",
+        with tracer.span("round.order", channel=channel,
                          sync=lambda: blocks.log_head):
             blocks = orderer.order_batch_jit(
-                wire, txb.tx_id, txb.client, self.log_head, cfg.orderer
+                wire, txb.tx_id, txb.client, ch.log_head, cfg.orderer
             )
-            self.log_head = blocks.log_head
+            ch.log_head = blocks.log_head
 
         if self.window_committer is not None:
             # Device-side block pipeline: hand the mesh step a window of
             # blocks per invocation (depth blocks in flight ON device,
             # batched consensus + MVCC gathers) instead of per-block
             # dispatch.
-            with tracer.span("round.commit", n_blocks=blocks.wire.shape[0]):
-                retired = self._commit_windows(blocks)
+            with tracer.span("round.commit", n_blocks=blocks.wire.shape[0],
+                             channel=channel):
+                retired = self._commit_windows(blocks, channel)
                 self.window_committer.block_until_ready()
         else:
             # Commit block by block; up to pipeline_depth blocks in flight
@@ -277,27 +443,30 @@ class FabricEngine:
             # never references donated buffers.
             n_blocks = blocks.wire.shape[0]
             with tracer.span("round.commit", n_blocks=n_blocks,
-                             sync=lambda: self.peer_state.ledger_head):
+                             channel=channel,
+                             sync=lambda: ch.peer_state.ledger_head):
                 in_flight = []
                 retired = []
                 for b in range(n_blocks):
-                    bno = int(self._next_block_no)
-                    self._next_block_no += 1
-                    prev_head = jnp.array(self.peer_state.ledger_head,
+                    bno = ch.next_block_no
+                    ch.next_block_no += 1
+                    prev_head = jnp.array(ch.peer_state.ledger_head,
                                           copy=True)
                     res = committer.commit_block(
-                        self.peer_state, blocks.wire[b], cfg.dims, cfg.peer
+                        ch.peer_state, blocks.wire[b], cfg.dims, cfg.peer
                     )
-                    self.peer_state = res.state
-                    self._overflow = self._overflow | res.overflow
+                    ch.peer_state = res.state
+                    ch.overflow = ch.overflow | res.overflow
                     in_flight.append((blocks.wire[b], bno, prev_head,
                                       res.block_hash, res.valid))
                     if len(in_flight) >= max(cfg.peer.pipeline_depth, 1):
-                        retired.append(self._ship(*in_flight.pop(0)))
+                        retired.append(
+                            self._ship(*in_flight.pop(0), channel=channel))
                 while in_flight:
-                    retired.append(self._ship(*in_flight.pop(0)))
+                    retired.append(
+                        self._ship(*in_flight.pop(0), channel=channel))
 
-                jax.block_until_ready(self.peer_state.ledger_head)
+                jax.block_until_ready(ch.peer_state.ledger_head)
             # Per-block commit latency: blocks stay in flight async (the
             # paper's block shepherds), so individual block walls don't
             # exist — amortize the round's order+commit wall over its
@@ -309,54 +478,153 @@ class FabricEngine:
         wall = time.perf_counter() - t0
 
         # Post-window: endorser-cluster replica updates (their hardware).
-        n_valid = 0
-        with tracer.span("round.endorser_replay",
-                         sync=lambda: self.endorser_state.versions):
-            for wire_b, valid in retired:
-                dec = unmarshal.unmarshal(wire_b, self.cfg.dims)
-                self.endorser_state = endorser.apply_validated_jit(
-                    self.endorser_state, dec.txb, valid
-                )
-                n_valid += int(valid.sum())
-
-        self._maybe_resize()
-        self._maybe_snapshot()
-        self.total_valid += n_valid
-        self.total_txs += n
-        reg.counter("txs.valid").inc(n_valid)
-        reg.counter("txs.invalid").inc(n - n_valid)
-        if self.obs.on:
-            self._record_overflow_metrics()
+        n_valid = self._endorser_replay(retired, channel)
+        self._maybe_resize(channel)
+        self._maybe_snapshot(channel)
+        self._count_round(channel, n, n_valid)
         return RoundStats(
             n_txs=n, n_blocks=blocks.wire.shape[0], n_valid=n_valid,
             wall_s=wall,
         )
 
-    def _commit_windows(self, blocks) -> list:
+    def _rounds_meshed(self, proposals_by_channel: list) -> list[RoundStats]:
+        """The multi-channel mesh round: order every channel, then commit
+        all channels' windows in lockstep — one ``commit_windows`` device
+        dispatch per window position covers every channel."""
+        cfg = self.cfg
+        tracer, reg = self.obs.tracer, self.obs.registry
+        wires, blocks_by_ch = [], []
+        for c, proposals in enumerate(proposals_by_channel):
+            ch = self.chans[c]
+            n = int(proposals.src.shape[0])
+            if n % cfg.orderer.block_size:
+                raise ValueError(
+                    f"channel {c}: round of {n} txs not a multiple of "
+                    f"{cfg.orderer.block_size}"
+                )
+            txb = endorser.endorse_jit(
+                ch.endorser_state, proposals, cfg.dims,
+                n_endorsers=cfg.n_endorsers,
+            )
+            wires.append(
+                jax.block_until_ready(unmarshal.marshal(txb, cfg.dims))
+            )
+            blocks_by_ch.append((txb, wires[-1]))
+        shapes = {w.shape for w in wires}
+        if len(shapes) > 1:
+            raise ValueError(
+                f"lockstep rounds need shape-uniform channels, got {shapes}"
+            )
+        t0 = time.perf_counter()
+        ordered = []
+        with tracer.span("round.order", channels=cfg.n_channels,
+                         sync=lambda: [b.log_head for b in ordered]):
+            for c, (txb, wire) in enumerate(blocks_by_ch):
+                ch = self.chans[c]
+                blocks = orderer.order_batch_jit(
+                    wire, txb.tx_id, txb.client, ch.log_head, cfg.orderer
+                )
+                ch.log_head = blocks.log_head
+                ordered.append(blocks)
+
+        wc = self.window_committer
+        n_blocks = ordered[0].wire.shape[0]
+        retired: list[list] = [[] for _ in range(cfg.n_channels)]
+        with tracer.span("round.commit", n_blocks=n_blocks,
+                         channels=cfg.n_channels):
+            for lo in range(0, n_blocks, wc.depth):
+                hi = min(lo + wc.depth, n_blocks)
+                wire_w = jnp.stack([b.wire[lo:hi] for b in ordered])
+                ids_w = jnp.stack([b.tx_ids[lo:hi] for b in ordered])
+                res = wc.commit_windows(wire_w, ids_w)
+                for c in range(cfg.n_channels):
+                    ch = self.chans[c]
+                    for k in range(hi - lo):
+                        bno = ch.next_block_no
+                        ch.next_block_no += 1
+                        retired[c].append(self._ship(
+                            ordered[c].wire[lo + k], bno,
+                            res.prev_hash[c, k], res.block_hash[c, k],
+                            res.valid[c, k], channel=c,
+                        ))
+            wc.block_until_ready()
+        wall = time.perf_counter() - t0
+
+        stats = []
+        for c in range(cfg.n_channels):
+            n = int(proposals_by_channel[c].src.shape[0])
+            n_valid = self._endorser_replay(retired[c], c)
+            self._maybe_resize(c)
+            self._maybe_snapshot(c)
+            self._count_round(c, n, n_valid)
+            stats.append(RoundStats(
+                n_txs=n, n_blocks=n_blocks, n_valid=n_valid, wall_s=wall,
+            ))
+        return stats
+
+    def _endorser_replay(self, retired: list, channel: int) -> int:
+        """Endorser-cluster replica updates (their hardware) for one
+        channel's retired blocks; returns the channel's valid-tx count."""
+        ch = self.chans[channel]
+        n_valid = 0
+        with self.obs.tracer.span(
+            "round.endorser_replay", channel=channel,
+            sync=lambda: ch.endorser_state.versions,
+        ):
+            for wire_b, valid in retired:
+                dec = unmarshal.unmarshal(wire_b, self.cfg.dims)
+                ch.endorser_state = endorser.apply_validated_jit(
+                    ch.endorser_state, dec.txb, valid
+                )
+                n_valid += int(valid.sum())
+        return n_valid
+
+    def _count_round(self, channel: int, n: int, n_valid: int) -> None:
+        ch = self.chans[channel]
+        ch.total_valid += n_valid
+        ch.total_txs += n
+        self.total_valid += n_valid
+        self.total_txs += n
+        reg = self.obs.registry
+        reg.counter("txs.valid").inc(n_valid)
+        reg.counter("txs.invalid").inc(n - n_valid)
+        if self.cfg.n_channels > 1:
+            # Per-channel demand: makes hot channels visible in
+            # stats_text() / collect() next to the aggregate counters.
+            reg.counter("txs.valid", channel=channel).inc(n_valid)
+            reg.counter("txs.invalid", channel=channel).inc(n - n_valid)
+        if self.obs.on:
+            self._record_overflow_metrics(channel)
+
+    def _commit_windows(self, blocks, channel: int = 0) -> list:
         """Slice the ordered round into pipeline-depth windows and hand
         each to the window committer; ship every block to the store with
         the committer's chain hashes. A round tail shorter than the depth
         becomes one shallower window (compiled once, reused)."""
         wc = self.window_committer
+        ch = self.chans[channel]
         retired = []
         n_blocks = blocks.wire.shape[0]
         for lo in range(0, n_blocks, wc.depth):
             hi = min(lo + wc.depth, n_blocks)
             res = wc.commit_window(blocks.wire[lo:hi], blocks.tx_ids[lo:hi])
             for k in range(hi - lo):
-                bno = int(self._next_block_no)
-                self._next_block_no += 1
+                bno = ch.next_block_no
+                ch.next_block_no += 1
                 retired.append(self._ship(
                     blocks.wire[lo + k], bno, res.prev_hash[k],
-                    res.block_hash[k], res.valid[k],
+                    res.block_hash[k], res.valid[k], channel=channel,
                 ))
         return retired
 
-    def _ship(self, wire_b, bno: int, prev_head, block_hash, valid):
+    def _ship(self, wire_b, bno: int, prev_head, block_hash, valid,
+              channel: int = 0):
         """Block leaves the pipeline: async handoff to the storage role."""
         if self.store is not None:
-            with self.obs.tracer.span("block.ship", block_no=bno):
-                self.store.submit(bno, prev_head, block_hash, wire_b, valid)
+            with self.obs.tracer.span("block.ship", block_no=bno,
+                                      channel=channel):
+                self.store.submit(bno, prev_head, block_hash, wire_b,
+                                  valid, channel=channel)
         return wire_b, valid
 
     # -- observability ---------------------------------------------------------
@@ -367,22 +635,33 @@ class FabricEngine:
         count/sum/mean/p50/p95/p99 dicts. Empty when obs is off."""
         return self.obs.registry.collect()
 
+    def stats_text(self) -> str:
+        """Prometheus text exposition of the engine metrics. Multi-channel
+        engines label per-channel series (``txs.valid{channel="c"}``,
+        ``state.shard_overflow{channel="c",shard="m"}``), so hot channels
+        read straight off the scrape."""
+        return self.obs.registry.to_prometheus()
+
     @property
     def tracer(self):
         return self.obs.tracer
 
-    def _record_overflow_metrics(self) -> None:
+    def _record_overflow_metrics(self, channel: int = 0) -> None:
         """Per-shard overflow bits as a labeled gauge + a latch counter
-        that fires once per NEWLY set bit. One tiny host transfer per
+        that fires once per NEWLY set bit. Gauges are keyed
+        ``{channel=c, shard=m}`` — one channel's full shard can't hide
+        behind (or masquerade as) another's. One tiny host transfer per
         round; only runs with obs on."""
-        bits = self.overflow_bits()
+        ch = self.chans[channel]
+        bits = self.overflow_bits(channel)
         reg = self.obs.registry
-        new = bits & ~self._obs_seen_bits
+        new = bits & ~ch.obs_seen_bits
         if new:
             reg.counter("overflow.latches").inc(bin(new).count("1"))
-            self._obs_seen_bits |= bits
+            ch.obs_seen_bits |= bits
         for m in range(self.n_shards):
-            reg.gauge("state.shard_overflow", shard=m).set((bits >> m) & 1)
+            reg.gauge("state.shard_overflow", channel=channel,
+                      shard=m).set((bits >> m) & 1)
 
     # -- elastic state (resize epochs) -----------------------------------------
 
@@ -395,34 +674,39 @@ class FabricEngine:
             return self.window_committer.n_shards
         return self.cfg.snapshot_shards
 
-    def _state_view(self) -> ws.HashState:
-        return (self.window_committer.hash_state()
+    def _state_view(self, channel: int = 0) -> ws.HashState:
+        return (self.window_committer.hash_state(channel)
                 if self.window_committer is not None
-                else self.peer_state.hash_state)
+                else self.chans[channel].peer_state.hash_state)
 
-    def _tree_head(self, state: ws.HashState | None = None) -> np.ndarray:
-        st = self._state_view() if state is None else state
+    def _tree_head(self, state: ws.HashState | None = None,
+                   channel: int = 0) -> np.ndarray:
+        st = self._state_view(channel) if state is None else state
         return np.asarray(ws.tree_head(st, self.n_shards))
 
-    def overflow_bits(self) -> int:
-        """Sticky per-shard overflow bitmask (bit m == shard m filled).
-        Restored bits (a restart re-latching a persisted mask) OR in, so a
-        mesh peer's which-shard information survives a host-side restore."""
+    def overflow_bits(self, channel: int = 0) -> int:
+        """Sticky per-shard overflow bitmask of one channel (bit m ==
+        shard m filled). Restored bits (a restart re-latching a persisted
+        mask) OR in, so a mesh peer's which-shard information survives a
+        host-side restore."""
+        ch = self.chans[channel]
         if self.window_committer is not None:
-            bits = self.window_committer.overflow_bits
+            bits = self.window_committer.overflow_bits_for(channel)
         else:
-            bits = int(bool(np.asarray(self._overflow)))
-        return bits | self._restored_overflow_bits
+            bits = int(bool(np.asarray(ch.overflow)))
+        return bits | ch.restored_overflow_bits
 
-    def _maybe_resize(self) -> dict | None:
+    def _maybe_resize(self, channel: int = 0) -> dict | None:
         """The between-rounds policy hook: grow under bucket pressure or
         after an overflow (capacity repair instead of fail-stop), shrink a
-        mostly-empty table. Rounds are window boundaries, so a window
+        mostly-empty table. Per channel — each channel's occupancy drives
+        its own epochs. Rounds are window boundaries, so a window
         committer is always drained here."""
         pol = self.cfg.resize_policy
         if pol is None:
             return None
-        st = self._state_view()
+        ch = self.chans[channel]
+        st = self._state_view(channel)
         m = self.n_shards
         occ = np.asarray(ws.shard_occupancy(st, m))
         cap = st.n_buckets // m * st.slots
@@ -435,228 +719,331 @@ class FabricEngine:
             # against the repaired mask keeps a later overflow of a
             # different shard repairable without re-firing every round).
             or (pol.grow_on_overflow
-                and self.overflow_bits() & ~self._repaired_bits)
+                and self.overflow_bits(channel) & ~ch.repaired_bits)
         )
-        if grow and self.n_buckets * 2 <= pol.max_buckets:
+        if grow and ch.n_buckets * 2 <= pol.max_buckets:
             self.obs.tracer.event(
                 "resize.decision", action="grow", min_free=min_free,
-                overflow_bits=self.overflow_bits(),
-                n_buckets=self.n_buckets,
+                overflow_bits=self.overflow_bits(channel),
+                n_buckets=ch.n_buckets, channel=channel,
             )
-            self._repaired_bits |= self.overflow_bits()
-            return self.resize(self.n_buckets * 2)
-        if (pol.shrink_fill and self.n_buckets // 2 >= pol.min_buckets
+            ch.repaired_bits |= self.overflow_bits(channel)
+            return self.resize(ch.n_buckets * 2, channel)
+        if (pol.shrink_fill and ch.n_buckets // 2 >= pol.min_buckets
                 and occ.sum() < pol.shrink_fill
-                * (self.n_buckets // 2) * st.slots):
+                * (ch.n_buckets // 2) * st.slots):
             self.obs.tracer.event(
                 "resize.decision", action="shrink",
-                occupancy=int(occ.sum()), n_buckets=self.n_buckets,
+                occupancy=int(occ.sum()), n_buckets=ch.n_buckets,
+                channel=channel,
             )
-            return self.resize(self.n_buckets // 2)
+            return self.resize(ch.n_buckets // 2, channel)
         return None
 
-    def resize(self, new_n_buckets: int) -> dict:
-        """Halve/double the world state NOW (between rounds) and commit a
-        re-anchor record for the epoch. The endorser replica follows (its
-        capacity must track the peer's or the replicas diverge on which
-        inserts drop), and the journal is re-anchored at the drained
-        boundary so verify/replay cross the resize."""
+    def resize(self, new_n_buckets: int, channel: int = 0) -> dict:
+        """Halve/double ONE channel's world state NOW (between rounds) and
+        commit a re-anchor record for the epoch — to that channel's
+        journal; other channels' tables, heads and journals are untouched.
+        The channel's endorser replica follows (its capacity must track
+        the peer's or the replicas diverge on which inserts drop), and the
+        journal is re-anchored at the drained boundary so verify/replay
+        cross the resize."""
         if self.store is not None:
             self.store.drain()  # journal tip must be at the boundary
-        old_nb = self.n_buckets
-        hot = (self.window_committer.hot_shard()
-               if self.window_committer is not None else self._hot_shard())
+        ch = self.chans[channel]
+        old_nb = ch.n_buckets
+        hot = (self.window_committer.hot_shard(channel)
+               if self.window_committer is not None
+               else self._hot_shard(channel))
         if self.window_committer is not None:
-            info = self.window_committer.resize(new_n_buckets)
+            info = self.window_committer.resize(new_n_buckets, channel)
             tree, bits = info.tree_head, info.overflow_bits
         else:
-            res = ws.resize(self.peer_state.hash_state, new_n_buckets)
-            self.peer_state = self.peer_state._replace(hash_state=res.state)
-            self._overflow = self._overflow | res.overflow
+            res = ws.resize(ch.peer_state.hash_state, new_n_buckets)
+            ch.peer_state = ch.peer_state._replace(hash_state=res.state)
+            ch.overflow = ch.overflow | res.overflow
             tree, bits = None, None
-        eres = ws.resize(self.endorser_state, new_n_buckets)
-        self.endorser_state = eres.state
-        self.n_buckets = new_n_buckets
+        eres = ws.resize(ch.endorser_state, new_n_buckets)
+        ch.endorser_state = eres.state
+        ch.n_buckets = new_n_buckets
         if tree is None:
-            tree, bits = self._tree_head(), self.overflow_bits()
-        if self.journal is not None:
-            self.journal.append_reanchor(
-                self._next_block_no - 1,
+            tree, bits = (self._tree_head(channel=channel),
+                          self.overflow_bits(channel))
+        if ch.journal is not None:
+            ch.journal.append_reanchor(
+                ch.next_block_no - 1,
                 old_n_buckets=old_nb, new_n_buckets=new_n_buckets,
                 n_shards=self.n_shards, tree_head=tree, overflow_bits=bits,
             )
         info = {
-            "block_no": self._next_block_no - 1, "old_n_buckets": old_nb,
+            "block_no": ch.next_block_no - 1, "old_n_buckets": old_nb,
             "new_n_buckets": new_n_buckets, "overflow_bits": bits,
-            "hot_shard": hot,
+            "hot_shard": hot, "channel": channel,
         }
-        self.reanchor_log.append(info)
+        ch.reanchor_log.append(info)
         self.obs.registry.counter(
             "resize.grow" if new_n_buckets > old_nb else "resize.shrink"
         ).inc()
         self.obs.tracer.event("resize.epoch", **info)
         return info
 
-    def _hot_shard(self) -> int:
+    def _hot_shard(self, channel: int = 0) -> int:
         return ws.hot_shard(
-            self.overflow_bits(),
-            ws.shard_occupancy(self._state_view(), self.n_shards),
+            self.overflow_bits(channel),
+            ws.shard_occupancy(self._state_view(channel), self.n_shards),
         )
 
     # -- durability layer (storage/) -------------------------------------------
 
-    def _maybe_snapshot(self) -> None:
-        """Snapshot cadence: dump world state every ``snapshot_every_blocks``
-        committed blocks; prune chain + journal with a one-snapshot lag (the
-        previous snapshot stays fully recoverable even if the newest one is
-        lost or torn). Snapshots are per-shard files + manifest, and the
-        manifest persists the sticky overflow bitmask + re-anchor head."""
+    def _maybe_snapshot(self, channel: int = 0) -> None:
+        """Snapshot cadence: dump one channel's world state every
+        ``snapshot_every_blocks`` committed blocks (per-channel block
+        counts — channels snapshot on their own schedules); prune that
+        channel's chain + journal with a one-snapshot lag (the previous
+        snapshot stays fully recoverable even if the newest one is lost or
+        torn). Snapshots are per-shard files + manifest, and the manifest
+        persists the sticky overflow bitmask + re-anchor head."""
         cfg = self.cfg
         if not cfg.snapshot_every_blocks:
             return
-        last = self.snapshots[-1].block_no if self.snapshots else -1
-        tip = self._next_block_no - 1  # last committed block
+        ch = self.chans[channel]
+        last = ch.snapshots[-1].block_no if ch.snapshots else -1
+        tip = ch.next_block_no - 1  # last committed block
         if tip - last < cfg.snapshot_every_blocks:
             return
         self.store.drain()  # journal must cover every shipped block
-        with self.obs.tracer.span("snapshot.take", block_no=tip):
+        with self.obs.tracer.span("snapshot.take", block_no=tip,
+                                  channel=channel):
             snap = snapshot.take(
-                self._state_view(),
+                self._state_view(channel),
                 block_no=tip,
-                journal_head=self._peer_journal_head(),
-                ledger_head=self._ledger_head(),
+                journal_head=self._peer_journal_head(channel),
+                ledger_head=self._ledger_head(channel),
                 n_shards=self.n_shards,
-                overflow_bits=self.overflow_bits(),
-                reanchor_head=(self.journal.reanchor_head
-                               if self.journal is not None else None),
+                overflow_bits=self.overflow_bits(channel),
+                reanchor_head=(ch.journal.reanchor_head
+                               if ch.journal is not None else None),
             )
-        self.snapshots.append(snap)
+        ch.snapshots.append(snap)
         if cfg.snapshot_dir is not None:
-            snapshot.save(cfg.snapshot_dir, snap,
-                          registry=self.obs.registry)
-            snapshot.gc(cfg.snapshot_dir, keep=2,
-                        registry=self.obs.registry)
-        if cfg.prune_chain and len(self.snapshots) >= 2:
-            base = self.snapshots[-2].block_no
-            self.store.prune_upto(base)
-            self.journal.prune_upto(base)
-            self.snapshots = self.snapshots[-2:]
+            sdir = ledger.channel_dir(cfg.snapshot_dir, channel)
+            snapshot.save(sdir, snap, registry=self.obs.registry)
+            snapshot.gc(sdir, keep=2, registry=self.obs.registry)
+        if cfg.prune_chain and len(ch.snapshots) >= 2:
+            base = ch.snapshots[-2].block_no
+            self.store.prune_upto(base, channel)
+            ch.journal.prune_upto(base)
+            ch.snapshots = ch.snapshots[-2:]
 
-    def recover(self) -> recovery.RecoveryResult:
-        """Cold-start recovery from the latest snapshot + journal suffix
-        (crossing any resize re-anchors in it)."""
-        if self.journal is None:
+    def recover(self, channel: int = 0) -> recovery.RecoveryResult:
+        """Cold-start recovery of one channel from its latest snapshot +
+        journal suffix (crossing any resize re-anchors in it)."""
+        ch = self.chans[channel]
+        if ch.journal is None:
             raise recovery.RecoveryError("engine has no journal")
         self.store.drain()
         return recovery.recover(
-            self.journal,
-            snapshot=self.snapshots[-1] if self.snapshots else None,
+            ch.journal,
+            snapshot=ch.snapshots[-1] if ch.snapshots else None,
             n_buckets=self.cfg.n_buckets,
             slots=self.cfg.slots,
             value_width=self.cfg.dims.vw,
+            channel=channel,
         )
 
     @classmethod
     def restore(cls, cfg: EngineConfig) -> "FabricEngine":
-        """Restart a peer from its persisted snapshot + journal spill.
+        """Restart a peer from its persisted snapshots + journal spills
+        (every configured channel restores from its own namespaced dirs).
 
-        Requires ``journal_dir`` and ``snapshot_dir``; the latest complete
-        snapshot must cover the journal tip (the engine snapshots after the
-        round that produced the tip, so a crash between rounds restores
-        exactly). The restored peer re-latches the persisted sticky
-        overflow bitmask — overflowing, snapshotting and restarting no
-        longer launders the health flag — and resumes on the persisted
-        (post-resize) layout.
+        Requires ``journal_dir`` and ``snapshot_dir``. When the latest
+        complete snapshot covers the journal tip (the engine snapshots
+        after the round that produced the tip, so a crash between rounds
+        restores exactly), the snapshot's heads restore directly. When the
+        snapshot TRAILS the tip (crash between the journal write and the
+        snapshot), the suffix's state replays from the journal and its
+        ledger head rebuilds from the ``block_dir`` block spill — the
+        spilled blocks must chain from the snapshot's head, and they
+        re-seed the store so ``verify()`` replays the same suffix. The
+        restored peer re-latches the persisted sticky overflow bitmask —
+        overflowing, snapshotting and restarting no longer launders the
+        health flag — and resumes on the persisted (post-resize) layout.
         """
         if cfg.journal_dir is None or cfg.snapshot_dir is None:
             raise recovery.RecoveryError(
                 "restore requires journal_dir and snapshot_dir"
             )
         eng = cls(cfg)
+        for c in range(cfg.n_channels):
+            eng._restore_channel(c)
+        return eng
+
+    def _restore_channel(self, channel: int) -> None:
+        cfg = self.cfg
+        ch = self.chans[channel]
         jrnl = state_journal.StateJournal.load(
-            cfg.dims, cfg.journal_dir, metrics=eng.obs.registry
+            cfg.dims, ledger.channel_dir(cfg.journal_dir, channel),
+            metrics=self.obs.registry,
         )
-        eng.journal = jrnl
-        if eng.store is not None:
-            eng.store.close()
-            eng.store = ledger.BlockStore(journal=jrnl)
-        snap = snapshot.latest(cfg.snapshot_dir)
+        ch.journal = jrnl
+        if self.store is not None:
+            if channel == cfg.n_channels - 1:
+                # Writer swap once, after the last channel's journal loads:
+                # the fresh store multiplexes every restored journal.
+                self.store.close()
+                store = ledger.BlockStore(cfg.block_dir,
+                                          journal=self.chans[0].journal)
+                for c2 in range(1, cfg.n_channels):
+                    if self.chans[c2].journal is not None:
+                        store.set_journal(c2, self.chans[c2].journal)
+                # Re-seed the already-restored channels' bases and chains.
+                for c2 in range(channel):
+                    old = self.store
+                    store.chains[c2] = old.chains.get(c2, [])
+                    store.base_block_nos[c2] = old.base_block_nos.get(
+                        c2, -1)
+                    store.base_hashes[c2] = old.base_hashes.get(
+                        c2, np.zeros(2, np.uint32))
+                self.store = store
+        snap = snapshot.latest(ledger.channel_dir(cfg.snapshot_dir, channel))
         if snap is None:
             raise recovery.RecoveryError(
-                f"no complete snapshot in {cfg.snapshot_dir}"
+                f"no complete snapshot for channel {channel} in "
+                f"{cfg.snapshot_dir}"
             )
         rec = recovery.recover(
             jrnl, snapshot=snap, n_buckets=cfg.n_buckets, slots=cfg.slots,
             value_width=cfg.dims.vw,
         )
+        suffix: list[ledger.StoredBlock] = []
         if rec.block_no != snap.block_no:
-            raise recovery.RecoveryError(
-                f"journal tip {rec.block_no} past the latest snapshot "
-                f"{snap.block_no}: the suffix's ledger head is not "
-                "recoverable without the block spill"
+            # The snapshot trails the journal tip: the journal already
+            # replayed the suffix's STATE, but the ledger head only lives
+            # in the block chain — rebuild it from the spilled blocks,
+            # verifying they chain from the snapshot's head.
+            if cfg.block_dir is None:
+                raise recovery.RecoveryError(
+                    f"journal tip {rec.block_no} past the latest snapshot "
+                    f"{snap.block_no}: the suffix's ledger head is not "
+                    "recoverable without the block spill (cfg.block_dir)"
+                )
+            suffix = ledger.load_spilled_blocks(
+                cfg.block_dir, snap.block_no + 1, channel
             )
-        eng.snapshots = [snap]
-        eng.peer_state = eng.peer_state._replace(
+            suffix = [sb for sb in suffix if sb.block_no <= rec.block_no]
+            if not suffix or suffix[-1].block_no != rec.block_no:
+                have = suffix[-1].block_no if suffix else snap.block_no
+                raise recovery.RecoveryError(
+                    f"block spill covers channel {channel} only up to "
+                    f"block {have}, journal tip is {rec.block_no}"
+                )
+            prev = np.asarray(snap.ledger_head)
+            for sb in suffix:
+                if not np.array_equal(sb.prev_hash, prev):
+                    raise recovery.RecoveryError(
+                        f"spilled block {sb.block_no} does not chain from "
+                        "the snapshot's ledger head (corrupt or tampered)"
+                    )
+                expect = ledger.append_hash(
+                    jnp.asarray(prev), jnp.uint32(sb.block_no),
+                    ledger.block_body_digest(
+                        jnp.asarray(sb.wire), jnp.asarray(sb.valid)),
+                )
+                if not np.array_equal(np.asarray(expect), sb.block_hash):
+                    raise recovery.RecoveryError(
+                        f"spilled block {sb.block_no} fails its chain "
+                        "hash (corrupt or tampered)"
+                    )
+                prev = sb.block_hash
+            ledger_head = prev
+            # Resize epochs inside the suffix must re-enter the replay
+            # log, or verify()'s chain replay lands on the wrong layout.
+            for r in jrnl.suffix_reanchors(snap.block_no):
+                ch.reanchor_log.append({
+                    "block_no": r.block_no,
+                    "old_n_buckets": r.old_n_buckets,
+                    "new_n_buckets": r.new_n_buckets,
+                    "overflow_bits": r.overflow_bits,
+                    "hot_shard": -1,  # not persisted; advisory only
+                    "channel": channel,
+                })
+        else:
+            ledger_head = np.asarray(snap.ledger_head)
+        ch.snapshots = [snap]
+        ch.peer_state = ch.peer_state._replace(
             hash_state=rec.state,
-            ledger_head=jnp.asarray(snap.ledger_head),
+            ledger_head=jnp.asarray(ledger_head),
             journal_head=jnp.asarray(rec.journal_head),
             block_no=jnp.uint32(rec.block_no + 1),
         )
-        eng.endorser_state = ws.HashState(
+        ch.endorser_state = ws.HashState(
             keys=jnp.array(rec.state.keys, copy=True),
             versions=jnp.array(rec.state.versions, copy=True),
             values=jnp.array(rec.state.values, copy=True),
         )
-        eng.n_buckets = rec.n_buckets
+        ch.n_buckets = rec.n_buckets
         # Re-latch the persisted mask WITH its which-shard bits, and mark
         # those bits as already repaired: the pre-crash policy (or its
         # operator) had its chance — a restart must not trigger one more
         # doubling per boot on bits that can never un-latch. A shard that
         # newly overflows AFTER the restart still fires the repair.
-        eng._restored_overflow_bits = rec.overflow_bits
-        eng._repaired_bits = rec.overflow_bits
-        eng._next_block_no = rec.block_no + 1
-        if eng.store is not None:
-            eng.store.base_block_no = snap.block_no
-            eng.store.base_hash = np.asarray(snap.ledger_head)
-        return eng
+        ch.restored_overflow_bits = rec.overflow_bits
+        ch.repaired_bits = rec.overflow_bits
+        ch.next_block_no = rec.block_no + 1
+        if self.store is not None:
+            # The chain re-anchors at the snapshot; a rebuilt suffix
+            # re-enters it so verify() replays the same blocks recovery
+            # replayed from the journal.
+            self.store.base_block_nos[channel] = snap.block_no
+            self.store.base_hashes[channel] = np.asarray(snap.ledger_head)
+            self.store.chains[channel] = list(suffix)
 
     # -- durability checks (used by tests/examples) ----------------------------
 
-    def _peer_digest(self) -> np.ndarray:
-        """Digest of the committed world state — from the mesh-backed
-        window committer when one is attached, else the peer state."""
+    def _peer_digest(self, channel: int = 0) -> np.ndarray:
+        """Digest of a channel's committed world state — from the
+        mesh-backed window committer when one is attached, else the peer
+        state."""
         if self.window_committer is not None:
-            return self.window_committer.state_digest()
-        return np.asarray(ws.state_digest(self.peer_state.hash_state))
+            return self.window_committer.state_digest(channel)
+        return np.asarray(
+            ws.state_digest(self.chans[channel].peer_state.hash_state)
+        )
 
-    def _peer_journal_head(self) -> np.ndarray:
+    def _peer_journal_head(self, channel: int = 0) -> np.ndarray:
         if self.window_committer is not None:
-            return self.window_committer.journal_head
-        return np.asarray(self.peer_state.journal_head)
+            return self.window_committer.journal_head_for(channel)
+        return np.asarray(self.chans[channel].peer_state.journal_head)
 
-    def _ledger_head(self) -> np.ndarray:
+    def _ledger_head(self, channel: int = 0) -> np.ndarray:
         if self.window_committer is not None:
-            return np.asarray(self.window_committer.state.ledger_head[0])
-        return np.asarray(self.peer_state.ledger_head)
+            return self.window_committer.ledger_head_for(channel)
+        return np.asarray(self.chans[channel].peer_state.ledger_head)
 
-    def overflowed(self) -> bool:
-        """Sticky: any committed block ever dropped a write on a full
-        bucket (mesh-backed committer or the single-host peer path)."""
-        return bool(self.overflow_bits())
+    def overflowed(self, channel: int = 0) -> bool:
+        """Sticky: any committed block of the channel ever dropped a write
+        on a full bucket (mesh-backed committer or the single-host peer
+        path)."""
+        return bool(self.overflow_bits(channel))
 
-    def verify(self) -> dict:
-        """Drain storage, verify the chain, check replica consistency,
-        check that no commit ever overflowed a bucket, and prove the
-        recovery path reproduces the live peer."""
+    def verify(self, channel: int = 0) -> dict:
+        """Drain storage, verify ONE channel's chain, check its replica
+        consistency, check that none of its commits ever overflowed a
+        bucket, and prove its recovery path reproduces the live peer.
+        Strictly per-channel state: tampering with channel i's chain or
+        journal flips channel i's verdicts only (``verify_all`` sweeps
+        every channel)."""
+        ch = self.chans[channel]
         out = {"chain_ok": True, "replica_ok": True, "replay_ok": True,
-               "recovery_ok": True, "overflow_ok": not self.overflowed()}
+               "recovery_ok": True,
+               "overflow_ok": not self.overflowed(channel)}
         if self.store is not None:
             self.store.drain()
-            out["chain_ok"] = self.store.verify_chain()
+            out["chain_ok"] = self.store.verify_chain(channel)
             start = None
             missing_base = False
-            if self.store.base_block_no >= 0:
+            base_bno = self.store.base_block_nos.get(channel, -1)
+            if base_bno >= 0:
                 # Chain pruned at a snapshot boundary: replay resumes from
                 # the snapshot that covers the compacted prefix. The list
                 # may no longer hold it (pruned snapshots, reloaded dir) —
@@ -664,8 +1051,7 @@ class FabricEngine:
                 # covering snapshot the compacted prefix cannot be
                 # re-authenticated or replayed.
                 base = next(
-                    (s for s in self.snapshots
-                     if s.block_no == self.store.base_block_no),
+                    (s for s in ch.snapshots if s.block_no == base_bno),
                     None,
                 )
                 if base is None:
@@ -679,30 +1065,31 @@ class FabricEngine:
                 # Replay crosses resize epochs: the recorded halve/doubles
                 # apply at their boundaries, so the replayed table lands on
                 # the live (post-resize) layout.
-                replay_from = (self.store.base_block_no
-                               if start is not None else -1)
+                replay_from = base_bno if start is not None else -1
                 resize_at: dict = {}
-                for r in self.reanchor_log:
+                for r in ch.reanchor_log:
                     if r["block_no"] > replay_from:
                         resize_at.setdefault(r["block_no"], []).append(
                             r["new_n_buckets"])
                 replayed = self.store.replay_state(
                     self.cfg.dims, self.cfg.n_buckets, self.cfg.slots,
                     start_state=start, resize_at=resize_at,
+                    channel=channel,
                 )
                 out["replay_ok"] = bool(
                     np.array_equal(
                         np.asarray(ws.state_digest(replayed)),
-                        self._peer_digest(),
+                        self._peer_digest(channel),
                     )
                 ) if self.cfg.peer.hash_state else True
-        if self.journal is not None and self.cfg.peer.hash_state:
+        if ch.journal is not None and self.cfg.peer.hash_state:
             try:
-                rec = self.recover()
+                rec = self.recover(channel)
                 out["recovery_ok"] = bool(
-                    np.array_equal(rec.state_digest, self._peer_digest())
+                    np.array_equal(rec.state_digest,
+                                   self._peer_digest(channel))
                     and np.array_equal(
-                        rec.journal_head, self._peer_journal_head()
+                        rec.journal_head, self._peer_journal_head(channel)
                     )
                 )
             except recovery.RecoveryError:
@@ -710,8 +1097,12 @@ class FabricEngine:
         if self.cfg.peer.hash_state:
             out["replica_ok"] = bool(
                 np.array_equal(
-                    np.asarray(ws.state_digest(self.endorser_state)),
-                    self._peer_digest(),
+                    np.asarray(ws.state_digest(ch.endorser_state)),
+                    self._peer_digest(channel),
                 )
             )
         return out
+
+    def verify_all(self) -> dict[int, dict]:
+        """Per-channel :meth:`verify` verdicts for every channel."""
+        return {c: self.verify(c) for c in range(self.cfg.n_channels)}

@@ -14,6 +14,7 @@ durability argument that lets P-I drop the database (§III-E).
 
 from __future__ import annotations
 
+import os
 import queue
 import threading
 from typing import NamedTuple
@@ -27,6 +28,41 @@ from repro.core import hashing, types, unmarshal, world_state
 U32 = jnp.uint32
 
 GENESIS = jnp.zeros((2,), U32)
+
+
+def channel_dir(base: str, channel: int) -> str:
+    """Where channel ``channel``'s files live under ``base``.
+
+    Channel 0 IS ``base`` — every pre-multi-channel directory layout
+    (spill dirs, journal segment dirs, snapshot dirs) is exactly channel
+    0's layout, so single-channel deployments keep their paths and old
+    directories restore as channel 0. Other channels nest one level down.
+    """
+    if channel == 0:
+        return base
+    return os.path.join(base, f"channel_{channel:04d}")
+
+
+def load_spilled_blocks(spill_dir: str, start_block: int,
+                        channel: int = 0) -> list["StoredBlock"]:
+    """Read a channel's spilled blocks from ``start_block`` upward until
+    the first gap. The restore path uses this to rebuild the suffix a
+    snapshot doesn't cover (FabricEngine.restore with a snapshot trailing
+    the journal tip)."""
+    d = channel_dir(spill_dir, channel)
+    out: list[StoredBlock] = []
+    bno = start_block
+    while True:
+        path = os.path.join(d, f"block_{bno:08d}.npz")
+        if not os.path.exists(path):
+            return out
+        with np.load(path) as z:
+            out.append(StoredBlock(
+                block_no=bno,
+                prev_hash=z["prev_hash"], block_hash=z["block_hash"],
+                wire=z["wire"], valid=z["valid"],
+            ))
+        bno += 1
 
 
 def block_body_digest(wire: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarray:
@@ -81,21 +117,99 @@ class BlockStore:
     history stays authenticated because the chain re-anchors at the hash of
     the last pruned block (``base_hash``), which the covering snapshot's
     recovery path cross-checks.
+
+    ONE store (one writer thread, one queue) multiplexes every channel of a
+    multi-channel engine: submitted blocks are channel-tagged, and the
+    store keeps per-channel chains, re-anchor bases and journals — the
+    paper's storage cluster serves all channels, but each channel's chain
+    verifies independently (cross-channel isolation: a corrupted record in
+    channel i's chain or journal fails only channel i's checks). The
+    channel-0 surface (``.chain``, ``.base_block_no``, ``.base_hash``,
+    channel-less method calls) is the pre-multi-channel API unchanged.
     """
 
     def __init__(self, spill_dir: str | None = None, *, journal=None):
         self._q: "queue.Queue" = queue.Queue()
-        self.chain: list[StoredBlock] = []
-        self.base_block_no = -1
-        self.base_hash = np.zeros(2, np.uint32)
+        self.chains: dict[int, list[StoredBlock]] = {0: []}
+        self.base_block_nos: dict[int, int] = {0: -1}
+        self.base_hashes: dict[int, np.ndarray] = {
+            0: np.zeros(2, np.uint32)
+        }
         self._spill_dir = spill_dir
-        self._journal = journal
+        self._journals: dict[int, object] = {}
+        if journal is not None:
+            self._journals[0] = journal
         self._err: Exception | None = None
         self._t = threading.Thread(target=self._run, daemon=True)
         self._t.start()
 
-    def submit(self, block_no, prev_hash, block_hash, wire, valid) -> None:
-        self._q.put((block_no, prev_hash, block_hash, wire, valid))
+    # -- channel plumbing --------------------------------------------------
+
+    def _chan(self, channel: int) -> list[StoredBlock]:
+        if channel not in self.chains:
+            self.chains[channel] = []
+            self.base_block_nos[channel] = -1
+            self.base_hashes[channel] = np.zeros(2, np.uint32)
+        return self.chains[channel]
+
+    def set_journal(self, channel: int, journal) -> None:
+        """Attach channel ``channel``'s state journal to the writer."""
+        self._journals[channel] = journal
+
+    @property
+    def chain(self) -> list[StoredBlock]:
+        """Channel 0's chain (single-channel compat; the returned list is
+        live — callers may index/mutate it, as the tamper tests do)."""
+        return self._chan(0)
+
+    @chain.setter
+    def chain(self, value: list[StoredBlock]) -> None:
+        self.chains[0] = value
+
+    @property
+    def base_block_no(self) -> int:
+        return self.base_block_nos[0]
+
+    @base_block_no.setter
+    def base_block_no(self, value: int) -> None:
+        self.base_block_nos[0] = value
+
+    @property
+    def base_hash(self) -> np.ndarray:
+        return self.base_hashes[0]
+
+    @base_hash.setter
+    def base_hash(self, value: np.ndarray) -> None:
+        self.base_hashes[0] = value
+
+    @property
+    def _journal(self):
+        return self._journals.get(0)
+
+    @_journal.setter
+    def _journal(self, value) -> None:
+        if value is None:
+            self._journals.pop(0, None)
+        else:
+            self._journals[0] = value
+
+    def _spill_path(self, channel: int, bno: int) -> str:
+        d = channel_dir(self._spill_dir, channel)
+        # Channel subdirs are created on demand; the BASE dir must already
+        # exist — a missing base is a misconfiguration the writer fail-stops
+        # on (and a contract the storage tests pin).
+        if channel != 0:
+            os.makedirs(d, exist_ok=True)
+        return os.path.join(d, f"block_{bno:08d}.npz")
+
+    # -- the writer --------------------------------------------------------
+
+    def submit(self, block_no, prev_hash, block_hash, wire, valid,
+               channel: int = 0) -> None:
+        self._chan(channel)  # channel registered caller-side: the writer
+        # thread then only appends to an existing list (no dict mutation
+        # races between submit and the drain thread).
+        self._q.put((block_no, prev_hash, block_hash, wire, valid, channel))
 
     def _run(self) -> None:
         while True:
@@ -114,30 +228,28 @@ class BlockStore:
                 continue
             spill_path = None
             try:
-                bno, prev, bh, wire, valid = jax.device_get(item)
+                channel = item[-1]
+                bno, prev, bh, wire, valid = jax.device_get(item[:-1])
                 sb = StoredBlock(int(bno), prev, bh, wire, valid)
                 if self._spill_dir is not None:
-                    spill_path = (
-                        f"{self._spill_dir}/block_{int(bno):08d}.npz"
-                    )
+                    spill_path = self._spill_path(channel, int(bno))
                     np.savez(
                         spill_path,
                         prev_hash=prev, block_hash=bh, wire=wire, valid=valid,
                     )
-                if self._journal is not None:
-                    self._journal.append_block(int(bno), wire, valid)
+                jrnl = self._journals.get(channel)
+                if jrnl is not None:
+                    jrnl.append_block(int(bno), wire, valid)
                 # Chain append last: a block is in the chain only if every
                 # sink (spill, journal) accepted it, so the sinks can never
                 # silently trail the chain.
-                self.chain.append(sb)
+                self._chan(channel).append(sb)
             except Exception as e:  # surfaced on drain()/close()
                 self._err = e
                 # Un-spill this block so no sink leads the chain: a reader
                 # of the spill directory must never see a block the chain
                 # and journal fail-stopped before.
                 if spill_path is not None:
-                    import os
-
                     try:
                         os.remove(spill_path)
                     except OSError:
@@ -163,7 +275,7 @@ class BlockStore:
         self._q.join()
         self._surface_err()
 
-    def resume(self) -> int:
+    def resume(self, channel: int = 0) -> int:
         """Supervised restart after a writer failure.
 
         The writer fail-stops on the first sink error: the failed block and
@@ -171,45 +283,45 @@ class BlockStore:
         appended). ``resume`` reopens the store from the last durably
         stored block: it waits for the writer to finish discarding the
         in-flight suffix, clears the latched error, and returns the next
-        block number expected. The supervisor resubmits the dropped suffix
-        from there and the chain continues gap-free — instead of relying
-        on ``verify_chain`` to flag the hole after the fact. Safe to call
-        with no failure latched (it is then just "where do I resume
-        from"). The error is NOT surfaced: resuming is the handled-error
-        path.
+        block number expected on ``channel``. The supervisor resubmits the
+        dropped suffix from there and the chain continues gap-free —
+        instead of relying on ``verify_chain`` to flag the hole after the
+        fact. Safe to call with no failure latched (it is then just "where
+        do I resume from"). The error is NOT surfaced: resuming is the
+        handled-error path.
         """
         self._q.join()
         self._err = None
-        last = self.chain[-1].block_no if self.chain else self.base_block_no
+        ch = self._chan(channel)
+        last = ch[-1].block_no if ch else self.base_block_nos[channel]
         return last + 1
 
     # --- Compaction (snapshot-covered prefix) ----------------------------
 
-    def prune_upto(self, block_no: int) -> int:
-        """Drop blocks <= ``block_no`` (covered by a snapshot) from memory
-        and from the spill directory. Returns the number dropped. Call only
-        with the writer drained."""
-        import os
-
-        dropped = [sb for sb in self.chain if sb.block_no <= block_no]
+    def prune_upto(self, block_no: int, channel: int = 0) -> int:
+        """Drop ``channel``'s blocks <= ``block_no`` (covered by a
+        snapshot) from memory and from the spill directory. Returns the
+        number dropped. Call only with the writer drained."""
+        ch = self._chan(channel)
+        dropped = [sb for sb in ch if sb.block_no <= block_no]
         if dropped:
-            self.chain = [sb for sb in self.chain if sb.block_no > block_no]
-            self.base_block_no = dropped[-1].block_no
-            self.base_hash = dropped[-1].block_hash
+            self.chains[channel] = [
+                sb for sb in ch if sb.block_no > block_no
+            ]
+            self.base_block_nos[channel] = dropped[-1].block_no
+            self.base_hashes[channel] = dropped[-1].block_hash
             if self._spill_dir is not None:
                 for sb in dropped:
-                    path = os.path.join(
-                        self._spill_dir, f"block_{sb.block_no:08d}.npz"
-                    )
+                    path = self._spill_path(channel, sb.block_no)
                     if os.path.exists(path):
                         os.remove(path)
         return len(dropped)
 
     # --- Durability guarantees -------------------------------------------
 
-    def verify_chain(self) -> bool:
-        prev = self.base_hash
-        for sb in self.chain:
+    def verify_chain(self, channel: int = 0) -> bool:
+        prev = self.base_hashes.get(channel, np.zeros(2, np.uint32))
+        for sb in self.chains.get(channel, ()):
             if not np.array_equal(sb.prev_hash, prev):
                 return False
             digest = block_body_digest(
@@ -227,8 +339,10 @@ class BlockStore:
         self, dims: types.FabricDims, n_buckets: int, slots: int,
         start_state: world_state.HashState | None = None,
         resize_at: dict[int, int] | None = None,
+        channel: int = 0,
     ) -> world_state.HashState:
-        """Rebuild world state from the chain (crash recovery for P-I).
+        """Rebuild ``channel``'s world state from its chain (crash
+        recovery for P-I).
 
         ``start_state``: when the prefix was pruned, replay resumes from the
         covering snapshot's state instead of genesis. ``resize_at`` maps a
@@ -252,7 +366,7 @@ class BlockStore:
                 st = world_state.resize(st, nb).state
             return st
 
-        for sb in self.chain:
+        for sb in self.chains.get(channel, ()):
             st = cross(st, sb.block_no - 1)
             dec = unmarshal.unmarshal(jnp.asarray(sb.wire), dims)
             st = world_state.commit_vectorized(

@@ -1,9 +1,10 @@
 """Distributed FastFabric step over the production mesh (shard_map).
 
-Topology mapping (DESIGN.md §2/§5): one *channel* per ``data`` rank (the
-paper's future-work "separate ordering and fast peer per channel"), and the
-``model`` axis inside a channel is the orderer-replica/validation-worker
-cluster. Per step and channel:
+Topology mapping (DESIGN.md §2/§5): N independent *channels* sharded over
+the ``data`` axis (the paper's future-work "separate ordering and fast
+peer per channel" — each data rank holds C/data_size local channels,
+vmapped inside the body), and the ``model`` axis inside a channel is the
+orderer-replica/validation-worker cluster. Per step and channel:
 
   1. ingest      — each model rank holds B_loc client proposals (payloads
                    stay put for the whole step: the O-I invariant);
@@ -99,14 +100,19 @@ def create_mesh_state(n_channels: int, dims: types.FabricDims,
     )
 
 
-def state_specs(mesh, *, shard_state: bool = False) -> FabricMeshState:
+def state_specs(mesh, *, shard_state: bool = False,
+                channels_over_data: bool = True) -> FabricMeshState:
     """Channel dim over `data`. World-state arrays are replicated over
     `model` (replica cluster) by default; with ``shard_state`` their bucket
     dim splits over `model` instead — the high-bit bucket partition of
     launch/state_sharding. Heads stay replicated (identical on every
-    rank)."""
-    c = lambda nd: P("data", *((None,) * nd))
-    s = lambda nd: P("data", "model", *((None,) * (nd - 1)))
+    rank). With ``channels_over_data=False`` the channel dim replicates
+    over `data` instead of sharding it — the fallback for channel groups
+    whose size does not divide the data axis (every data rank computes
+    every channel of the group; correct, not work-minimal)."""
+    d = "data" if channels_over_data else None
+    c = lambda nd: P(d, *((None,) * nd))
+    s = lambda nd: P(d, "model", *((None,) * (nd - 1)))
     st = s if shard_state else c
     return FabricMeshState(
         keys=st(3), versions=st(2), values=st(3), log_head=c(1),
@@ -114,16 +120,26 @@ def state_specs(mesh, *, shard_state: bool = False) -> FabricMeshState:
     )
 
 
-def make_fabric_step(dims: types.FabricDims, cfg: "FabricStepConfig", mesh):
-    """Build the jit-able sharded step.
+def make_fabric_step(dims: types.FabricDims, cfg: "FabricStepConfig", mesh,
+                     *, channels_over_data: bool = True, channel=None):
+    """Build the jit-able sharded step for C independent channels.
 
     Inputs (global shapes), with D = ``cfg.pipeline_depth``:
-      state: FabricMeshState with C = data axis size
+      state: FabricMeshState with C channels leading
       depth 1:  wire (C, B_round, WB) u8, ids (C, B_round, 2) u32
       depth D>1: wire (C, D, B_round, WB) u8, ids (C, D, B_round, 2) u32
     where B_round is one whole channel block; each model rank ingests
     B_round/model_size per block. Returns (state, valid) with valid
     (C, B_round) at depth 1 and (C, D, B_round) at depth D.
+
+    The channel dim shards over `data` ranks when ``channels_over_data``
+    (C must be a multiple of the data axis size; each rank holds
+    C/data_size local channels) and replicates otherwise. Inside the
+    shard_map body the per-channel math is vmapped over the local channel
+    axis, so any C_loc >= 1 runs in ONE dispatch — channels share the
+    step's collectives but no state, heads, or validity bits (the
+    cross-channel isolation the multi-channel tests pin). ``channel``
+    (static id or tuple of ids) names the channel(s) in shape-cap raises.
 
     With ``cfg.shard_state`` the world-state bucket dim is partitioned over
     ``model`` (each rank holds NB/model_size buckets, the high-bit bucket
@@ -136,16 +152,15 @@ def make_fabric_step(dims: types.FabricDims, cfg: "FabricStepConfig", mesh):
     """
     msize = mesh.shape["model"]
     if cfg.pipeline_depth > 1:
-        return _make_pipelined(dims, cfg, mesh, msize)
+        return _make_pipelined(dims, cfg, mesh, msize,
+                               channels_over_data=channels_over_data,
+                               channel=channel)
     spw = unmarshal.struct_prefix_words(dims)
 
-    def step_local(keys, vers, vals, log_head, ledger_head, journal_head,
-                   block_no, overflow, wire, ids):
-        # Shapes inside shard_map: (1, NB, S, 2), ..., (1, B_loc, WB).
-        keys, vers, vals = keys[0], vers[0], vals[0]
-        log_head, ledger_head = log_head[0], ledger_head[0]
-        journal_head, bno = journal_head[0], block_no[0]
-        ovf, wire, ids = overflow[0], wire[0], ids[0]
+    def chan_body(keys, vers, vals, log_head, ledger_head, journal_head,
+                  bno, ovf, wire, ids):
+        # ONE channel's local shapes: (NB, S, 2), ..., (B_loc, WB). The
+        # shard_map body below vmaps this over the local channel axis.
         b_loc = wire.shape[0]
 
         # --- 1. local syntactic verification (P-II: validate-where-ingested)
@@ -193,7 +208,7 @@ def make_fabric_step(dims: types.FabricDims, cfg: "FabricStepConfig", mesh):
         # and bit m names the hot shard the resize policy should split.
         st2, valid, blk_ovf = stages.stage_mvcc_commit(
             st, txb, ok_ord, cur, cfg,
-            n_buckets_global=nb_glob, n_shards=msize,
+            n_buckets_global=nb_glob, n_shards=msize, channel=channel,
         )
         ovf = ovf | blk_ovf
 
@@ -210,13 +225,20 @@ def make_fabric_step(dims: types.FabricDims, cfg: "FabricStepConfig", mesh):
             valid_ingest, rank * b_loc, b_loc
         )
         return (
-            st2.keys[None], st2.versions[None], st2.values[None],
-            log_head[None], led[None], jrn[None],
-            (bno + jnp.uint32(1))[None], ovf[None], mine[None],
+            st2.keys, st2.versions, st2.values,
+            log_head, led, jrn, bno + jnp.uint32(1), ovf, mine,
         )
 
-    cspec = state_specs(mesh, shard_state=cfg.shard_state)
-    io_spec = P("data", "model", None)
+    def step_local(*args):
+        # Channels are independent: vmap the per-channel body over the
+        # local channel axis (C_loc = C / data_size when sharded, C when
+        # replicated). Collectives inside the body batch over channels.
+        return jax.vmap(chan_body)(*args)
+
+    cspec = state_specs(mesh, shard_state=cfg.shard_state,
+                        channels_over_data=channels_over_data)
+    cd = "data" if channels_over_data else None
+    io_spec = P(cd, "model", None)
     step = _shard_map(
         step_local,
         mesh=mesh,
@@ -225,7 +247,7 @@ def make_fabric_step(dims: types.FabricDims, cfg: "FabricStepConfig", mesh):
                   cspec.block_no, cspec.overflow, io_spec, io_spec),
         out_specs=(cspec.keys, cspec.versions, cspec.values, cspec.log_head,
                    cspec.ledger_head, cspec.journal_head, cspec.block_no,
-                   cspec.overflow, P("data", "model")),
+                   cspec.overflow, P(cd, "model")),
         **_SHARD_MAP_NO_CHECK,
     )
 
@@ -243,23 +265,23 @@ def make_fabric_step(dims: types.FabricDims, cfg: "FabricStepConfig", mesh):
 
 
 def _make_pipelined(dims: types.FabricDims, cfg: "FabricStepConfig", mesh,
-                    msize: int):
+                    msize: int, *, channels_over_data: bool = True,
+                    channel=None):
     """Window variant: D blocks in flight per invocation (schedule.py)."""
     from repro.pipeline import schedule  # local: keeps layering one-way
 
     depth = cfg.pipeline_depth
-    body = schedule.make_window_body(dims, cfg, msize, depth)
+    body = schedule.make_window_body(dims, cfg, msize, depth,
+                                     channel=channel)
 
-    def step_local(keys, vers, vals, log_head, ledger_head, journal_head,
-                   block_no, overflow, wire, ids):
-        out = body(
-            keys[0], vers[0], vals[0], log_head[0], ledger_head[0],
-            journal_head[0], block_no[0], overflow[0], wire[0], ids[0],
-        )
-        return tuple(o[None] for o in out)
+    def step_local(*args):
+        # vmap the single-channel window body over the local channel axis.
+        return jax.vmap(body)(*args)
 
-    cspec = state_specs(mesh, shard_state=cfg.shard_state)
-    io_spec = P("data", None, "model", None)  # (C, D, B_round, ...)
+    cspec = state_specs(mesh, shard_state=cfg.shard_state,
+                        channels_over_data=channels_over_data)
+    cd = "data" if channels_over_data else None
+    io_spec = P(cd, None, "model", None)  # (C, D, B_round, ...)
     step = _shard_map(
         step_local,
         mesh=mesh,
@@ -268,7 +290,7 @@ def _make_pipelined(dims: types.FabricDims, cfg: "FabricStepConfig", mesh,
                   cspec.block_no, cspec.overflow, io_spec, io_spec),
         out_specs=(cspec.keys, cspec.versions, cspec.values, cspec.log_head,
                    cspec.ledger_head, cspec.journal_head, cspec.block_no,
-                   cspec.overflow, P("data", None, "model")),
+                   cspec.overflow, P(cd, None, "model")),
         **_SHARD_MAP_NO_CHECK,
     )
 
@@ -328,10 +350,11 @@ FABRIC_V12_STEP = FabricStepConfig(
 
 
 def input_specs(mesh, dims: types.FabricDims, b_loc: int = 100,
-                pipeline_depth: int = 1):
+                pipeline_depth: int = 1, n_channels: int | None = None):
     """ShapeDtypeStructs for the dry-run: one round of B_loc txs per device
-    (per block; ``pipeline_depth`` blocks per window when > 1)."""
-    c = mesh.shape["data"]
+    (per block; ``pipeline_depth`` blocks per window when > 1).
+    ``n_channels`` defaults to one channel per data rank."""
+    c = n_channels if n_channels is not None else mesh.shape["data"]
     m = mesh.shape["model"]
     b_round = b_loc * m
     wb = 4 * dims.payload_words

@@ -173,18 +173,23 @@ OVERFLOW_LANES = 2
 MAX_OVERFLOW_SHARDS = 32 * OVERFLOW_LANES
 
 
-def overflow_bits(shard_overflow: jnp.ndarray) -> jnp.ndarray:
+def overflow_bits(shard_overflow: jnp.ndarray, *,
+                  channel=None) -> jnp.ndarray:
     """Per-shard overflow vector (M,) bool -> sticky BITMASK (LANES,) u32.
 
     Bit m of lane m//32 set == shard m dropped a write on a full bucket.
     The mesh state latches these words sticky (FabricMeshState.overflow),
     so the resize policy can pick the hot shard without a second
-    collective; M <= 32 * OVERFLOW_LANES (one mesh axis of model ranks)."""
+    collective; M <= 32 * OVERFLOW_LANES (one mesh axis of model ranks).
+    ``channel`` (a channel id or tuple of ids, static) names the channel(s)
+    in the too-many-shards raise — a multi-channel mesh otherwise reports
+    the cap with no way to tell WHICH channel's state hit it."""
     m = shard_overflow.shape[0]
     if m > MAX_OVERFLOW_SHARDS:
+        where = "" if channel is None else f" (channel {channel})"
         raise ValueError(
             f"overflow bitmask supports <= {MAX_OVERFLOW_SHARDS} shards, "
-            f"got {m}"
+            f"got {m}{where}"
         )
     idx = jnp.arange(m)
     word = shard_overflow.astype(U32) << (idx % 32).astype(U32)  # (M,)
@@ -193,7 +198,8 @@ def overflow_bits(shard_overflow: jnp.ndarray) -> jnp.ndarray:
 
 
 def dropped_write_bits(keys: jnp.ndarray, dropped: jnp.ndarray,
-                       n_buckets_global: int, n_shards: int) -> jnp.ndarray:
+                       n_buckets_global: int, n_shards: int, *,
+                       channel=None) -> jnp.ndarray:
     """Overflow bitmask of a window's dropped writes, (LANES,) u32.
 
     ``keys`` (L, 2) / ``dropped`` (L,) bool are the write planner's log row
@@ -204,7 +210,7 @@ def dropped_write_bits(keys: jnp.ndarray, dropped: jnp.ndarray,
     onehot = (
         (owner[:, None] == jnp.arange(n_shards)) & dropped[:, None]
     ).any(axis=0)  # (M,)
-    return overflow_bits(onehot)
+    return overflow_bits(onehot, channel=channel)
 
 
 def bits_to_int(lanes) -> int:

@@ -8,10 +8,22 @@ pipeline — while still producing everything the storage role needs per
 block (prev/block chain hashes for ``BlockStore.verify_chain``, per-tx
 validity bits for the journal and the endorser-replica update).
 
-The engine stays the orchestrator: it orders the round, slices it into
-windows, ships each retired block to the store, and runs its usual
-durability checks against :meth:`MeshWindowCommitter.state_digest` /
-``journal_head`` instead of the per-block peer state.
+The committer now drives N independent CHANNELS (the paper's deployment
+unit — FastFabric's numbers are per channel): one ``FabricMeshState``
+carries a group of channels with a leading channel dim sharded over the
+mesh ``data`` axis, and the step vmaps the per-channel math so a whole
+group commits in ONE dispatch. Because each channel resizes on its own
+epoch schedule, channels are partitioned into *shape groups* by bucket
+count: a resize drains the mesh, splits its channel out of its group, runs
+the butterfly exchange on that channel alone, and re-merges it with any
+group already at the new layout. Groups whose size divides the data axis
+shard channels across ranks; odd-sized groups (transient, post-resize)
+replicate over ``data`` until they merge back.
+
+The engine stays the orchestrator: it orders each channel's round, slices
+it into windows, ships each retired block to the store (channel-tagged),
+and runs its usual durability checks against the per-channel
+``state_digest`` / ``journal_head``.
 """
 
 from __future__ import annotations
@@ -44,6 +56,7 @@ class ReanchorInfo(NamedTuple):
     n_shards: int
     tree_head: np.ndarray  # (2,) u32 — shard_digest_tree of the new table
     overflow_bits: int  # sticky per-shard overflow bitmask at the boundary
+    channel: int = 0  # which channel's table the epoch resized
 
 
 class WindowResult(NamedTuple):
@@ -52,6 +65,14 @@ class WindowResult(NamedTuple):
     valid: jnp.ndarray  # (D, B) bool, block order == input order
     prev_hash: np.ndarray  # (D, 2) u32 — store-chain prev per block
     block_hash: np.ndarray  # (D, 2) u32 — store-chain hash per block
+
+
+class MultiWindowResult(NamedTuple):
+    """Per-channel, per-block outputs of one multi-channel window."""
+
+    valid: jnp.ndarray  # (C, D, B) bool
+    prev_hash: np.ndarray  # (C, D, 2) u32
+    block_hash: np.ndarray  # (C, D, 2) u32
 
 
 @jax.jit
@@ -71,29 +92,83 @@ def _chain_hashes(prev_hash, block_no0, wire, valid):
     return prevs, hashes
 
 
+@jax.jit
+def _chain_hashes_multi(prev_hash, block_no0, wire, valid):
+    """Channel-batched store-chain hashes: (C, D, 2) prevs and hashes."""
+    return jax.vmap(_chain_hashes)(prev_hash, block_no0, wire, valid)
+
+
+class _ChannelGroup:
+    """Channels sharing one bucket layout, stacked in one mesh state."""
+
+    __slots__ = ("channels", "state")
+
+    def __init__(self, channels: tuple[int, ...], state: fs.FabricMeshState):
+        self.channels = channels
+        self.state = state
+
+    @property
+    def n_buckets(self) -> int:
+        return self.state.keys.shape[1]
+
+
+def _take_channels(state: fs.FabricMeshState, idx: list[int]
+                   ) -> fs.FabricMeshState:
+    """Host-side gather of a channel subset (resize boundaries only)."""
+    arrs = jax.device_get(tuple(state))
+    return fs.FabricMeshState(*(jnp.asarray(a[idx]) for a in arrs))
+
+
+def _concat_channels(states: list[fs.FabricMeshState]) -> fs.FabricMeshState:
+    arrs = [jax.device_get(tuple(s)) for s in states]
+    return fs.FabricMeshState(
+        *(jnp.asarray(np.concatenate([a[i] for a in arrs]))
+          for i in range(len(fs.FabricMeshState._fields)))
+    )
+
+
 class MeshWindowCommitter:
     """The committer role backed by the mesh fabric step, windowed.
 
-    One instance owns a ``FabricMeshState`` (C=1 channel) and feeds it
+    One instance owns ``n_channels`` independent channels (grouped by
+    bucket layout, each group one ``FabricMeshState``) and feeds them
     windows of up to ``cfg.pipeline_depth`` blocks; remainder windows at a
     round's tail compile a shallower step once and reuse it. Depth-1
     windows take the single-block oracle path, so an engine driving this
-    committer at depth 1 is byte-identical to depth D in every output.
+    committer at depth 1 is byte-identical to depth D in every output —
+    and every channel is byte-identical to a single-channel committer fed
+    the same block stream (tests/test_multichannel.py).
+
+    The single-channel surface (``commit_window``, ``state``,
+    ``journal_head``, ``overflow_bits``, ``resize(nb)``...) is unchanged
+    when ``n_channels == 1``; multi-channel callers use
+    ``commit_windows`` and the ``*_for(channel)`` accessors.
     """
 
     def __init__(self, dims: types.FabricDims, cfg: fs.FabricStepConfig,
-                 mesh=None, *, n_buckets: int = 1 << 12, slots: int = 8):
+                 mesh=None, *, n_buckets: int = 1 << 12, slots: int = 8,
+                 n_channels: int = 1):
         if mesh is None:
             mesh = jax.make_mesh((1, 1), ("data", "model"))
+        if n_channels < 1:
+            raise ValueError(f"n_channels must be >= 1, got {n_channels}")
         self.dims = dims
         self.cfg = cfg
         self.mesh = mesh
-        self.state = fs.create_mesh_state(
-            1, dims, n_buckets=n_buckets, slots=slots
-        )
-        self.prev_hash = jnp.zeros((2,), U32)
-        self._steps: dict[int, object] = {}
-        self._resizes: dict[int, object] = {}
+        self.n_channels = n_channels
+        self.slots = slots
+        self.groups: list[_ChannelGroup] = [
+            _ChannelGroup(
+                tuple(range(n_channels)),
+                fs.create_mesh_state(
+                    n_channels, dims, n_buckets=n_buckets, slots=slots
+                ),
+            )
+        ]
+        self._prev_hash: list = [jnp.zeros((2,), U32)
+                                 for _ in range(n_channels)]
+        self._steps: dict = {}
+        self._resizes: dict = {}
         self.obs = obs_mod.Obs.disabled()
         self._hlo_gauged: set[int] = set()
 
@@ -109,64 +184,153 @@ class MeshWindowCommitter:
         with it attached nothing serializes that overlapped before."""
         self.obs = obs
 
+    # -- channel bookkeeping -----------------------------------------------
+
+    def _locate(self, channel: int) -> tuple[_ChannelGroup, int]:
+        for g in self.groups:
+            if channel in g.channels:
+                return g, g.channels.index(channel)
+        raise ValueError(
+            f"channel {channel} out of range for {self.n_channels} channels"
+        )
+
+    def _channels_over_data(self, n: int) -> bool:
+        return n % self.mesh.shape["data"] == 0
+
     @property
     def depth(self) -> int:
         return max(self.cfg.pipeline_depth, 1)
 
     @property
     def n_shards(self) -> int:
-        """Bucket shards of the channel state: the mesh ``model`` size when
+        """Bucket shards of a channel state: the mesh ``model`` size when
         the state is sharded, else 1 (replicated)."""
         return self.mesh.shape["model"] if self.cfg.shard_state else 1
 
     @property
-    def n_buckets(self) -> int:
-        """CURRENT global bucket count (resize epochs change it)."""
-        return self.state.keys.shape[1]
+    def prev_hash(self):
+        """Channel 0's store-chain head (single-channel compat)."""
+        return self._prev_hash[0]
 
-    def _step_for(self, d: int):
-        if d not in self._steps:
-            cfg = dataclasses.replace(self.cfg, pipeline_depth=d)
-            self._steps[d] = jax.jit(
-                fs.make_fabric_step(self.dims, cfg, self.mesh)
+    @property
+    def state(self) -> fs.FabricMeshState:
+        """THE mesh state — defined only while every channel shares one
+        layout (always true for ``n_channels == 1``, the pre-multi-channel
+        surface)."""
+        if len(self.groups) != 1:
+            raise ValueError(
+                "channels hold different bucket layouts: use "
+                "channel_state(c) instead of .state"
             )
-        return self._steps[d]
+        return self.groups[0].state
+
+    def channel_state(self, channel: int) -> fs.FabricMeshState:
+        """ONE channel's mesh state, with a singleton channel dim — shaped
+        exactly like a single-channel committer's ``.state`` (the oracle
+        the isolation tests compare against)."""
+        g, pos = self._locate(channel)
+        return fs.FabricMeshState(
+            *(a[pos:pos + 1] for a in g.state)
+        )
+
+    @property
+    def n_buckets(self) -> int:
+        """CURRENT global bucket count of channel 0 (resize epochs move
+        it); per-channel layouts via :meth:`n_buckets_for`."""
+        return self.n_buckets_for(0)
+
+    def n_buckets_for(self, channel: int) -> int:
+        g, _ = self._locate(channel)
+        return g.n_buckets
+
+    # -- the window step ----------------------------------------------------
+
+    def _step_for(self, d: int, channels: tuple):
+        c_g = len(channels)
+        over = self._channels_over_data(c_g)
+        # ``channel`` only names the group's channels in shape-cap raises
+        # (e.g. >64 model ranks) — it never enters the traced math, so the
+        # cache stays keyed by shape alone and ignores channel identity.
+        key = (d, c_g, over)
+        if key not in self._steps:
+            cfg = dataclasses.replace(self.cfg, pipeline_depth=d)
+            chan = None if self.n_channels == 1 else channels
+            self._steps[key] = jax.jit(fs.make_fabric_step(
+                self.dims, cfg, self.mesh, channels_over_data=over,
+                channel=chan,
+            ))
+        return self._steps[key]
 
     def commit_window(self, wire: jnp.ndarray, tx_ids: jnp.ndarray
                       ) -> WindowResult:
-        """Commit ``wire`` (D, B, WB) / ``tx_ids`` (D, B, 2), D <= depth."""
-        d = wire.shape[0]
+        """Commit ``wire`` (D, B, WB) / ``tx_ids`` (D, B, 2), D <= depth.
+        Single-channel surface: requires ``n_channels == 1``."""
+        if self.n_channels != 1:
+            raise ValueError(
+                "commit_window drives one channel: use commit_windows "
+                f"for {self.n_channels} channels"
+            )
+        res = self.commit_windows(wire[None], tx_ids[None])
+        return WindowResult(
+            valid=res.valid[0], prev_hash=res.prev_hash[0],
+            block_hash=res.block_hash[0],
+        )
+
+    def commit_windows(self, wires: jnp.ndarray, tx_ids: jnp.ndarray
+                       ) -> MultiWindowResult:
+        """Commit one window on EVERY channel: ``wires`` (C, D, B, WB) /
+        ``tx_ids`` (C, D, B, 2), D <= depth. One mesh dispatch per shape
+        group (one total while no channel has diverged its layout)."""
+        if wires.shape[0] != self.n_channels:
+            raise ValueError(
+                f"expected {self.n_channels} channel windows, "
+                f"got {wires.shape[0]}"
+            )
+        d = wires.shape[1]
         tracer, reg = self.obs.tracer, self.obs.registry
         t0 = time.perf_counter()
-        block_no0 = self.state.block_no[0]
-        step = self._step_for(d)
+        step_by_group = [self._step_for(d, g.channels)
+                         for g in self.groups]
         if self.obs.on and d not in self._hlo_gauged:
-            self._record_hlo_gauges(step, d, wire, tx_ids)
+            self._record_hlo_gauges(step_by_group[0], self.groups[0],
+                                    d, wires, tx_ids)
+        valid_by_channel: list = [None] * self.n_channels
+        prevs_by_channel: list = [None] * self.n_channels
+        hashes_by_channel: list = [None] * self.n_channels
         with tracer.span("window.fill", depth=d):
             # Async dispatch only: the span measures host enqueue time of
-            # the whole window — the step AND the store-chain hash fold
-            # (dispatching both before any sync preserves the overlap the
-            # uninstrumented path has; a sync between them would serialize
-            # the device against the hash fold's enqueue).
-            if d == 1:
-                self.state, valid = step(self.state, wire[0][None],
-                                         tx_ids[0][None])
-                valid = valid[:, None]  # (1, 1, B)
-            else:
-                self.state, valid = step(self.state, wire[None],
-                                         tx_ids[None])
-            valid = valid[0]  # (D, B)
-            prevs_d, hashes_d = _chain_hashes(
-                self.prev_hash, block_no0, wire, valid
-            )
-            self.prev_hash = hashes_d[-1]
+            # the whole window — every group's step AND the store-chain
+            # hash folds (dispatching all before any sync preserves the
+            # overlap the uninstrumented path has).
+            for g, step in zip(self.groups, step_by_group):
+                chans = list(g.channels)
+                wire_g = wires[jnp.asarray(chans)]
+                ids_g = tx_ids[jnp.asarray(chans)]
+                bno0 = g.state.block_no  # (C_g,)
+                if d == 1:
+                    g.state, valid = step(g.state, wire_g[:, 0],
+                                          ids_g[:, 0])
+                    valid = valid[:, None]  # (C_g, 1, B)
+                else:
+                    g.state, valid = step(g.state, wire_g, ids_g)
+                prev = jnp.stack([self._prev_hash[c] for c in chans])
+                prevs, hashes = _chain_hashes_multi(
+                    prev, bno0, wire_g, valid
+                )
+                for i, c in enumerate(chans):
+                    self._prev_hash[c] = hashes[i, -1]
+                    valid_by_channel[c] = valid[i]
+                    prevs_by_channel[c] = prevs[i]
+                    hashes_by_channel[c] = hashes[i]
         with tracer.span("window.steady", depth=d,
-                         sync=lambda: self.state.ledger_head):
+                         sync=lambda: [g.state.ledger_head
+                                       for g in self.groups]):
             pass  # device executes the dispatched window inside this span
         with tracer.span("window.drain", depth=d):
             # Host transfer of the per-block chain hashes (the storage
             # role's input). This is the sync the obs-off path pays too.
-            prevs, hashes = np.asarray(prevs_d), np.asarray(hashes_d)
+            prevs = np.stack([np.asarray(p) for p in prevs_by_channel])
+            hashes = np.stack([np.asarray(h) for h in hashes_by_channel])
         # Per-block commit latency, amortized over the window (blocks
         # inside a window retire together — the fused commit is the point).
         dt = (time.perf_counter() - t0) / d
@@ -174,12 +338,17 @@ class MeshWindowCommitter:
         for _ in range(d):
             hist.record(dt)
         reg.counter("window.commits").inc()
-        reg.counter("blocks.committed").inc(d)
-        return WindowResult(
-            valid=valid, prev_hash=prevs, block_hash=hashes,
+        reg.counter("blocks.committed").inc(d * self.n_channels)
+        if self.n_channels > 1:
+            for c in range(self.n_channels):
+                reg.counter("blocks.committed", channel=c).inc(d)
+        return MultiWindowResult(
+            valid=jnp.stack(valid_by_channel), prev_hash=prevs,
+            block_hash=hashes,
         )
 
-    def _record_hlo_gauges(self, jstep, d: int, wire, tx_ids) -> None:
+    def _record_hlo_gauges(self, jstep, group, d: int, wires, tx_ids
+                           ) -> None:
         """Fold the compiled window program's cost model into gauges
         (launch/hlo_cost): collective count, wire bytes, scatter count —
         the contract numbers fig11 asserts, now visible per depth on any
@@ -187,8 +356,10 @@ class MeshWindowCommitter:
         from repro.launch import hlo_cost
 
         self._hlo_gauged.add(d)
-        args = ((self.state, wire[0][None], tx_ids[0][None]) if d == 1
-                else (self.state, wire[None], tx_ids[None]))
+        chans = jnp.asarray(list(group.channels))
+        wire_g, ids_g = wires[chans], tx_ids[chans]
+        args = ((group.state, wire_g[:, 0], ids_g[:, 0]) if d == 1
+                else (group.state, wire_g, ids_g))
         try:
             an = hlo_cost.analyze(jstep.lower(*args).compile().as_text())
         except Exception:
@@ -204,27 +375,30 @@ class MeshWindowCommitter:
 
     # -- elastic state: resize epochs --------------------------------------
 
-    def _resize_program(self, new_nb: int):
-        """Jitted halve/double of the channel state for THIS mesh. Sharded
-        configs run the butterfly neighbor exchange inside shard_map;
-        replicated configs resize every rank's copy locally."""
-        if new_nb in self._resizes:
-            return self._resizes[new_nb]
-        nb = self.n_buckets
+    def _resize_program(self, old_nb: int, new_nb: int):
+        """Jitted halve/double of ONE channel's state (C=1) for THIS mesh.
+        Sharded configs run the butterfly neighbor exchange inside
+        shard_map; replicated configs resize every rank's copy locally."""
+        key = (old_nb, new_nb)
+        if key in self._resizes:
+            return self._resizes[key]
         msize = self.mesh.shape["model"]
         if self.cfg.shard_state:
-            nb_loc, new_nb_loc = nb // msize, new_nb // msize
+            new_nb_loc = new_nb // msize
 
             def body(keys, vers, vals):
                 local = ws.HashState(keys[0], vers[0], vals[0])
                 res = state_sharding.resize_sharded(
-                    local, new_nb_loc, nb, msize
+                    local, new_nb_loc, old_nb, msize
                 )
                 bits = state_sharding.overflow_bits(res.shard_overflow)
                 return (res.state.keys[None], res.state.versions[None],
                         res.state.values[None], bits[None])
 
-            spec = fs.state_specs(self.mesh, shard_state=True)
+            # A lone channel replicates over `data` (channels_over_data
+            # False) — on a 1-rank data axis this is the old spec exactly.
+            spec = fs.state_specs(self.mesh, shard_state=True,
+                                  channels_over_data=False)
             prog = jax.jit(fs._shard_map(
                 body, mesh=self.mesh,
                 in_specs=(spec.keys, spec.versions, spec.values),
@@ -247,43 +421,77 @@ class MeshWindowCommitter:
                         res.state.values, bits)
 
             prog = jax.jit(prog_fn)
-        self._resizes[new_nb] = prog
+        self._resizes[key] = prog
         return prog
 
-    def resize(self, new_n_buckets: int) -> ReanchorInfo:
-        """Halve/double the channel's world state between windows.
+    def resize(self, new_n_buckets: int, channel: int = 0) -> ReanchorInfo:
+        """Halve/double ONE channel's world state between windows.
 
         The epoch boundary of the elastic state: drains the in-flight
         window (the window write log assumes one partition per window, so
         with ``pipeline_depth > 1`` a resize may only land here, between
-        ``commit_window`` calls), exchanges/compacts the bucket shards,
-        latches any shrink overflow sticky, and returns the
-        :class:`ReanchorInfo` the engine must commit to its journal. The
-        next window re-jits for the new shapes automatically (jit caches
-        per input shape).
+        ``commit_window(s)`` calls), splits the channel out of its shape
+        group, exchanges/compacts its bucket shards, re-merges it with any
+        group already at the new layout, latches any shrink overflow
+        sticky, and returns the :class:`ReanchorInfo` the engine must
+        commit to that channel's journal. Other channels' states, heads
+        and windows are untouched — a resize drains and re-anchors only
+        its own channel. The next window re-jits for the new group shapes
+        automatically (jit caches per input shape).
         """
-        old_nb = self.n_buckets
+        g, pos = self._locate(channel)
+        old_nb = g.n_buckets
         if new_n_buckets == old_nb:
             raise ValueError(f"resize to current size {old_nb}")
         self.block_until_ready()  # window boundary: nothing in flight
-        keys, vers, vals, bits = self._resize_program(new_n_buckets)(
-            self.state.keys, self.state.versions, self.state.values
-        )
-        self.state = self.state._replace(
+        # Split the channel out of its group (host-side; epoch-rare).
+        if len(g.channels) > 1:
+            rest = [i for i in range(len(g.channels)) if i != pos]
+            g_state = _take_channels(g.state, rest)
+            lone = _take_channels(g.state, [pos])
+            g.state = g_state
+            g.channels = tuple(c for c in g.channels if c != channel)
+        else:
+            lone = g.state
+            self.groups.remove(g)
+        keys, vers, vals, bits = self._resize_program(
+            old_nb, new_n_buckets
+        )(lone.keys, lone.versions, lone.values)
+        lone = lone._replace(
             keys=keys, versions=vers, values=vals,
-            overflow=self.state.overflow | bits,
+            overflow=lone.overflow | bits,
         )
-        self._resizes.clear()  # programs are shape-specific to old_nb
+        # Merge with an existing group at the new layout (keeps the group
+        # count — and so dispatches per window — minimal).
+        target = next(
+            (h for h in self.groups if h.n_buckets == new_n_buckets), None
+        )
+        if target is None:
+            self.groups.append(_ChannelGroup((channel,), lone))
+        else:
+            order = sorted(
+                range(len(target.channels) + 1),
+                key=lambda i: (target.channels + (channel,))[i],
+            )
+            merged = _concat_channels([target.state, lone])
+            target.state = _take_channels(merged, order)
+            target.channels = tuple(
+                sorted(target.channels + (channel,))
+            )
+        g2, pos2 = self._locate(channel)
         info = ReanchorInfo(
-            block_no=int(np.asarray(self.state.block_no[0])) - 1,
+            block_no=int(np.asarray(g2.state.block_no[pos2])) - 1,
             old_n_buckets=old_nb,
             new_n_buckets=new_n_buckets,
             n_shards=self.n_shards,
-            tree_head=self.tree_head(),
-            overflow_bits=state_sharding.bits_to_int(self.state.overflow[0]),
+            tree_head=self.tree_head(channel),
+            overflow_bits=state_sharding.bits_to_int(
+                g2.state.overflow[pos2]
+            ),
+            channel=channel,
         )
         self.obs.tracer.event(
-            "reanchor.epoch", block_no=info.block_no,
+            "reanchor.epoch", block_no=info.block_no, channel=channel,
             old_n_buckets=old_nb, new_n_buckets=new_n_buckets,
             overflow_bits=info.overflow_bits,
         )
@@ -291,60 +499,87 @@ class MeshWindowCommitter:
 
     # -- durability-check surface (engine.verify) --------------------------
 
-    def hash_state(self) -> ws.HashState:
-        """The committed world state as a single-host table (global view:
-        for sharded configs the channel's concatenated bucket shards ARE
-        the full table — the high-bit partition)."""
+    def hash_state(self, channel: int = 0) -> ws.HashState:
+        """A channel's committed world state as a single-host table
+        (global view: for sharded configs the channel's concatenated
+        bucket shards ARE the full table — the high-bit partition)."""
+        g, pos = self._locate(channel)
+        # device_get: the channel axis may be sharded over `data`, and the
+        # digest reductions downstream run eagerly — a single-host copy
+        # keeps them off the (unsupported) cross-device reduce path. These
+        # accessors are cold (verify/snapshot), not the commit loop.
         return ws.HashState(
-            keys=self.state.keys[0],
-            versions=self.state.versions[0],
-            values=self.state.values[0],
+            keys=jnp.asarray(jax.device_get(g.state.keys[pos])),
+            versions=jnp.asarray(jax.device_get(g.state.versions[pos])),
+            values=jnp.asarray(jax.device_get(g.state.values[pos])),
         )
 
-    def state_digest(self) -> np.ndarray:
-        return np.asarray(ws.state_digest(self.hash_state()))
+    def state_digest(self, channel: int = 0) -> np.ndarray:
+        return np.asarray(ws.state_digest(self.hash_state(channel)))
 
-    def tree_head(self) -> np.ndarray:
+    def tree_head(self, channel: int = 0) -> np.ndarray:
         """(2,) u32 digest-tree head over the per-shard digests — the
         layout-binding commitment re-anchor records and snapshot manifests
         carry (world_state.tree_head)."""
-        return np.asarray(ws.tree_head(self.hash_state(), self.n_shards))
+        return np.asarray(
+            ws.tree_head(self.hash_state(channel), self.n_shards)
+        )
 
     @property
     def journal_head(self) -> np.ndarray:
-        return np.asarray(self.state.journal_head[0])
+        return self.journal_head_for(0)
+
+    def journal_head_for(self, channel: int) -> np.ndarray:
+        g, pos = self._locate(channel)
+        return np.asarray(g.state.journal_head[pos])
+
+    def ledger_head_for(self, channel: int) -> np.ndarray:
+        g, pos = self._locate(channel)
+        return np.asarray(g.state.ledger_head[pos])
 
     @property
     def overflow(self) -> bool:
-        """Sticky: any commit ever dropped a write on a full bucket —
-        the channel's version accounting can no longer be trusted and
-        ``FabricEngine.verify()`` reports it unhealthy."""
-        return bool(np.asarray(self.state.overflow[0]).any())
+        """Sticky: any commit on ANY channel ever dropped a write on a
+        full bucket — that channel's version accounting can no longer be
+        trusted and ``FabricEngine.verify()`` reports it unhealthy."""
+        return any(
+            bool(np.asarray(g.state.overflow).any()) for g in self.groups
+        )
 
     @property
     def overflow_bits(self) -> int:
-        """Sticky per-shard bitmask as one host int (lane words folded by
-        state_sharding.bits_to_int; bit m == shard m ever filled)."""
-        return state_sharding.bits_to_int(self.state.overflow[0])
+        """Channel 0's sticky per-shard bitmask as one host int (lane
+        words folded by state_sharding.bits_to_int; bit m == shard m ever
+        filled)."""
+        return self.overflow_bits_for(0)
+
+    def overflow_bits_for(self, channel: int) -> int:
+        g, pos = self._locate(channel)
+        return state_sharding.bits_to_int(g.state.overflow[pos])
 
     @property
     def shard_overflow(self) -> np.ndarray:
-        """(M,) bool — WHICH bucket shards ever filled, decoded from the
-        sticky bitmask. The resize policy splits while this is still all
-        False (pressure-triggered) or repairs capacity once a bit sets."""
+        """(M,) bool — WHICH bucket shards of channel 0 ever filled,
+        decoded from the sticky bitmask. The resize policy splits while
+        this is still all False (pressure-triggered) or repairs capacity
+        once a bit sets."""
         bits = self.overflow_bits
         return np.array(
             [(bits >> m) & 1 for m in range(self.n_shards)], dtype=bool
         )
 
-    def hot_shard(self) -> int:
+    def hot_shard(self, channel: int = 0) -> int:
         """The shard a grow should relieve (recorded in the engine's
         re-anchor log): the first overflowed shard if any bit is set,
         else the fullest shard by occupancy (world_state.hot_shard)."""
         return ws.hot_shard(
-            self.overflow_bits,
-            ws.shard_occupancy(self.hash_state(), self.n_shards),
+            self.overflow_bits_for(channel),
+            ws.shard_occupancy(self.hash_state(channel), self.n_shards),
         )
 
+    def block_no_for(self, channel: int) -> int:
+        g, pos = self._locate(channel)
+        return int(np.asarray(g.state.block_no[pos]))
+
     def block_until_ready(self) -> None:
-        jax.block_until_ready(self.state.ledger_head)
+        jax.block_until_ready([g.state.ledger_head for g in self.groups])

@@ -68,10 +68,15 @@ class Prepared(NamedTuple):
     log_mat: jnp.ndarray  # (B,) digests or (B, W) raw rows (serial fold)
 
 
-def make_window_body(dims: types.FabricDims, cfg, msize: int, depth: int):
+def make_window_body(dims: types.FabricDims, cfg, msize: int, depth: int,
+                     *, channel=None):
     """Build the shard_map-local body for a D-block window.
 
-    Local input shapes (channel dim already peeled by the caller):
+    ``channel`` (an id or tuple of ids, static) names the channel(s) this
+    body serves in shape-cap raises (state_sharding.overflow_bits).
+
+    Local input shapes (channel dim already peeled by the caller —
+    launch/fabric_step vmaps this body over the local channel axis):
       keys (NB_loc, S, 2), versions, values, log/ledger/journal heads (2,),
       block_no () u32, overflow (LANES,) u32 (the sticky per-shard bitmask
       lanes, state_sharding.OVERFLOW_LANES), wire (D, B_loc, WB) u8,
@@ -182,7 +187,7 @@ def make_window_body(dims: types.FabricDims, cfg, msize: int, depth: int):
             # must equal the depth-1 routed commit's mask bit for bit.
             ovf = ovf | state_sharding.dropped_write_bits(
                 plan.keys, plan.dropped, nb_glob,
-                msize if cfg.shard_state else 1,
+                msize if cfg.shard_state else 1, channel=channel,
             )
             mine = jax.lax.dynamic_slice_in_dim(
                 valid[prep.inv], rank * b_loc, b_loc

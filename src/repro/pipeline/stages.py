@@ -172,7 +172,7 @@ def decode_published(words, dims: types.FabricDims, separate_metadata: bool
 
 def stage_mvcc_commit(st: ws.HashState, txb: types.TxBatch, ok_ord, cur,
                       cfg, *, n_buckets_global: int, n_shards: int,
-                      conflict=None):
+                      conflict=None, channel=None):
     """MVCC validation against ``cur`` read versions + state commit.
 
     ``cur`` (B, RK): the committed version of each read key at the time
@@ -193,11 +193,13 @@ def stage_mvcc_commit(st: ws.HashState, txb: types.TxBatch, ok_ord, cur,
             st, txb.write_keys, txb.write_vals, res.valid,
             n_buckets_global, n_shards, sequential=cfg.sequential_commit,
         )
-        bits = state_sharding.overflow_bits(cres.shard_overflow)
+        bits = state_sharding.overflow_bits(cres.shard_overflow,
+                                            channel=channel)
     else:
         cres = ws.commit(
             st, txb.write_keys, txb.write_vals, res.valid,
             sequential=cfg.sequential_commit,
         )
-        bits = state_sharding.overflow_bits(cres.overflow[None])
+        bits = state_sharding.overflow_bits(cres.overflow[None],
+                                            channel=channel)
     return cres.state, res.valid, bits

@@ -14,14 +14,23 @@ the STICKY overflow bitmask persisted in the manifest/re-anchor records
 (an overflowed peer must not come back reporting healthy).
 
 :func:`recover_shard` is the sharded peer's path: it loads ONLY the shard
-parts that feed one target bucket shard (for K grow epochs in the suffix,
-the 2^K-aligned run of pre-resize shards the butterfly exchange draws
-from — one final-shard's worth of bytes, never the full table), replays
-the suffix with write sets masked to the owned bucket range, and steps
+parts that feed one target bucket shard (never the full table), replays
+the suffix with write sets masked to the owned bucket ranges, and steps
 through each re-anchor with a local mask + compact. Because an aligned
 bucket range behaves exactly like a shard-local table (the low bucket
 bits ARE the local index), the partial replay is array-exact against the
-live shard.
+live shard. The walk is per-epoch range LISTS: a grow epoch's preimage of
+an aligned range is one aligned range (drop a key bit), but a SHRINK
+epoch folds bucket g onto g mod nb_new — the preimage of [a, a+s) is the
+two sibling ranges [a, +s) and [a + nb_new, +s), whose fragments merge at
+the boundary by concatenation (low shard part first, matching the full
+table's flat rehash order, so even a lossy shrink's slot-overflow drops
+replay byte-identically).
+
+Multi-channel engines namespace their storage per channel
+(core/ledger.channel_dir): ``recover`` takes the channel id and resolves
+``snapshot_dir`` to that channel's snapshots; the journal handed in is
+already the channel's own.
 """
 
 from __future__ import annotations
@@ -61,6 +70,7 @@ def recover(
     n_buckets: int,
     slots: int,
     value_width: int,
+    channel: int = 0,
 ) -> RecoveryResult:
     """Rebuild world state from ``snapshot`` (or the newest complete one in
     ``snapshot_dir``, or genesis) + the journal suffix after it.
@@ -71,10 +81,16 @@ def recover(
     head, or the journal does not cover the suffix (pruned past the
     snapshot). ``n_buckets`` is the GENESIS layout — re-anchor records in
     the suffix carry every later resize, so the result lands on the final
-    layout whichever base it starts from.
+    layout whichever base it starts from. ``channel`` namespaces
+    ``snapshot_dir`` (channel 0 IS the base dir); ``jrnl`` must already be
+    the channel's own journal.
     """
     if snapshot is None and snapshot_dir is not None:
-        snapshot = snapshot_mod.latest(snapshot_dir)
+        from repro.core import ledger
+
+        snapshot = snapshot_mod.latest(
+            ledger.channel_dir(snapshot_dir, channel)
+        )
 
     if snapshot is not None:
         if not snapshot_mod.verify(snapshot):
@@ -153,23 +169,36 @@ class ShardRecoveryResult(NamedTuple):
 
 
 def _range_schedule(shard: int, n_shards: int, nbs: list[int]
-                    ) -> list[tuple[int, int]]:
-    """Per-epoch (start, size) of the aligned global bucket range that
-    feeds ``shard``'s final range, walked BACKWARD from the last epoch.
+                    ) -> list[list[tuple[int, int]]]:
+    """Per-epoch aligned (start, size) global bucket ranges that feed
+    ``shard``'s final range, walked BACKWARD from the last epoch.
 
     A grow maps old bucket g to g or g + nb_old (one more key bit), so the
     preimage of an aligned range [a, a+s) under one doubling is
     [a mod nb_old, +s) — still aligned — capped at the whole older table
-    when s exceeds it. ``nbs`` is the global bucket count per epoch
-    (snapshot layout first, post-resize layouts after)."""
+    when s exceeds it. A SHRINK folds g onto g mod nb_new, so the preimage
+    of [a, a+s) is TWO sibling ranges, [a, +s) and [a + nb_new, +s) —
+    epochs therefore carry range LISTS (equal-size, aligned, disjoint,
+    ascending). ``nbs`` is the global bucket count per epoch (snapshot
+    layout first, post-resize layouts after)."""
     nb_loc_final = nbs[-1] // n_shards
-    start, size = shard * nb_loc_final, nb_loc_final
-    out = [(start, size)]
-    for nb in reversed(nbs[:-1]):
-        size = min(size, nb)
-        start = start % nb
-        start -= start % size  # keep the range aligned to its size
-        out.append((start, size))
+    ranges = [(shard * nb_loc_final, nb_loc_final)]
+    out = [ranges]
+    for k in range(len(nbs) - 2, -1, -1):
+        nb_old, nb_new = nbs[k], nbs[k + 1]
+        prev: list[tuple[int, int]] = []
+        if nb_new >= nb_old:  # grow boundary: drop a key bit
+            for a, s in ranges:
+                size = min(s, nb_old)
+                start = a % nb_old
+                start -= start % size  # keep the range aligned to its size
+                prev.append((start, size))
+        else:  # shrink boundary: the two sibling preimages
+            for a, s in ranges:
+                prev.append((a, s))
+                prev.append((a + nb_new, s))
+        ranges = sorted(set(prev))
+        out.append(ranges)
     return out[::-1]
 
 
@@ -180,11 +209,18 @@ def recover_shard(
     shard: int,
 ) -> ShardRecoveryResult:
     """Recover ONE bucket shard from per-shard snapshot files + the journal
-    suffix, across grow re-anchors, without materializing the full table.
+    suffix, across grow AND shrink re-anchors, without materializing the
+    full table.
 
-    Shrink epochs in the suffix are refused (a halve merges buckets from
-    non-adjacent shards; recover the merged table via :func:`recover` and
-    re-split) — the overflow-recovery path only ever grows.
+    Each epoch's working set is a list of aligned bucket-range fragments
+    (one after grows only; shrinks fork siblings — K shrinks in the suffix
+    mean at most 2^K fragments, still one final-shard's worth of buckets
+    each). At a shrink boundary the low and high sibling fragments
+    concatenate (ascending global order, so the fused table's flat rehash
+    order matches the full-table halve bucket for bucket — lossy shrinks
+    drop the same slots) and compact to the new range; at a grow boundary
+    each new range masks-and-compacts from the fragment covering its
+    preimage.
     """
     man = snapshot_mod.latest_manifest(snapshot_dir)
     if man is None:
@@ -203,50 +239,65 @@ def recover_shard(
         )
     reanchors = jrnl.suffix_reanchors(man.block_no)
     for r in reanchors:
-        if r.new_n_buckets < r.old_n_buckets:
-            raise RecoveryError(
-                f"re-anchor at block {r.block_no} shrinks the table: "
-                "per-shard recovery only crosses grow epochs"
-            )
         if r.n_shards != man.n_shards:
             raise RecoveryError("shard count changed across the suffix")
     m = man.n_shards
     if not 0 <= shard < m:
         raise RecoveryError(f"shard {shard} out of range for {m} shards")
 
-    # Per-epoch bucket range feeding the target shard, walked backward from
-    # the final layout; epoch 0 names the snapshot shard parts to load.
+    # Per-epoch bucket ranges feeding the target shard, walked backward
+    # from the final layout; epoch 0 names the snapshot shard parts to
+    # load.
     nbs = [man.n_buckets] + [r.new_n_buckets for r in reanchors]
     sched = _range_schedule(shard, m, nbs)
     nb_loc0 = man.n_buckets // m
-    start0, size0 = sched[0]
-    lo, cnt = start0 // nb_loc0, size0 // nb_loc0
-    parts = []
-    for s in range(lo, lo + cnt):
-        part = snapshot_mod.load_shard(snapshot_dir, man.block_no, s)
-        if not snapshot_mod.verify_shard(man, part):
-            raise RecoveryError(
-                f"snapshot shard {s} at block {man.block_no}: digest "
-                "mismatch (corrupt or tampered)"
-            )
-        parts.append(part)
-    state = ws.HashState(
-        keys=jnp.asarray(np.concatenate([p.keys for p in parts])),
-        versions=jnp.asarray(np.concatenate([p.versions for p in parts])),
-        values=jnp.asarray(np.concatenate([p.values for p in parts])),
-    )
+    loaded = 0
 
-    # The partial table covers an ALIGNED global bucket range, so the low
-    # bucket bits are its local index and it behaves as one shard of a
-    # coarser partition (nb // size groups) — ownership masks reuse
-    # shard_of, commits/resizes run the unmodified local machinery.
+    def load_range(start: int, size: int) -> ws.HashState:
+        nonlocal loaded
+        lo, cnt = start // nb_loc0, max(size // nb_loc0, 1)
+        parts = []
+        for s in range(lo, lo + cnt):
+            part = snapshot_mod.load_shard(snapshot_dir, man.block_no, s)
+            if not snapshot_mod.verify_shard(man, part):
+                raise RecoveryError(
+                    f"snapshot shard {s} at block {man.block_no}: digest "
+                    "mismatch (corrupt or tampered)"
+                )
+            parts.append(part)
+        loaded += cnt
+        st = ws.HashState(
+            keys=jnp.asarray(np.concatenate([p.keys for p in parts])),
+            versions=jnp.asarray(np.concatenate([p.versions for p in parts])),
+            values=jnp.asarray(np.concatenate([p.values for p in parts])),
+        )
+        if size < nb_loc0:
+            # A sub-part range (a shrink's sibling narrower than one
+            # snapshot part): mask to the owned range and compact down.
+            mine = ws.shard_of(
+                man.n_buckets, man.n_buckets // size, st.keys
+            ) == start // size
+            st = ws.resize(
+                st._replace(keys=jnp.where(
+                    mine[..., None], st.keys, jnp.uint32(0))),
+                size,
+            ).state
+        return st
+
+    # Fragments keyed by range start; each covers an ALIGNED global bucket
+    # range, so the low bucket bits are its local index and it behaves as
+    # one shard of a coarser partition (nb // size groups) — ownership
+    # masks reuse shard_of, commits/resizes run the unmodified local
+    # machinery.
+    frags: dict[int, ws.HashState] = {
+        a: load_range(a, s) for a, s in sched[0]
+    }
     epoch = 0
-    nb, (start, _) = nbs[0], sched[0]
     by_boundary: dict[int, list] = {}
     for k, r in enumerate(reanchors):
         by_boundary.setdefault(r.block_no, []).append((k, r))
 
-    def cross(state, epoch, boundary):
+    def cross(frags, epoch, boundary):
         for k, r in by_boundary.pop(boundary, ()):
             if r.old_n_buckets != nbs[k]:
                 raise RecoveryError(
@@ -254,33 +305,64 @@ def recover_shard(
                     f"{r.old_n_buckets} buckets, epoch has {nbs[k]}"
                 )
             new_nb = r.new_n_buckets
-            new_start, new_size = sched[k + 1]
-            mine = ws.shard_of(new_nb, new_nb // new_size, state.keys) == (
-                new_start // new_size)
-            masked = state._replace(
-                keys=jnp.where(mine[..., None], state.keys, jnp.uint32(0))
-            )
-            state = ws.resize(masked, new_size).state
+            old_size = sched[k][0][1]
+            nxt: dict[int, ws.HashState] = {}
+            for new_start, new_size in sched[k + 1]:
+                if new_nb < nbs[k]:
+                    # Shrink: fuse the sibling fragments in ascending
+                    # global-bucket order, then rehash down — flat scan
+                    # order equals the full table's, so slot drops match.
+                    low = frags[new_start]
+                    high = frags[new_start + new_nb]
+                    fused = ws.HashState(
+                        keys=jnp.concatenate([low.keys, high.keys]),
+                        versions=jnp.concatenate(
+                            [low.versions, high.versions]),
+                        values=jnp.concatenate([low.values, high.values]),
+                    )
+                    nxt[new_start] = ws.resize(fused, new_size).state
+                else:
+                    # Grow: the fragment covering the preimage donates the
+                    # new range's keys (mask to owners, compact). The
+                    # preimage IS an epoch-k range (same formula the
+                    # backward schedule walk used).
+                    pre = new_start % nbs[k]
+                    pre -= pre % old_size
+                    src = frags[pre]
+                    mine = ws.shard_of(
+                        new_nb, new_nb // new_size, src.keys
+                    ) == new_start // new_size
+                    masked = src._replace(
+                        keys=jnp.where(
+                            mine[..., None], src.keys, jnp.uint32(0))
+                    )
+                    nxt[new_start] = ws.resize(masked, new_size).state
+            frags = nxt
             epoch = k + 1
-        return state, epoch
+        return frags, epoch
 
     suffix = jrnl.suffix(man.block_no)
     for rec in suffix:
-        state, epoch = cross(state, epoch, rec.block_no - 1)
-        nb, (start, size) = nbs[epoch], sched[epoch]
+        frags, epoch = cross(frags, epoch, rec.block_no - 1)
+        nb = nbs[epoch]
+        size = sched[epoch][0][1]
         wk = jnp.asarray(rec.write_keys)
-        mine = ws.shard_of(nb, nb // size, wk) == (start // size)
-        state = ws.commit_vectorized(
-            state,
-            jnp.where(mine[..., None], wk, jnp.uint32(0)),
-            jnp.asarray(rec.write_vals),
-            jnp.asarray(rec.valid),
-        ).state
-        state, epoch = cross(state, epoch, rec.block_no)
+        wv = jnp.asarray(rec.write_vals)
+        va = jnp.asarray(rec.valid)
+        for start, _ in sched[epoch]:
+            mine = ws.shard_of(nb, nb // size, wk) == (start // size)
+            frags[start] = ws.commit_vectorized(
+                frags[start],
+                jnp.where(mine[..., None], wk, jnp.uint32(0)),
+                wv,
+                va,
+            ).state
+        frags, epoch = cross(frags, epoch, rec.block_no)
     for boundary in sorted(by_boundary):
-        state, epoch = cross(state, epoch, boundary)
+        frags, epoch = cross(frags, epoch, boundary)
 
-    # The final scheduled range IS the target shard's range by construction.
+    # The final schedule entry IS the target shard's range by construction.
+    (state,) = frags.values()
     head = suffix[-1].head if suffix else np.asarray(man.journal_head)
     return ShardRecoveryResult(
         state=state,
@@ -289,7 +371,7 @@ def recover_shard(
         block_no=suffix[-1].block_no if suffix else man.block_no,
         journal_head=np.asarray(head),
         shard_digest=np.asarray(ws.state_digest(state)),
-        loaded_parts=cnt,
+        loaded_parts=loaded,
         replayed_records=len(suffix),
         crossed_reanchors=len(reanchors),
     )

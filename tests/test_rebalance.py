@@ -523,21 +523,80 @@ def test_recover_shard_across_grow_reanchor(tmp_path):
         np.testing.assert_array_equal(res.journal_head, j.head)
 
 
-def test_recover_shard_refuses_shrink_epoch(tmp_path):
+def test_recover_shard_across_shrink_reanchor(tmp_path):
+    """Per-shard recovery across a SHRINK epoch: the post-shrink shard's
+    preimage is TWO sibling ranges of the pre-shrink table; recovery
+    loads both parts, folds them exactly like the full-table halve
+    (low fragment first — the flat rehash order), and replays the
+    suffix byte-identically, lossy drops included."""
+    m = 8
+    rng = np.random.default_rng(13)
+    j = journal_mod.StateJournal(DIMS)
+    st = ws.create(512, 8, DIMS.vw)
+
+    def block(b, st):
+        wk = jnp.asarray(
+            rng.integers(1, 1 << 30, (8, DIMS.wk, 2), dtype=np.uint32))
+        wv = jnp.asarray(
+            rng.integers(0, 1 << 30, (8, DIMS.wk, DIMS.vw),
+                         dtype=np.uint32))
+        valid = jnp.asarray(rng.random(8) < 0.8)
+        j.append_writes(b, wk, wv, valid)
+        return ws.commit_vectorized(st, wk, wv, valid).state
+
+    for b in range(2):
+        st = block(b, st)
+    snap = snapshot.take(
+        st, block_no=1, journal_head=j.head,
+        ledger_head=np.zeros(2, np.uint32), n_shards=m,
+        reanchor_head=j.reanchor_head,
+    )
+    snapshot.save(str(tmp_path), snap)
+    for b in (2, 3):
+        st = block(b, st)
+    st2 = ws.resize(st, 256).state  # SHRINK: 512 -> 256
+    sk, sv, sva = ws.split_table(st2.keys, st2.versions, st2.values, m)
+    tree = ws.shard_digest_tree(jnp.stack([
+        ws.state_digest(ws.HashState(sk[i], sv[i], sva[i]))
+        for i in range(m)
+    ]))
+    j.append_reanchor(3, old_n_buckets=512, new_n_buckets=256, n_shards=m,
+                      tree_head=np.asarray(tree))
+    st = st2
+    for b in (4, 5):
+        st = block(b, st)
+
+    sk, sv, sva = ws.split_table(st.keys, st.versions, st.values, m)
+    for shard in range(m):
+        res = recovery.recover_shard(
+            j, snapshot_dir=str(tmp_path), shard=shard)
+        assert res.loaded_parts == 2  # one shrink epoch: the 2 siblings
+        assert res.crossed_reanchors == 1 and res.block_no == 5
+        np.testing.assert_array_equal(
+            np.asarray(res.state.keys), np.asarray(sk[shard]))
+        np.testing.assert_array_equal(
+            np.asarray(res.state.versions), np.asarray(sv[shard]))
+        np.testing.assert_array_equal(
+            np.asarray(res.state.values), np.asarray(sva[shard]))
+        np.testing.assert_array_equal(res.journal_head, j.head)
+
+
+def test_recover_shard_refuses_inconsistent_reanchor_epochs(tmp_path):
+    """A re-anchor whose old_n_buckets contradicts the epoch it follows
+    (rewritten history) must be refused, not silently recovered."""
     j, _ = _journal_with_resize(seed=11)
-    # Rewrite history: make the (grow) re-anchor claim a shrink.
     snapshot.save(str(tmp_path), snapshot.take(
         ws.create(256, 8, DIMS.vw), block_no=-1,
         journal_head=journal_mod.GENESIS_HEAD,
         ledger_head=np.zeros(2, np.uint32), n_shards=4,
     ))
-    shrunk = journal_mod.StateJournal(DIMS)
-    shrunk.records = j.records
-    shrunk.reanchors = [
+    forged = journal_mod.StateJournal(DIMS)
+    forged.records = j.records
+    forged.reanchors = [
         j.reanchors[0]._replace(old_n_buckets=512, new_n_buckets=256)
     ]
     with pytest.raises(recovery.RecoveryError):
-        recovery.recover_shard(shrunk, snapshot_dir=str(tmp_path), shard=0)
+        recovery.recover_shard(forged, snapshot_dir=str(tmp_path), shard=0)
 
 
 # ------------------------------------------------- engine policy + restart
