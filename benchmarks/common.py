@@ -136,3 +136,23 @@ def metrics_cols(collected: dict, name: str = "commit.latency",
         f"{prefix}_p99_ms": 1e3 * snap["p99"],
         f"{prefix}_n": snap["count"],
     }
+
+
+def txphase_cols(collected: dict) -> dict:
+    """Per-tx lifecycle decomposition columns out of a registry snapshot:
+    p50/p95/p99 (ms) for each tx.phase.* histogram plus tx.e2e, and the
+    p99 commit bucket's most recent exemplar tx-id — a p99 row always
+    names a concrete transaction (repro.obs.txtrace's contract). Columns
+    are ``tx_``-prefixed: the plain ``commit_*`` columns are the
+    round-level commit latency, a different measurement. Empty when tx
+    tracing never ran (obs off)."""
+    out = {}
+    for p in ("queue", "order", "validate", "commit"):
+        cols = metrics_cols(collected, f"tx.phase.{p}", f"tx_{p}")
+        cols.pop(f"tx_{p}_n", None)  # every phase shares the e2e count
+        out.update(cols)
+    out.update(metrics_cols(collected, "tx.e2e", "tx_e2e"))
+    ex = (collected.get("tx.phase.commit") or {}).get("p99_exemplars")
+    if ex:
+        out["p99_exemplar_tx"] = ex[-1]["tx_id"]
+    return out

@@ -1,0 +1,91 @@
+"""Flight-recorder fault smoke: induce a durability fault, assert the dump.
+
+    PYTHONPATH=src python -m benchmarks.fault_smoke --out out/fault_dump
+
+Runs an obs-on engine with ``recorder_dir`` set, commits a few rounds,
+then tampers one journal record in the post-snapshot suffix (flips one
+word of a write set) and calls ``verify()``. The broken durability
+contract trips the flight recorder on its ``verify_contract`` fault edge,
+which auto-dumps the recorder's whole window to ``--out``:
+
+  * ``trace.jsonl`` / ``trace_chrome.json`` — the last-N span records;
+  * ``metrics.json`` — the freshest registry snapshot + the per-round
+    periodic snapshot ring;
+  * ``lifecycles.json`` — the last-N complete tx lifecycles (tx-id,
+    phase breakdown, outcome);
+  * ``meta.json`` — trip reasons (including the journal's own failure
+    reason naming WHICH record broke) + ring drop counters.
+
+Exit status is the smoke contract CI keys on: the dump must exist and
+contain at least one complete tx lifecycle, a populated metrics
+snapshot, and the ``verify_contract`` trip with a journal reason. The
+uploaded artifact is a real post-mortem a human can open.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+
+from repro.core import engine, types
+from repro.obs import SLOConfig
+
+
+def main(argv: list[str] | None = None) -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out", required=True,
+                   help="flight-recorder dump directory (the CI artifact)")
+    p.add_argument("--rounds", type=int, default=3,
+                   help="rounds before the induced fault (>= 3 so the "
+                        "tampered record lands after the snapshot)")
+    args = p.parse_args(argv)
+
+    with tempfile.TemporaryDirectory() as td:
+        eng = engine.FabricEngine(engine.EngineConfig(
+            dims=types.TEST_DIMS, obs=True,
+            snapshot_every_blocks=4, prune_chain=False,
+            snapshot_dir=os.path.join(td, "snap"),
+            journal_dir=os.path.join(td, "jrnl"),
+            recorder_dir=args.out,
+            slo=SLOConfig(commit_p95_s=60.0),
+        ))
+        bs = eng.cfg.orderer.block_size
+        for seed in range(max(args.rounds, 3)):
+            eng.run_round(eng.make_proposals(2 * bs, seed=seed))
+        eng.store.drain()
+        assert not eng.recorder.tripped, eng.recorder.trips
+
+        # Induced fault: one flipped word in a post-snapshot journal
+        # record — recovery can no longer authenticate the suffix.
+        rec = eng.journal.records[-1]
+        vals = rec.write_vals.copy()
+        vals[0, 0, 0] ^= 1
+        eng.journal.records[-1] = rec._replace(write_vals=vals)
+
+        verdict = eng.verify()
+        assert not all(verdict.values()), verdict
+        assert eng.recorder.tripped
+        eng.store.close()
+
+    # The smoke contract on the dump itself.
+    lcs = json.load(open(os.path.join(args.out, "lifecycles.json")))
+    assert len(lcs) >= 1, "dump holds no complete tx lifecycle"
+    assert all({"tx_id", "phases", "outcome", "e2e"} <= set(lc)
+               for lc in lcs), lcs[:1]
+    metrics = json.load(open(os.path.join(args.out, "metrics.json")))
+    assert metrics["latest"].get("txs.valid"), "metrics snapshot is empty"
+    assert len(metrics["periodic"]) >= 1, "no periodic registry snapshots"
+    meta = json.load(open(os.path.join(args.out, "meta.json")))
+    trip = meta["trips"][-1]
+    assert trip["reason"] == "verify_contract", meta["trips"]
+    assert "journal_reason" in trip["ctx"], trip
+    n_spans = sum(1 for _ in open(os.path.join(args.out, "trace.jsonl")))
+    print(f"fault dump OK: {args.out} — {n_spans} spans, "
+          f"{len(lcs)} lifecycles, trip={trip['reason']} "
+          f"({trip['ctx']['journal_reason']})")
+
+
+if __name__ == "__main__":
+    main()

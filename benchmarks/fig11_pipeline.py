@@ -280,6 +280,72 @@ def _obs_overhead(dims, mesh, cfg, depth: int, b_round: int,
         assert m["commit.latency"]["count"] > 0, "commit.latency is empty"
 
 
+def _txtrace_overhead(dims, mesh, cfg, depth: int, b_round: int,
+                      n_buckets: int, iters: int) -> None:
+    """Tx-lifecycle tracing cost on the ENGINE round path at the deepest
+    pipeline: the same proposal stream through two engines sharing one
+    window-committer shape — obs off (NullTxTracer: no sidecar, no
+    stamps) vs obs on (tx-id sidecar + per-block phase stamps folded into
+    the tx.phase.* histograms + outcome counters + lifecycle ring).
+    Phase timestamps ride sync edges the PR 6 spans already forced, so
+    the bar matches the obs-overhead row: the delta is host-side
+    arithmetic, not new device syncs."""
+    from repro.obs import SLOConfig
+    from repro.pipeline.engine_bridge import MeshWindowCommitter
+
+    dcfg = dataclasses.replace(cfg, pipeline_depth=depth)
+    tps = {}
+    m_on = {}
+    wc_on = None
+    for mode in ("off", "on"):
+        wc = MeshWindowCommitter(dims, dcfg, mesh, n_buckets=n_buckets)
+        eng = engine.FabricEngine(
+            engine.EngineConfig(
+                dims=dims,
+                orderer=dataclasses.replace(engine.FASTFABRIC.orderer,
+                                            block_size=b_round),
+                obs=(mode == "on"), slo=SLOConfig(commit_p95_s=60.0),
+                store_blocks=False,
+            ),
+            window_committer=wc,
+        )
+        n = depth * b_round  # one full window per round
+        for w in range(2):  # compile: fresh state, then sharded layout
+            eng.run_round(eng.make_proposals(n, seed=90 + w))
+        samples = []
+        for i in range(max(iters, 9)):
+            samples.append(eng.run_round(
+                eng.make_proposals(n, seed=i)).wall_s)
+        tps[mode] = n / float(np.median(samples))
+        if mode == "on":
+            m_on = eng.metrics()
+            wc_on = wc
+    overhead = 100.0 * (1.0 - tps["on"] / tps["off"])
+    # The fused-commit contract is keyed on every non-equivalence /d= row
+    # (tests + CI artifact assert), so this row measures it too — same
+    # counting as the depth sweep, on the committer the traced engine
+    # actually drove.
+    wire, ids = _window_inputs(dims, depth, b_round)
+    nb_local = (n_buckets // mesh.shape["model"] if dcfg.shard_state
+                else n_buckets)
+    hlo_args = ((wc_on.state, wire[0][None], ids[0][None]) if depth == 1
+                else (wc_on.state, wire[None], ids[None]))
+    _, _, commits = _hlo_counts(wc_on._step_for(depth, (0,)), *hlo_args,
+                                nb_local, 8)
+    assert commits == 1, (
+        f"txtrace-overhead/d={depth}: expected 1 fused commit scatter, "
+        f"compiled program has {commits}"
+    )
+    common.row(
+        "fig11", f"txtrace-overhead/d={depth}",
+        tps=tps["on"], tps_obs_off=tps["off"],
+        overhead_pct=overhead,
+        commit_scatters=commits,
+        txs_valid=m_on.get("tx.outcome{outcome=valid}", 0),
+        **common.txphase_cols(m_on),
+    )
+
+
 def run(depths: list[int], b_round: int, n_buckets: int, iters: int,
         ovf_buckets: int = 16, obs_dir: str | None = None) -> None:
     dims = types.TEST_DIMS
@@ -310,6 +376,10 @@ def run(depths: list[int], b_round: int, n_buckets: int, iters: int,
     # this obs-on run exports the trace/metrics artifacts.
     _obs_overhead(dims, mesh, fs.FASTFABRIC_STEP, max(depths), b_round,
                   n_buckets, iters, obs_dir=obs_dir)
+    # Tx-lifecycle tracing cost on the engine round path, same depth —
+    # the PR 8 counterpart of the span-overhead row above.
+    _txtrace_overhead(dims, mesh, fs.FASTFABRIC_STEP, max(depths), b_round,
+                      n_buckets, iters)
 
 
 def main(argv: list[str] | None = None) -> None:

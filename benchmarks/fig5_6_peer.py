@@ -33,8 +33,8 @@ CONFIGS = [
 def _blocks(seed=0):
     outs = []
     for i in range(N_BLOCKS):
-        wire, _, _ = common.make_endorsed_wire(DIMS, BS, seed=100 + i)
-        outs.append(wire)
+        wire, ids, _ = common.make_endorsed_wire(DIMS, BS, seed=100 + i)
+        outs.append((wire, np.asarray(ids)))
     return outs
 
 
@@ -68,50 +68,80 @@ def _compiled_flops(pcfg, wire) -> float:
 
 
 def run() -> None:
+    from repro.obs.metrics import Registry
+    from repro.obs.txtrace import TxTracer
+
     blocks = _blocks()
     for name, pcfg in CONFIGS:
+        # Per-config tx-lifecycle tracing: each block's txs get phase
+        # stamps on the loop's EXISTING sync edges (block_until_ready on
+        # the chain hash), so the decomposition columns ride the same
+        # measurement the latency numbers come from. No ordering service
+        # here (pre-built blocks straight into the committer), so queue/
+        # order are ~0 and validate carries the block pipeline.
+        reg = Registry()
+        tt = TxTracer(reg)
         # fresh state per config; same blocks
         state = committer.create_peer_state(DIMS, n_buckets=1 << 12)
         # warmup/compile on a copy of block 0
-        r = committer.commit_block(state, blocks[0], DIMS, pcfg)
+        r = committer.commit_block(state, blocks[0][0], DIMS, pcfg)
         jax.block_until_ready(r.block_hash)
         state = r.state
 
         # --- latency: one block, synchronous (Fig 5) ---
         lat = []
-        for b in blocks[1:8]:
+        for bno, (b, ids) in enumerate(blocks[1:8], start=1):
+            rt = tt.begin_round(0, ids, BS, bno)
+            rt.order_start()
+            rt.ordered()
             t0 = time.perf_counter()
             r = committer.commit_block(state, b, DIMS, pcfg)
             jax.block_until_ready(r.block_hash)
+            rt.validated(0, 1)
             lat.append(time.perf_counter() - t0)
             state = r.state
+            rt.committed()
+            rt.finish(None)
 
         # --- throughput: pipelined stream (Fig 6) ---
+        n_blocks = N_BLOCKS - 8
+        reg6 = Registry()
+        tt6 = TxTracer(reg6)
+        rt6 = tt6.begin_round(
+            0, np.concatenate([ids for _, ids in blocks[8:]]), BS, 8)
         depth = max(pcfg.pipeline_depth, 1)
+        rt6.order_start()
+        rt6.ordered()
         t0 = time.perf_counter()
         hashes = []
-        for b in blocks[8:]:
+        retired = 0
+        for b, _ in blocks[8:]:
             r = committer.commit_block(state, b, DIMS, pcfg)
             state = r.state
             hashes.append(r.block_hash)  # async dispatch: keep depth blocks
             if len(hashes) > depth:
                 jax.block_until_ready(hashes.pop(0))
+                rt6.validated(retired, retired + 1)
+                retired += 1
         jax.block_until_ready(hashes)
+        rt6.validated(retired, n_blocks)
         dt = time.perf_counter() - t0
-        n_blocks = N_BLOCKS - 8
+        rt6.committed()
+        rt6.finish(None)
         n = n_blocks * BS
         # Percentiles of the synchronous per-block commits, through the
         # same log2 histogram the engine registry uses (common.latency_hist).
         lat_cols = common.percentile_cols(common.latency_hist(lat))
         common.row("fig5", f"{name}", block_latency_ms=1e3 * float(
-            np.median(lat)), **lat_cols)
+            np.median(lat)), **lat_cols,
+            **common.txphase_cols(reg.collect()))
         # Pipelined blocks retire together — amortized per-block latency,
         # recorded once per block (the engine's round.commit does the same).
         tput_cols = common.percentile_cols(
             common.latency_hist([dt / n_blocks] * n_blocks))
         common.row("fig6", f"{name}", tps=n / dt,
-                   hlo_flops_per_block=_compiled_flops(pcfg, blocks[0]),
-                   **tput_cols)
+                   hlo_flops_per_block=_compiled_flops(pcfg, blocks[0][0]),
+                   **tput_cols, **common.txphase_cols(reg6.collect()))
 
 
 if __name__ == "__main__":

@@ -93,6 +93,13 @@ class TxBatch(NamedTuple):
         return self.tx_id.shape[0]
 
 
+def tx_id_hex(pair) -> str:
+    """(2,) u32 paired-hash tx-id -> the canonical 16-char hex string —
+    the identity that tx-lifecycle traces, histogram exemplars and flight-
+    recorder dumps all print (repro.obs.txtrace uses the same encoding)."""
+    return f"{int(pair[0]):08x}{int(pair[1]):08x}"
+
+
 class Block(NamedTuple):
     """A block as delivered by the ordering service: marshaled bytes only.
 

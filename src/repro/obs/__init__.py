@@ -1,9 +1,19 @@
-"""Engine-wide observability: span tracing + metrics registry.
+"""Engine-wide observability: spans, metrics, tx tracing, health.
 
 Stdlib-only (no jax/numpy at import time) so any layer of the repro —
 core, pipeline, storage, launch, serving, benchmarks — can depend on it
-without cycles. See :mod:`repro.obs.trace` and :mod:`repro.obs.metrics`
-for the design contracts (device-sync boundaries, exact histogram merge).
+without cycles. See the submodules for the design contracts:
+
+  * :mod:`repro.obs.trace`    — span tracer (device-sync boundaries,
+    bounded drop-oldest ring), shared :class:`~repro.obs.trace.Ring`.
+  * :mod:`repro.obs.metrics`  — counters/gauges/log2 histograms with
+    exact merge and per-bucket exemplar sampling.
+  * :mod:`repro.obs.txtrace`  — per-transaction lifecycle tracing
+    (queue/order/validate/commit phases, outcomes, lifecycle ring).
+  * :mod:`repro.obs.recorder` — always-on flight recorder with
+    fault-edge auto-dump.
+  * :mod:`repro.obs.health`   — rolling-window SLO rollup
+    (``healthy | degraded | critical`` verdicts).
 
 Typical wiring::
 
@@ -20,18 +30,30 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 
+from .health import (  # noqa: F401
+    CRITICAL, DEGRADED, HEALTHY, STATUS_RANK, HealthRollup, HealthVerdict,
+    SLOConfig,
+)
 from .metrics import (  # noqa: F401
     NULL_REGISTRY, Counter, Gauge, Histogram, NullRegistry, Registry,
     null_registry,
 )
+from .recorder import FlightRecorder  # noqa: F401
 from .trace import (  # noqa: F401
-    NULL_TRACER, NullTracer, Span, Tracer, null_tracer,
+    NULL_TRACER, NullTracer, Ring, Span, Tracer, null_tracer,
+)
+from .txtrace import (  # noqa: F401
+    NULL_ROUND, NULL_TXTRACER, NullTxTracer, RoundTxTrace, TxTracer,
 )
 
 __all__ = [
     "Obs", "Counter", "Gauge", "Histogram", "Registry", "NullRegistry",
-    "Span", "Tracer", "NullTracer", "NULL_REGISTRY", "NULL_TRACER",
+    "Span", "Tracer", "NullTracer", "Ring", "NULL_REGISTRY", "NULL_TRACER",
     "null_registry", "null_tracer",
+    "TxTracer", "RoundTxTrace", "NullTxTracer", "NULL_TXTRACER",
+    "NULL_ROUND", "FlightRecorder",
+    "SLOConfig", "HealthRollup", "HealthVerdict",
+    "HEALTHY", "DEGRADED", "CRITICAL", "STATUS_RANK",
 ]
 
 
@@ -43,8 +65,18 @@ class Obs:
     registry: object = field(default_factory=lambda: NULL_REGISTRY)
 
     @classmethod
-    def enabled(cls) -> "Obs":
-        return cls(tracer=Tracer(), registry=Registry())
+    def enabled(cls, max_events: int | None = None) -> "Obs":
+        """Live pair. ``max_events`` bounds the tracer (drop-oldest ring)
+        and wires its evictions to the ``trace.dropped_events`` counter
+        — long-running engines pass a bound; short benchmark runs keep
+        the default unbounded complete trace."""
+        registry = Registry()
+        tracer = Tracer(max_events=max_events)
+        if max_events is not None:
+            tracer.set_drop_counter(
+                registry.counter("trace.dropped_events")
+            )
+        return cls(tracer=tracer, registry=registry)
 
     @classmethod
     def disabled(cls) -> "Obs":

@@ -37,6 +37,7 @@ attribute lookup and a no-op call, nothing else.
 
 from __future__ import annotations
 
+import collections
 import math
 import threading
 
@@ -79,18 +80,39 @@ class Gauge:
 
 
 class Histogram:
-    """Fixed-bucket log2 histogram over ``[lo, hi)``.
+    """Fixed-bucket log2 histogram over ``[lo, hi)``, with exemplars.
 
     Bucket 0 holds values ``<= lo``; bucket ``1 + i`` holds
-    ``(lo * 2**i, lo * 2**(i+1)]``; the last bucket holds values beyond
-    ``hi`` (reported as ``inf`` by :meth:`percentile`). Defaults cover
+    ``(lo * 2**i, lo * 2**(i+1)]``; the last bucket is the OVERFLOW
+    bucket and holds values clamped past ``hi``. Defaults cover
     100ns..~1700s — the full latency range of a block commit, a snapshot
     save, or a whole benchmark round — in 35 buckets.
+
+    Pinned edge behavior (tests/test_obs.py):
+
+      * empty histogram — :meth:`percentile` returns ``nan``;
+      * rank in the overflow bucket — :meth:`percentile` returns ``inf``
+        (the value was clamped at ``hi``: widen the range if it matters);
+      * exemplars recorded for clamped values are NEVER silently filed
+        under the clamp bucket's index — they live under the explicit
+        ``"overflow"`` key in :meth:`exemplar_snapshot`, so a p99 of
+        ``inf`` still names the transactions that caused it while making
+        the clamping visible.
+
+    Exemplar sampling: ``record(v, exemplar=meta)`` retains up to
+    ``max_exemplars`` most-recent ``meta`` payloads PER BUCKET — a tail
+    bucket therefore always carries concrete recent instances (tx-ids +
+    their phase breakdown for the tx-lifecycle histograms), making a p99
+    spike attributable without replaying the workload. ``record(v, n=k)``
+    records ``k`` occurrences of one value in O(1) (the engine's
+    per-block amortized phase times weight by block size this way).
     """
 
-    __slots__ = ("lo", "n_buckets", "counts", "count", "sum", "_edges")
+    __slots__ = ("lo", "n_buckets", "counts", "count", "sum", "_edges",
+                 "max_exemplars", "_exemplars")
 
-    def __init__(self, lo: float = 1e-7, hi: float = 1e3) -> None:
+    def __init__(self, lo: float = 1e-7, hi: float = 1e3,
+                 max_exemplars: int = 4) -> None:
         if not (lo > 0 and hi > lo):
             raise ValueError(f"bad histogram range [{lo}, {hi})")
         self.lo = float(lo)
@@ -99,15 +121,28 @@ class Histogram:
         self.count = 0
         self.sum = 0.0
         self._edges = [lo * 2.0 ** i for i in range(self.n_buckets - 1)]
+        self.max_exemplars = int(max_exemplars)
+        self._exemplars: dict = {}  # bucket index | "overflow" -> deque
 
-    def record(self, value: float) -> None:
-        self.count += 1
-        self.sum += value
+    def bucket_of(self, value: float) -> int:
         if value <= self.lo:
-            self.counts[0] += 1
-        else:
-            i = int(math.ceil(math.log2(value / self.lo)))
-            self.counts[min(i, self.n_buckets - 1)] += 1
+            return 0
+        return min(int(math.ceil(math.log2(value / self.lo))),
+                   self.n_buckets - 1)
+
+    def record(self, value: float, n: int = 1, exemplar=None) -> None:
+        self.count += n
+        self.sum += value * n
+        i = self.bucket_of(value)
+        self.counts[i] += n
+        if exemplar is not None and self.max_exemplars:
+            key = "overflow" if i == self.n_buckets - 1 else i
+            dq = self._exemplars.get(key)
+            if dq is None:
+                dq = self._exemplars[key] = collections.deque(
+                    maxlen=self.max_exemplars
+                )
+            dq.append(exemplar)
 
     @property
     def edges(self) -> list[float]:
@@ -123,34 +158,69 @@ class Histogram:
         an empty histogram and ``inf`` when the rank falls in the overflow
         bucket (values past ``hi`` — widen the range if that matters).
         """
-        if self.count == 0:
+        i = self._bucket_at_rank(q)
+        if i is None:
             return float("nan")
-        rank = max(1, math.ceil(q / 100.0 * self.count))
-        acc = 0
-        for i, c in enumerate(self.counts):
-            acc += c
-            if acc >= rank:
-                return (self._edges[i] if i < len(self._edges)
-                        else float("inf"))
-        return float("inf")  # unreachable: acc ends at count
+        return self._edges[i] if i < len(self._edges) else float("inf")
 
     def merge(self, other: "Histogram") -> None:
-        """Exact pooled merge (bucket edges must match)."""
+        """Exact pooled merge (bucket edges must match). Exemplars pool
+        too, keeping each bucket's most recent ``max_exemplars``."""
         if other.lo != self.lo or other.n_buckets != self.n_buckets:
             raise ValueError("histogram ranges differ: merge is not exact")
         for i, c in enumerate(other.counts):
             self.counts[i] += c
         self.count += other.count
         self.sum += other.sum
+        for key, dq in other._exemplars.items():
+            mine = self._exemplars.get(key)
+            if mine is None:
+                mine = self._exemplars[key] = collections.deque(
+                    maxlen=self.max_exemplars
+                )
+            mine.extend(dq)
+
+    def _bucket_at_rank(self, q: float) -> int | None:
+        """Bucket index holding the nearest-rank sample for ``q``."""
+        if self.count == 0:
+            return None
+        rank = max(1, math.ceil(q / 100.0 * self.count))
+        acc = 0
+        for i, c in enumerate(self.counts):
+            acc += c
+            if acc >= rank:
+                return i
+        return self.n_buckets - 1
+
+    def exemplars_for(self, q: float) -> list:
+        """Exemplar payloads retained in the bucket holding percentile
+        ``q`` (the ``"overflow"`` bin when that bucket is the clamp
+        bucket). Empty when nothing was recorded with an exemplar."""
+        i = self._bucket_at_rank(q)
+        if i is None:
+            return []
+        key = "overflow" if i == self.n_buckets - 1 else i
+        return list(self._exemplars.get(key, ()))
+
+    def exemplar_snapshot(self) -> dict:
+        """All retained exemplars keyed by bucket index (clamped values
+        under the explicit ``"overflow"`` key)."""
+        return {k: list(v) for k, v in self._exemplars.items()}
 
     def snapshot(self) -> dict:
-        """count/sum/mean + the standard percentiles, one dict."""
+        """count/sum/mean + the standard percentiles, one dict. When any
+        exemplars were recorded, ``p99_exemplars`` carries the payloads
+        retained in the p99 bucket (the exemplar contract benchmarks
+        assert: a p99 spike names concrete tx-ids)."""
         mean = self.sum / self.count if self.count else float("nan")
-        return {
+        snap = {
             "count": self.count, "sum": self.sum, "mean": mean,
             "p50": self.percentile(50), "p95": self.percentile(95),
             "p99": self.percentile(99),
         }
+        if self._exemplars:
+            snap["p99_exemplars"] = self.exemplars_for(99)
+        return snap
 
 
 def _key(name: str, labels: dict) -> str:
@@ -201,9 +271,9 @@ class Registry:
         return self._get(name, labels, "gauge", Gauge)
 
     def histogram(self, name: str, lo: float = 1e-7, hi: float = 1e3,
-                  **labels) -> Histogram:
+                  max_exemplars: int = 4, **labels) -> Histogram:
         return self._get(name, labels, "histogram",
-                         lambda: Histogram(lo, hi))
+                         lambda: Histogram(lo, hi, max_exemplars))
 
     def collect(self) -> dict:
         """Flat snapshot: ``name{labels}`` -> value (histograms -> the
@@ -274,7 +344,7 @@ class _NullInstrument:
     def set(self, value) -> None:
         pass
 
-    def record(self, value) -> None:
+    def record(self, value, n=1, exemplar=None) -> None:
         pass
 
     def merge(self, other) -> None:
@@ -282,6 +352,12 @@ class _NullInstrument:
 
     def percentile(self, q) -> float:
         return float("nan")
+
+    def exemplars_for(self, q) -> list:
+        return []
+
+    def exemplar_snapshot(self) -> dict:
+        return {}
 
     def snapshot(self) -> dict:
         return {}
@@ -299,7 +375,7 @@ class NullRegistry:
     def gauge(self, name, **labels):
         return _NULL_INSTRUMENT
 
-    def histogram(self, name, lo=1e-7, hi=1e3, **labels):
+    def histogram(self, name, lo=1e-7, hi=1e3, max_exemplars=4, **labels):
         return _NULL_INSTRUMENT
 
     def collect(self) -> dict:

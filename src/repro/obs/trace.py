@@ -32,6 +32,13 @@ the flat event list. Export formats:
 (resize decisions, re-anchor epochs) that appear as instant events in the
 Chrome view. ``NULL_TRACER`` is the shared no-op used when obs is off.
 
+Memory is bounded on request: ``Tracer(max_events=N)`` keeps the N most
+recent records in a drop-oldest :class:`Ring` (the same ring the flight
+recorder uses) and counts evictions in :attr:`Tracer.dropped_events` —
+long soak runs stop growing the event list without losing the recent
+window that matters for a post-mortem. The default stays unbounded (short
+benchmark runs export their complete trace).
+
 Stdlib-only module: ``jax`` is imported lazily inside ``_block`` so the
 obs package itself stays dependency-free (and so does every unit test of
 the tracer).
@@ -39,11 +46,47 @@ the tracer).
 
 from __future__ import annotations
 
+import collections
 import json
 import threading
 import time
 
-__all__ = ["Span", "Tracer", "NULL_TRACER", "null_tracer"]
+__all__ = ["Ring", "Span", "Tracer", "NULL_TRACER", "null_tracer",
+           "chrome_events"]
+
+
+class Ring:
+    """Bounded drop-oldest buffer with an exact eviction counter.
+
+    The fixed-memory primitive shared by the bounded tracer and the
+    flight recorder: pushes never fail, the oldest item falls out once
+    ``capacity`` is reached, and ``dropped`` counts exactly how many
+    items the window no longer holds. ``capacity=None`` is unbounded.
+    """
+
+    __slots__ = ("capacity", "dropped", "_items")
+
+    def __init__(self, capacity: int | None = None):
+        if capacity is not None and capacity < 1:
+            raise ValueError(f"ring capacity must be >= 1, got {capacity}")
+        self.capacity = capacity
+        self.dropped = 0
+        self._items: collections.deque = collections.deque(maxlen=capacity)
+
+    def push(self, item) -> None:
+        if self.capacity is not None and len(self._items) == self.capacity:
+            self.dropped += 1
+        self._items.append(item)
+
+    def items(self) -> list:
+        return list(self._items)
+
+    def __len__(self) -> int:
+        return len(self._items)
+
+    def clear(self) -> None:
+        self._items.clear()
+        self.dropped = 0
 
 
 def _block(obj) -> None:
@@ -100,13 +143,47 @@ class Span:
 
 
 class Tracer:
-    """Collects spans and instant events; exports JSONL / Chrome JSON."""
+    """Collects spans and instant events; exports JSONL / Chrome JSON.
 
-    def __init__(self) -> None:
-        self._events: list[dict] = []
+    ``max_events`` bounds the retained records (drop-oldest);
+    ``drop_counter`` is an optional counter-like object (``.inc()``)
+    bumped once per evicted record — the ``trace.dropped_events``
+    registry counter when wired through :class:`repro.obs.Obs`. Sinks
+    registered via :meth:`add_sink` see every record as it completes
+    (the flight recorder taps the stream this way) regardless of what
+    the ring later evicts.
+    """
+
+    def __init__(self, max_events: int | None = None,
+                 drop_counter=None) -> None:
+        self._events = Ring(max_events)
+        self._drop_counter = drop_counter
+        self._sinks: list = []
         self._local = threading.local()
         self._lock = threading.Lock()
         self._epoch = time.perf_counter()
+
+    @property
+    def dropped_events(self) -> int:
+        """Records evicted by the ``max_events`` bound so far."""
+        return self._events.dropped
+
+    def add_sink(self, fn) -> None:
+        """Register ``fn(record)`` to observe every completed record."""
+        self._sinks.append(fn)
+
+    def set_drop_counter(self, counter) -> None:
+        self._drop_counter = counter
+
+    def _append(self, rec: dict) -> None:
+        with self._lock:
+            before = self._events.dropped
+            self._events.push(rec)
+            if self._events.dropped != before \
+                    and self._drop_counter is not None:
+                self._drop_counter.inc()
+        for fn in self._sinks:
+            fn(rec)
 
     def _stack(self) -> list:
         st = getattr(self._local, "stack", None)
@@ -131,8 +208,7 @@ class Tracer:
             "tid": threading.get_ident(),
             "args": args,
         }
-        with self._lock:
-            self._events.append(rec)
+        self._append(rec)
 
     def _emit(self, span: Span, t1: float) -> None:
         rec = {
@@ -144,15 +220,14 @@ class Tracer:
             "tid": threading.get_ident(),
             "args": span.args,
         }
-        with self._lock:
-            self._events.append(rec)
+        self._append(rec)
 
     # -- export ----------------------------------------------------------
 
     def records(self) -> list[dict]:
         """Completed records, ordered by start time."""
         with self._lock:
-            return sorted(self._events, key=lambda r: r["ts"])
+            return sorted(self._events.items(), key=lambda r: r["ts"])
 
     def dump_jsonl(self, path: str) -> None:
         with open(path, "w") as f:
@@ -161,24 +236,7 @@ class Tracer:
 
     def chrome_events(self) -> list[dict]:
         """Chrome trace_event list: "X" complete events (+instants)."""
-        out = []
-        for rec in self.records():
-            ev = {
-                "name": rec["name"],
-                "cat": rec["parent"] or "root",
-                "pid": 1,
-                "tid": rec["tid"],
-                "ts": rec["ts"] * 1e6,
-                "args": rec["args"],
-            }
-            if rec["dur"] > 0.0:
-                ev["ph"] = "X"
-                ev["dur"] = rec["dur"] * 1e6
-            else:
-                ev["ph"] = "i"
-                ev["s"] = "t"
-            out.append(ev)
-        return out
+        return chrome_events(self.records())
 
     def dump_chrome(self, path: str) -> None:
         with open(path, "w") as f:
@@ -189,6 +247,29 @@ class Tracer:
         with self._lock:
             self._events.clear()
         self._epoch = time.perf_counter()
+
+
+def chrome_events(records: list[dict]) -> list[dict]:
+    """Tracer-record list -> Chrome trace_event list (shared with the
+    flight recorder, whose ring holds records of the same schema)."""
+    out = []
+    for rec in records:
+        ev = {
+            "name": rec["name"],
+            "cat": rec["parent"] or "root",
+            "pid": 1,
+            "tid": rec["tid"],
+            "ts": rec["ts"] * 1e6,
+            "args": rec["args"],
+        }
+        if rec["dur"] > 0.0:
+            ev["ph"] = "X"
+            ev["dur"] = rec["dur"] * 1e6
+        else:
+            ev["ph"] = "i"
+            ev["s"] = "t"
+        out.append(ev)
+    return out
 
 
 class _NullSpan:
@@ -211,10 +292,18 @@ class NullTracer:
     """No-op tracer. span() skips even the sync (obs-off must not add
     device blocking that obs-on placed deliberately at span edges)."""
 
+    dropped_events = 0
+
     def span(self, name, sync=None, **args):
         return _NULL_SPAN
 
     def event(self, name, **args) -> None:
+        pass
+
+    def add_sink(self, fn) -> None:
+        pass
+
+    def set_drop_counter(self, counter) -> None:
         pass
 
     def records(self) -> list:

@@ -169,6 +169,7 @@ class MeshWindowCommitter:
                                  for _ in range(n_channels)]
         self._steps: dict = {}
         self._resizes: dict = {}
+        self._stats: dict = {}
         self.obs = obs_mod.Obs.disabled()
         self._hlo_gauged: set[int] = set()
 
@@ -498,6 +499,52 @@ class MeshWindowCommitter:
         return info
 
     # -- durability-check surface (engine.verify) --------------------------
+
+    def _stats_program(self, c_g: int, nb: int):
+        """Jitted per-group shard stats: vmapped occupancy + min-free
+        reductions over the group's stacked state. Output is tiny
+        ((C_g, M) ints), so the host read that follows is a few words —
+        NOT the full-table device_get ``hash_state`` pays."""
+        key = (c_g, nb)
+        if key not in self._stats:
+            m = self.n_shards
+
+            def prog(keys, vers, vals):
+                def one(k, v, va):
+                    st = ws.HashState(k, v, va)
+                    return (ws.shard_occupancy(st, m),
+                            ws.shard_min_free(st, m))
+
+                return jax.vmap(one)(keys, vers, vals)
+
+            self._stats[key] = jax.jit(prog)
+        return self._stats[key]
+
+    def shard_stats(self, channels) -> dict:
+        """channel -> (per-shard occupancy ``(M,)``, min free slots,
+        per-shard slot capacity, sticky overflow bits) in ONE stacked
+        read per shape group — the vectorized resize-policy /
+        health-rollup feed (the serial path synced the host once per
+        channel per round)."""
+        want = set(channels)
+        out = {}
+        for g in self.groups:
+            sel = [i for i, c in enumerate(g.channels) if c in want]
+            if not sel:
+                continue
+            occ, mf = self._stats_program(len(g.channels), g.n_buckets)(
+                g.state.keys, g.state.versions, g.state.values
+            )
+            occ, mf, ovf = jax.device_get((occ, mf, g.state.overflow))
+            cap = g.n_buckets // self.n_shards * self.slots
+            for i in sel:
+                out[g.channels[i]] = (
+                    np.asarray(occ[i]),
+                    int(np.asarray(mf[i]).min()),
+                    cap,
+                    state_sharding.bits_to_int(ovf[i]),
+                )
+        return out
 
     def hash_state(self, channel: int = 0) -> ws.HashState:
         """A channel's committed world state as a single-host table

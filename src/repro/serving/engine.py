@@ -34,6 +34,7 @@ from repro.core import hashing, orderer
 from repro.core import world_state as ws
 from repro.models import layers
 from repro.models.lm import LM, Batch, DecodeCache
+from repro.obs import health as health_mod
 from repro.obs.metrics import Registry
 
 U32 = jnp.uint32
@@ -291,3 +292,41 @@ class ServeEngine:
         """Prometheus text exposition of the serving metrics — the scrape
         endpoint body for an HTTP wrapper (or a log line for smoke runs)."""
         return self.registry.to_prometheus()
+
+    def health(self, *, decode_p95_s: float = 1.0,
+               max_queue_depth: int = 1024) -> health_mod.HealthVerdict:
+        """Serving-side SLO verdict (repro.obs.health statuses) — the
+        signal a backpressure front end (ROADMAP item 1) keys admission
+        on: decode p95 latency against ``decode_p95_s`` (degraded when
+        over) and admission-queue depth against ``max_queue_depth``
+        (degraded when over, critical past double — requests are piling
+        up faster than slots retire them). Mirrors the verdict onto a
+        ``serving.health`` gauge for :meth:`stats_text`."""
+        status = health_mod.HEALTHY
+        reasons: list[str] = []
+        p95 = self.registry.histogram("serving.decode.latency").percentile(95)
+        if p95 == p95 and p95 != float("inf") and p95 > decode_p95_s:
+            status = health_mod.DEGRADED
+            reasons.append(
+                f"decode p95 {p95:.3f}s over objective {decode_p95_s}s"
+            )
+        depth = len(self.queue)
+        if depth > 2 * max_queue_depth:
+            status = health_mod.CRITICAL
+            reasons.append(
+                f"queue depth {depth} past 2x limit {max_queue_depth} "
+                "(admission outrunning retirement)"
+            )
+        elif depth > max_queue_depth:
+            if status == health_mod.HEALTHY:
+                status = health_mod.DEGRADED
+            reasons.append(
+                f"queue depth {depth} over limit {max_queue_depth}"
+            )
+        self.registry.gauge("serving.health").set(
+            health_mod.STATUS_RANK[status]
+        )
+        return health_mod.HealthVerdict(
+            status=status, reasons=reasons,
+            channels={0: {"status": status, "reasons": reasons}},
+        )

@@ -331,6 +331,21 @@ class StateJournal:
         must chain from that anchor AND bind to the main head at their
         boundary block — so verification crosses resize epochs.
         """
+        ok, _ = self.verify_chain_reason(
+            base_head=base_head, after_block_no=after_block_no,
+            reanchor_base=reanchor_base,
+        )
+        return ok
+
+    def verify_chain_reason(self, *, base_head: np.ndarray | None = None,
+                            after_block_no: int | None = None,
+                            reanchor_base: np.ndarray | None = None
+                            ) -> tuple[bool, str | None]:
+        """:meth:`verify_chain` with a WHY: ``(ok, reason)`` where
+        ``reason`` names the first failing record and check (None when the
+        chain verifies). The flight recorder's ``verify_contract`` trip
+        context carries it, so a post-mortem dump says which record broke
+        the chain, not just that one did."""
         if after_block_no is None:
             after_block_no = self.base_block_no
             prev = self.base_head if base_head is None else base_head
@@ -343,9 +358,15 @@ class StateJournal:
         expect_no = after_block_no + 1
         for rec in self.suffix(after_block_no):
             if rec.block_no != expect_no:  # gap: records missing
-                return False
+                return False, (
+                    f"record gap: expected block {expect_no}, found "
+                    f"{rec.block_no}"
+                )
             if not np.array_equal(rec.prev_head, prev):
-                return False
+                return False, (
+                    f"record {rec.block_no}: prev_head does not chain "
+                    "from the preceding head"
+                )
             recomputed = np.asarray(
                 journal_head_update(
                     jnp.asarray(prev), jnp.uint32(rec.block_no),
@@ -354,7 +375,10 @@ class StateJournal:
                 )
             )
             if not np.array_equal(recomputed, rec.head):
-                return False
+                return False, (
+                    f"record {rec.block_no}: recomputed head mismatch "
+                    "(write set or validity bits tampered)"
+                )
             prev = rec.head
             head_at[rec.block_no] = rec.head
             expect_no += 1
@@ -363,20 +387,32 @@ class StateJournal:
                   else np.asarray(reanchor_base))
         for rec in self.suffix_reanchors(after_block_no):
             if rec.block_no not in head_at:  # boundary not in the suffix
-                return False
+                return False, (
+                    f"re-anchor at block {rec.block_no}: boundary not in "
+                    "the verified suffix"
+                )
             if not np.array_equal(rec.prev_head, head_at[rec.block_no]):
-                return False
+                return False, (
+                    f"re-anchor at block {rec.block_no}: does not bind "
+                    "to the main head at its boundary"
+                )
             if not np.array_equal(rec.prev_reanchor, prev_r):
-                return False
+                return False, (
+                    f"re-anchor at block {rec.block_no}: does not chain "
+                    "from the preceding re-anchor head"
+                )
             recomputed = reanchor_head_update(
                 prev_r, rec.prev_head, rec.block_no, rec.old_n_buckets,
                 rec.new_n_buckets, rec.n_shards, rec.tree_head,
                 rec.overflow_bits,
             )
             if not np.array_equal(recomputed, rec.head):
-                return False
+                return False, (
+                    f"re-anchor at block {rec.block_no}: recomputed "
+                    "re-anchor head mismatch (epoch record tampered)"
+                )
             prev_r = rec.head
-        return True
+        return True, None
 
     # --- replay / compaction ----------------------------------------------
 

@@ -396,3 +396,380 @@ def test_perf_gate_main(tmp_path):
     assert main([str(b), str(b)]) == 0
     assert main([str(b), str(c)]) == 1
     assert main([str(b), str(c), "--tps-tolerance", "0.95"]) == 0
+
+
+# ---------------------------------------------------------------------------
+# PR 8: Ring / bounded tracer / exemplars / tx tracing / recorder / health
+# ---------------------------------------------------------------------------
+
+
+def test_ring_drop_oldest():
+    from repro.obs.trace import Ring
+
+    r = Ring(3)
+    for i in range(7):
+        r.push(i)
+    assert r.items() == [4, 5, 6]  # newest kept, oldest dropped
+    assert r.dropped == 4  # evictions counted exactly, never silent
+    assert len(r) == 3
+    r.clear()
+    assert r.items() == [] and r.dropped == 0
+    unbounded = Ring(None)
+    for i in range(100):
+        unbounded.push(i)
+    assert len(unbounded) == 100 and unbounded.dropped == 0
+
+
+def test_tracer_bounded_ring_and_drop_counter():
+    from repro.obs.trace import NullTracer
+
+    tr = Tracer(max_events=3)
+    for i in range(5):
+        tr.event(f"e{i}")
+    recs = tr.records()
+    assert [r["name"] for r in recs] == ["e2", "e3", "e4"]
+    assert tr.dropped_events == 2
+    # Obs.enabled(max_events=...) wires evictions to a registry counter.
+    o = Obs.enabled(max_events=2)
+    for i in range(5):
+        o.tracer.event(f"x{i}")
+    assert o.registry.collect()["trace.dropped_events"] == 3
+    # Default enabled() keeps the unbounded complete trace (no counter).
+    o2 = Obs.enabled()
+    o2.tracer.event("y")
+    assert "trace.dropped_events" not in o2.registry.collect()
+    # NullTracer surface is unchanged: never syncs, never buffers.
+    nt = NullTracer()
+    assert nt.dropped_events == 0
+    nt.add_sink(lambda rec: (_ for _ in ()).throw(AssertionError))
+    nt.event("never")
+    assert nt.records() == []
+
+
+def test_recorder_sink_survives_tracer_eviction(tmp_path):
+    """The flight recorder taps the tracer as a sink, so its window is
+    independent of the tracer's own (possibly tighter) ring."""
+    from repro.obs.recorder import FlightRecorder
+
+    tr = Tracer(max_events=2)
+    rec = FlightRecorder(capacity=64)
+    rec.attach(tr)
+    for i in range(6):
+        tr.event(f"e{i}")
+    assert len(tr.records()) == 2  # tracer ring is tight...
+    names = [r["name"] for r in rec.spans.items()]
+    assert names == [f"e{i}" for i in range(6)]  # ...recorder kept all
+
+
+def test_histogram_exemplars_bounded_and_overflow_labeled():
+    h = Histogram(max_exemplars=2)
+    for i in range(5):
+        h.record(0.5, exemplar={"tx_id": f"t{i}"})
+    snap = h.exemplar_snapshot()
+    (bucket,) = [k for k in snap if k != "overflow"]
+    # Bounded per bucket: only the K most recent exemplars are retained.
+    assert [e["tx_id"] for e in snap[bucket]] == ["t3", "t4"]
+    # Clamp-bucket exemplars are labeled "overflow", not a bucket index.
+    h.record(1e9, exemplar={"tx_id": "huge"})
+    assert [e["tx_id"] for e in h.exemplar_snapshot()["overflow"]] == [
+        "huge"]
+    # exemplars_for(q) returns the payloads in the percentile's bucket.
+    assert [e["tx_id"] for e in h.exemplars_for(50)] == ["t3", "t4"]
+    assert "p99_exemplars" in h.snapshot()
+    assert Histogram().exemplars_for(99) == []  # empty -> no exemplars
+
+
+def test_txtrace_phase_accounting_and_outcomes():
+    """Unit-level lifecycle: queue+order+validate+commit == e2e exactly,
+    outcomes partition the round, lifecycles sample valid + invalid."""
+    from repro.obs.txtrace import TxTracer
+
+    reg = Registry()
+    tt = TxTracer(reg, lifecycle_capacity=4)
+    ids = np.arange(16, dtype=np.uint32).reshape(8, 2)
+    rt = tt.begin_round(0, ids, 4, block_no0=10)
+    rt.order_start()
+    rt.ordered()
+    rt.validated(0, 1)
+    time.sleep(0.002)
+    rt.validated(1, 2)
+    rt.committed()
+    valid = [np.array([True] * 4), np.array([True, False, True, True])]
+    rt.finish(valid)
+    m = reg.collect()
+    for p in ("queue", "order", "validate", "commit"):
+        assert m[f"tx.phase.{p}"]["count"] == 8  # weighted by block size
+    s = sum(m[f"tx.phase.{p}"]["sum"]
+            for p in ("queue", "order", "validate", "commit"))
+    assert s == pytest.approx(m["tx.e2e"]["sum"], abs=1e-12)
+    assert m["tx.outcome{outcome=valid}"] == 7
+    assert m["tx.outcome{outcome=mvcc_conflict}"] == 1
+    # Lifecycles: first tx per block + first invalid of block 1.
+    lcs = tt.lifecycles.items()
+    assert len(lcs) == 3
+    assert {lc["outcome"] for lc in lcs} == {"valid", "mvcc_conflict"}
+    assert {lc["block_no"] for lc in lcs} == {10, 11}
+    assert all(len(lc["tx_id"]) == 16 for lc in lcs)
+    # Overflow-tainted round: valid txs downgrade to overflow_dropped.
+    rt2 = tt.begin_round(0, ids, 4, block_no0=12)
+    rt2.order_start(); rt2.ordered(); rt2.committed()
+    rt2.finish([np.ones(4, bool), np.ones(4, bool)],
+               overflow_latched=True)
+    m = reg.collect()
+    assert m["tx.outcome{outcome=overflow_dropped}"] == 8
+    assert m["tx.outcome{outcome=valid}"] == 7  # unchanged
+
+
+def test_txtrace_null_is_inert():
+    from repro.obs.txtrace import NULL_TXTRACER
+
+    rt = NULL_TXTRACER.begin_round(0, None, 100, 0)
+    rt.order_start(); rt.ordered(); rt.validated(0, 4); rt.committed()
+    rt.finish(None)  # no registry, no sidecar, no stamps
+
+
+def test_engine_tx_phase_decomposition():
+    """Engine-level acceptance: per-tx phase histograms sum to e2e, the
+    outcome counters match RoundStats, and the p99 commit bucket carries
+    a concrete exemplar tx-id."""
+    from repro.core import engine as eng_mod
+    from repro.core import types
+
+    eng = eng_mod.FabricEngine(
+        eng_mod.EngineConfig(dims=types.TEST_DIMS, obs=True))
+    bs = eng.cfg.orderer.block_size
+    total = 0
+    for seed in range(2):
+        st = eng.run_round(eng.make_proposals(2 * bs, seed=seed))
+        total += st.n_txs
+    m = eng.metrics()
+    for p in ("queue", "order", "validate", "commit"):
+        assert m[f"tx.phase.{p}"]["count"] == total
+    s = sum(m[f"tx.phase.{p}"]["sum"]
+            for p in ("queue", "order", "validate", "commit"))
+    assert s == pytest.approx(m["tx.e2e"]["sum"], rel=1e-9)
+    valid = m.get("tx.outcome{outcome=valid}", 0)
+    conflicts = m.get("tx.outcome{outcome=mvcc_conflict}", 0)
+    assert valid == eng.total_valid
+    assert valid + conflicts == eng.total_txs == total
+    exemplars = m["tx.phase.commit"]["p99_exemplars"]
+    assert exemplars and all(len(e["tx_id"]) == 16 for e in exemplars)
+    assert len(eng.txtrace.lifecycles) >= 2
+    eng.store.close()
+
+
+def test_engine_obs_off_txtrace_inert():
+    """Obs-off engines take the NullTxTracer path: no sidecar transfer,
+    no lifecycle ring, empty registry — and health() still answers."""
+    from repro.core import engine as eng_mod
+    from repro.core import types
+    from repro.obs.txtrace import NullTxTracer
+
+    eng = eng_mod.FabricEngine(eng_mod.EngineConfig(dims=types.TEST_DIMS))
+    assert isinstance(eng.txtrace, NullTxTracer)
+    eng.run_round(eng.make_proposals(2 * eng.cfg.orderer.block_size))
+    assert eng.metrics() == {}
+    v = eng.health()
+    assert v.status == "healthy"
+    assert eng.metrics() == {}  # health() must not create gauges obs-off
+    eng.store.close()
+
+
+def test_recorder_auto_dump_on_verify_fault(tmp_path):
+    """Fault-edge acceptance: tamper a journal record, verify() trips the
+    flight recorder, and the auto-dump is a complete post-mortem (spans,
+    metrics snapshot, >=1 full tx lifecycle, trip reason with the
+    journal's failure reason)."""
+    from repro.core import engine as eng_mod
+    from repro.core import types
+
+    dump = tmp_path / "dump"
+    eng = eng_mod.FabricEngine(eng_mod.EngineConfig(
+        dims=types.TEST_DIMS, obs=True,
+        snapshot_every_blocks=4, prune_chain=False,
+        snapshot_dir=str(tmp_path / "snap"),
+        journal_dir=str(tmp_path / "jrnl"),
+        recorder_dir=str(dump),
+    ))
+    bs = eng.cfg.orderer.block_size
+    for seed in range(3):
+        eng.run_round(eng.make_proposals(2 * bs, seed=seed))
+    eng.store.drain()
+    assert not eng.recorder.tripped
+    # Tamper a record in the post-snapshot suffix (block 5 or 6): the
+    # recovery path must re-authenticate it and fail.
+    rec = eng.journal.records[-1]
+    vals = rec.write_vals.copy()
+    vals[0, 0, 0] ^= 1
+    eng.journal.records[-1] = rec._replace(write_vals=vals)
+    out = eng.verify()
+    assert not all(out.values())
+    assert eng.recorder.tripped
+    trip = eng.recorder.trips[-1]
+    assert trip["reason"] == "verify_contract"
+    assert "recomputed head mismatch" in trip["ctx"]["journal_reason"]
+    # The dump landed and is complete.
+    for f in ("trace.jsonl", "trace_chrome.json", "metrics.json",
+              "lifecycles.json", "meta.json"):
+        assert (dump / f).exists(), f
+    lcs = json.loads((dump / "lifecycles.json").read_text())
+    assert len(lcs) >= 1
+    assert all(
+        {"tx_id", "phases", "outcome", "e2e"} <= set(lc) for lc in lcs)
+    metrics = json.loads((dump / "metrics.json").read_text())
+    assert metrics["latest"]["txs.valid"] == eng.total_valid
+    assert len(metrics["periodic"]) >= 1  # per-round registry snapshots
+    meta = json.loads((dump / "meta.json").read_text())
+    assert meta["trips"][-1]["reason"] == "verify_contract"
+    spans = [json.loads(x)
+             for x in (dump / "trace.jsonl").read_text().splitlines()]
+    assert any(r["name"] == "round.commit" for r in spans)
+    assert any(
+        r["name"] == "flightrec.trip.verify_contract" for r in spans)
+    eng.store.close()
+
+
+def test_recorder_trips_with_obs_off(tmp_path):
+    """The recorder is ALWAYS on: an obs-off engine still records fault
+    trips (notes + trip log + dump), just without span/metric content."""
+    from repro.core import engine as eng_mod
+    from repro.core import types
+
+    dump = tmp_path / "dump"
+    eng = eng_mod.FabricEngine(eng_mod.EngineConfig(
+        dims=types.TEST_DIMS, snapshot_every_blocks=4, prune_chain=False,
+        snapshot_dir=str(tmp_path / "snap"),
+        journal_dir=str(tmp_path / "jrnl"),
+        recorder_dir=str(dump),
+    ))
+    bs = eng.cfg.orderer.block_size
+    for seed in range(3):
+        eng.run_round(eng.make_proposals(2 * bs, seed=seed))
+    eng.store.drain()
+    rec = eng.journal.records[-1]
+    vals = rec.write_vals.copy()
+    vals[0, 0, 0] ^= 1
+    eng.journal.records[-1] = rec._replace(write_vals=vals)
+    assert not all(eng.verify().values())
+    assert eng.recorder.tripped
+    meta = json.loads((dump / "meta.json").read_text())
+    assert meta["trips"][0]["reason"] == "verify_contract"
+    assert eng.metrics() == {}  # still obs-off
+    eng.store.close()
+
+
+def test_engine_exception_fault_edge():
+    from repro.core import engine as eng_mod
+    from repro.core import types
+
+    eng = eng_mod.FabricEngine(
+        eng_mod.EngineConfig(dims=types.TEST_DIMS, obs=True))
+    with pytest.raises(ValueError, match="multiple"):
+        eng.run_round(eng.make_proposals(77))  # not a block multiple
+    assert eng.recorder.tripped
+    assert eng.recorder.trips[-1]["reason"] == "exception"
+    assert "ValueError" in eng.recorder.trips[-1]["ctx"]["error"]
+    eng.store.close()
+
+
+def test_health_rollup_transitions():
+    from repro.obs import CRITICAL, DEGRADED, HEALTHY, HealthRollup
+    from repro.obs.health import SLOConfig
+
+    slo = SLOConfig(commit_p95_s=0.1, min_validity_rate=0.9,
+                    critical_validity_rate=0.5, max_occupancy=0.8,
+                    window_rounds=4)
+    hr = HealthRollup(slo, n_channels=2)
+    for c in range(2):
+        hr.push_round(c, n_txs=100, n_valid=100, wall_s=0.01, n_blocks=2)
+    assert hr.evaluate().status == HEALTHY
+    # Validity dips below the objective on channel 1 only.
+    hr.push_round(1, n_txs=100, n_valid=70, wall_s=0.01, n_blocks=2)
+    v = hr.evaluate()
+    assert v.status == DEGRADED
+    assert v.channels[0]["status"] == HEALTHY
+    assert any("validity" in r for r in v.channels[1]["reasons"])
+    # Sticky overflow: critical, with the per-shard reason.
+    hr.set_overflow(1, 0b100)
+    v = hr.evaluate()
+    assert v.status == CRITICAL
+    assert any("shard 2" in r and "overflow" in r
+               for r in v.channels[1]["reasons"])
+    hr.set_overflow(1, 0)
+    # Latency over the window p95 objective.
+    for _ in range(4):
+        hr.push_round(0, n_txs=10, n_valid=10, wall_s=1.0, n_blocks=2)
+    assert any("commit p95" in r for r in hr.evaluate().channels[0][
+        "reasons"])
+    # Occupancy headroom, per shard.
+    hr.set_occupancy(0, [0.2, 0.95])
+    assert any("shard 1" in r and "occupancy" in r
+               for r in hr.evaluate().channels[0]["reasons"])
+
+
+def test_engine_health_critical_on_overflow_healthy_when_elastic(
+        tmp_path):
+    """The fig12 scenario in miniature: a static undersized table latches
+    overflow -> health() critical with a per-shard reason; the elastic
+    twin repairs capacity and stays healthy."""
+    import dataclasses as _dc
+
+    from repro.core import engine as eng_mod
+    from repro.core import types
+    from repro.obs import SLOConfig
+
+    base_cfg = eng_mod.EngineConfig(
+        dims=types.TEST_DIMS, obs=True, n_buckets=8, slots=2,
+        slo=SLOConfig(commit_p95_s=60.0),
+    )
+    static = eng_mod.FabricEngine(base_cfg)
+    static.run_round(static.make_proposals(200, seed=0))
+    assert static.overflowed()
+    v = static.health()
+    assert v.status == "critical"
+    assert any("shard" in r and "overflow" in r for r in v.reasons)
+    assert static.metrics()["health.status"] == 2
+    assert static.recorder.tripped  # the latch is a fault edge
+    assert any(t["reason"] == "overflow_latch"
+               for t in static.recorder.trips)
+    static.store.close()
+
+    elastic = eng_mod.FabricEngine(_dc.replace(
+        base_cfg, n_buckets=1 << 10, slots=8,
+        resize_policy=eng_mod.ResizePolicy(
+            grow_free_slots=2, grow_on_overflow=True),
+    ))
+    for seed in range(3):
+        elastic.run_round(elastic.make_proposals(200, seed=seed))
+    assert not elastic.overflowed()
+    assert elastic.health().status == "healthy"
+    assert elastic.metrics()["health.status"] == 0
+    elastic.store.close()
+
+
+def test_policy_pass_vectorized_multichannel():
+    """Satellite: ONE policy pass covers every channel per round —
+    resize.policy_checks counts channels, per-channel state.health /
+    state.occupancy gauges come from the same pass, and resizes still
+    fire per channel."""
+    from repro.core import engine as eng_mod
+    from repro.core import types
+
+    eng = eng_mod.FabricEngine(eng_mod.EngineConfig(
+        dims=types.TEST_DIMS, obs=True, n_channels=2, n_buckets=1 << 10,
+        slots=8,
+        resize_policy=eng_mod.ResizePolicy(grow_fill=0.04,
+                                           max_buckets=1 << 14),
+    ))
+    bs = eng.cfg.orderer.block_size
+    for r in range(2):
+        eng.run_rounds([eng.make_proposals(2 * bs, seed=10 * r + c)
+                        for c in range(2)])
+    m = eng.metrics()
+    assert m["resize.policy_checks"] == 4  # 2 channels x 2 rounds
+    for c in range(2):
+        assert f"state.health{{channel={c}}}" in m
+        assert f"state.occupancy{{channel={c}}}" in m
+    assert m.get("resize.grow", 0) >= 1  # the trigger still fires
+    assert not eng.overflowed(0) and not eng.overflowed(1)
+    eng.store.close()

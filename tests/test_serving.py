@@ -112,3 +112,33 @@ def test_serving_metrics_and_stats_text(setup):
         parts = line.rsplit(" ", 1)
         assert len(parts) == 2 and parts[1] != "", line
         float(parts[1])  # value parses
+
+
+def test_serving_health_verdict(setup):
+    """health() rolls decode p95 + queue depth into an SLO verdict and
+    mirrors it on the serving.health gauge (same statuses as the peer
+    engine's rollup)."""
+    cfg, model, params = setup
+    rng = np.random.default_rng(7)
+    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab, 4
+                                               ).astype(np.int32),
+                    max_new=3) for i in range(3)]
+    eng = ServeEngine(model, params, slots=2, max_len=16)
+    eng.run(reqs)
+    v = eng.health(decode_p95_s=60.0)  # compile-noise-proof objective
+    assert v.status == "healthy" and v.reasons == []
+    assert eng.metrics()["serving.health"] == 0
+    # A tight latency objective degrades with the p95 in the reason.
+    v = eng.health(decode_p95_s=1e-6)
+    assert v.status == "degraded"
+    assert any("decode p95" in r for r in v.reasons)
+    assert eng.metrics()["serving.health"] == 1
+    # A flooded admission queue is critical (past 2x the depth limit).
+    eng.submit([Request(rid=100 + i,
+                        prompt=rng.integers(0, cfg.vocab, 4
+                                            ).astype(np.int32),
+                        max_new=1) for i in range(5)])
+    v = eng.health(decode_p95_s=60.0, max_queue_depth=2)
+    assert v.status == "critical"
+    assert any("queue depth" in r for r in v.reasons)
+    assert eng.metrics()["serving.health"] == 2
