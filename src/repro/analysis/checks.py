@@ -1,0 +1,344 @@
+"""Compiled-artifact checks: contract clauses over lowered programs.
+
+Every check takes the program name, its effective contract (see
+``contracts.for_program``) and the relevant artifact text, and returns a
+list of :class:`Violation` — empty means the clause holds. The gate
+composes them; tests seed one defect at a time and assert exactly the
+intended clause flips.
+
+Artifact sources per check:
+
+  * collectives / wire bytes — the COMPILED post-SPMD HLO, trip-count
+    corrected through ``launch/hlo_cost.analyze`` (a collective inside a
+    scan counts trip times; that is the per-window truth fig11 reports).
+  * table-shaped commit scatters — the PRE-optimization StableHLO
+    (CPU XLA expands scatters into loops before the final HLO, TPU
+    keeps them; StableHLO is backend-stable so the contract is too).
+  * forbidden ops / dtype widening — the compiled HLO text (what will
+    actually execute, after any jax-level dtype laundering).
+  * donation aliasing — the compiled module's ``input_output_alias``
+    table (absent entry for a donated parameter == XLA copied it).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+from repro.launch import hlo_cost
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    """One broken contract clause, named precisely enough that the gate
+    message tells the reader which program and which clause to look at
+    (and where to amend ``contracts.json`` if the change is meant)."""
+
+    program: str
+    clause: str  # e.g. "collectives.all-gather", "donation.aliasing"
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.program}: [{self.clause}] {self.message}"
+
+
+# ---------------------------------------------------------------------------
+# Collective budgets
+# ---------------------------------------------------------------------------
+
+
+def check_collectives(name: str, contract: dict, analysis: dict
+                      ) -> list[Violation]:
+    """Trip-corrected per-type instruction counts vs the budget map.
+
+    Types NOT named in the budget have budget 0 — a new collective kind
+    sneaking into a hot path is a violation until the contract names it.
+    Budgets are ceilings: a single-device lowering that elides its
+    collectives passes the same contract the 8-rank lowering is held to.
+    """
+    budget = contract.get("collectives")
+    out: list[Violation] = []
+    if budget is None:
+        return out
+    for op, stats in sorted((analysis.get("collectives") or {}).items()):
+        allowed = budget.get(op, 0)
+        count = stats["count"]
+        if count > allowed:
+            out.append(Violation(
+                name, f"collectives.{op}",
+                f"{count:g} {op} instructions (trip-corrected), budget "
+                f"{allowed} — amend contracts.json [programs.{name}."
+                f"collectives.{op}] if this regression is intentional",
+            ))
+    max_wire = contract.get("max_wire_bytes")
+    wire = analysis.get("collective_wire_bytes", 0.0)
+    if max_wire is not None and wire > max_wire:
+        out.append(Violation(
+            name, "collectives.wire_bytes",
+            f"{wire:.3e} collective wire bytes per device, budget "
+            f"{max_wire:.3e}",
+        ))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Fused window-commit scatter (table-shaped StableHLO scatters)
+# ---------------------------------------------------------------------------
+
+
+def table_scatter_passes(stablehlo: str, nb_local: int, slots: int
+                         ) -> float:
+    """Commit scatter PASSES in a lowered fabric program: scatter ops
+    whose result is a state-table plane — leading dims (nb_local, slots)
+    or (C, nb_local, slots) with the vmapped channel dim — divided by
+    the 3 planes (keys/versions/values) one fused pass writes. Counted
+    on StableHLO, not final HLO (CPU XLA loop-expands scatters there).
+
+    This was fig11's private ``_table_scatters``; it lives here now so
+    the benchmark, the gate, and CI count one way.
+    """
+    n, pos = 0, 0
+    while True:
+        i = stablehlo.find('"stablehlo.scatter"', pos)
+        if i < 0:
+            return n / 3
+        j = stablehlo.find("-> tensor<", i)
+        if j >= 0:
+            dims = stablehlo[j + 10: j + 64].split("x")
+            d = []
+            for x in dims[:4]:
+                try:
+                    d.append(int(x))
+                except ValueError:
+                    break
+            if len(d) >= 2 and d[0] == nb_local and d[1] == slots:
+                n += 1
+            elif len(d) >= 3 and d[1] == nb_local and d[2] == slots:
+                n += 1
+        pos = i + 1
+
+
+def check_commit_scatters(name: str, contract: dict, stablehlo: str,
+                          nb_local: int, slots: int) -> list[Violation]:
+    want = contract.get("commit_scatter_passes")
+    if want is None:
+        return []
+    got = table_scatter_passes(stablehlo, nb_local, slots)
+    if got != want:
+        return [Violation(
+            name, "commit_scatter_passes",
+            f"{got:g} table-shaped scatter passes in the lowered program, "
+            f"contract requires exactly {want} (the fused window commit "
+            f"pays ONE pass regardless of pipeline depth)",
+        )]
+    return []
+
+
+# ---------------------------------------------------------------------------
+# Forbidden ops: host callbacks and friends
+# ---------------------------------------------------------------------------
+
+_CUSTOM_CALL_RE = re.compile(
+    r"\bcustom-call\b.*custom_call_target=\"([^\"]+)\"")
+# Callback-shaped custom-call targets (jax pure_callback / io_callback /
+# debug prints lower to these on every backend).
+_CALLBACK_TARGET_RE = re.compile(
+    r"callback|xla_python|xla_ffi_python|py_func", re.IGNORECASE)
+_HOST_TRANSFER_RE = re.compile(r"^\s*(?:ROOT\s+)?%[\w.\-]+\s*=.*?\s"
+                               r"(infeed|outfeed)\(")
+
+
+def check_forbidden_ops(name: str, contract: dict, hlo_text: str
+                        ) -> list[Violation]:
+    """No host-callback custom-calls, infeeds or outfeeds in a hot-path
+    program: each one is a device->host->device round trip serializing
+    the step. Benign backend custom-calls (oneDNN matmul, topk, ...) are
+    NOT callbacks and pass; anything matching a callback target fails
+    unless explicitly named in ``allowed_custom_calls``."""
+    if not contract.get("forbid_host_callbacks", False):
+        return []
+    allowed = set(contract.get("allowed_custom_calls", []))
+    out: list[Violation] = []
+    seen: set[str] = set()
+    for line in hlo_text.splitlines():
+        m = _CUSTOM_CALL_RE.search(line)
+        if m:
+            target = m.group(1)
+            if target in allowed or target in seen:
+                continue
+            if _CALLBACK_TARGET_RE.search(target):
+                seen.add(target)
+                out.append(Violation(
+                    name, "forbidden_ops.host_callback",
+                    f"host-callback custom-call "
+                    f"target=\"{target}\" in the compiled program "
+                    f"(pure_callback/io_callback on the hot path)",
+                ))
+            continue
+        m = _HOST_TRANSFER_RE.match(line)
+        if m and m.group(1) not in seen:
+            seen.add(m.group(1))
+            out.append(Violation(
+                name, "forbidden_ops.host_transfer",
+                f"{m.group(1)} instruction in the compiled program",
+            ))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Dtype widening
+# ---------------------------------------------------------------------------
+
+
+def _widened_dtypes(hlo_text: str, forbidden: list[str]) -> dict[str, int]:
+    """Occurrences of forbidden dtypes as NON-SCALAR buffers. Scalar
+    s64[] bookkeeping (loop counters, callback tokens) is XLA-internal
+    and harmless; a widened ARRAY means real data-path cost (2x the
+    bytes of the u32/f32 the fabric programs are built on)."""
+    counts: dict[str, int] = {}
+    for dt in forbidden:
+        n = len(re.findall(rf"\b{re.escape(dt)}\[\d", hlo_text))
+        if n:
+            counts[dt] = n
+    return counts
+
+
+def check_dtypes(name: str, contract: dict, hlo_text: str
+                 ) -> list[Violation]:
+    forbidden = contract.get("forbidden_dtypes")
+    if not forbidden:
+        return []
+    return [
+        Violation(
+            name, f"forbidden_dtypes.{dt}",
+            f"{n} non-scalar {dt} buffer(s) in the compiled program "
+            f"(dtype widening on the hot path)",
+        )
+        for dt, n in sorted(_widened_dtypes(hlo_text, forbidden).items())
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Donation / aliasing: the silent-copy detector
+# ---------------------------------------------------------------------------
+
+_ALIAS_ENTRY_RE = re.compile(r"\{[\d,\s]*\}:\s*\((\d+)\s*,")
+
+
+def parse_aliased_params(hlo_text: str) -> set[int]:
+    """Flat parameter numbers that alias an output, parsed from the
+    compiled module header's ``input_output_alias={ {out}: (param, {..},
+    kind), ... }`` table (brace-matched: entries nest braces)."""
+    header = hlo_text.split("\n", 1)[0]
+    start = header.find("input_output_alias={")
+    if start < 0:
+        return set()
+    i = start + len("input_output_alias=")
+    depth, end = 0, i
+    for j in range(i, len(header)):
+        if header[j] == "{":
+            depth += 1
+        elif header[j] == "}":
+            depth -= 1
+            if depth == 0:
+                end = j
+                break
+    table = header[i + 1: end]
+    return {int(p) for p in _ALIAS_ENTRY_RE.findall(table)}
+
+
+def donated_param_ids(args, donate_argnums) -> list[int]:
+    """Flat parameter indices covered by the donated argnums — jit
+    flattens each argument's pytree into consecutive parameters.
+    (Assumes no argument is pruned as unused; every registered hot path
+    uses all of its inputs.)"""
+    import jax
+
+    donated: list[int] = []
+    base = 0
+    for i, a in enumerate(args):
+        n = len(jax.tree_util.tree_leaves(a))
+        if i in donate_argnums:
+            donated.extend(range(base, base + n))
+        base += n
+    return donated
+
+
+def check_donation(name: str, contract: dict, hlo_text: str,
+                   donated: list[int]) -> list[Violation]:
+    """Every donated parameter must appear in the compiled alias table;
+    one that does not was silently COPIED — the donation is a no-op and
+    the program pays a full extra table write per invocation. The
+    contract's ``min_aliased_fraction`` (default 1.0) tolerates
+    intentionally-unaliasable leaves if a program ever needs that."""
+    don = contract.get("donation")
+    if don is None:
+        return []
+    if not donated:
+        return [Violation(
+            name, "donation.missing",
+            "contract expects donated inputs but the program donates "
+            "nothing (donate_argnums dropped?)",
+        )]
+    aliased = parse_aliased_params(hlo_text)
+    hit = [p for p in donated if p in aliased]
+    frac = len(hit) / len(donated)
+    want = float(don.get("min_aliased_fraction", 1.0))
+    if frac < want:
+        missing = [p for p in donated if p not in aliased]
+        return [Violation(
+            name, "donation.aliasing",
+            f"only {len(hit)}/{len(donated)} donated parameters alias an "
+            f"output (need >= {want:.0%}); parameters {missing} were "
+            f"silently copied by XLA despite donation",
+        )]
+    return []
+
+
+# ---------------------------------------------------------------------------
+# Composition over one artifact
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Artifact:
+    """Everything the static checks need about one compiled program."""
+
+    name: str
+    hlo_text: str  # compiled (post-SPMD, scheduled) HLO
+    stablehlo_text: str  # pre-optimization lowering
+    donated: list[int]  # flat donated parameter ids
+    nb_local: int | None = None
+    slots: int | None = None
+
+    def analysis(self) -> dict:
+        return hlo_cost.analyze(self.hlo_text)
+
+
+def check_artifact(art: Artifact, contract: dict) -> tuple[dict, list[Violation]]:
+    """Run every static clause in the contract over one artifact.
+    Returns (measured summary, violations)."""
+    analysis = art.analysis()
+    measured = {
+        "collectives": {
+            op: v["count"] for op, v in (analysis["collectives"] or {}).items()
+        },
+        "collective_wire_bytes": analysis["collective_wire_bytes"],
+        "donated_params": art.donated,
+        "aliased_params": sorted(
+            p for p in art.donated
+            if p in parse_aliased_params(art.hlo_text)
+        ),
+    }
+    out = check_collectives(art.name, contract, analysis)
+    if art.nb_local is not None and art.slots is not None:
+        measured["commit_scatter_passes"] = table_scatter_passes(
+            art.stablehlo_text, art.nb_local, art.slots
+        )
+        out += check_commit_scatters(
+            art.name, contract, art.stablehlo_text, art.nb_local, art.slots
+        )
+    out += check_forbidden_ops(art.name, contract, art.hlo_text)
+    out += check_dtypes(art.name, contract, art.hlo_text)
+    out += check_donation(art.name, contract, art.hlo_text, art.donated)
+    return measured, out

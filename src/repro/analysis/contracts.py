@@ -1,0 +1,89 @@
+"""Loader for ``contracts.json`` — the committed program contracts.
+
+One file is the single source of truth for every compiled-program
+invariant: the gate (``repro.analysis.gate``), the fig11 benchmark's
+inline fused-commit assert, and the CI artifact checks all read the
+SAME budgets from here, so an intentional change (a new collective, a
+shifted budget) is amended in exactly one reviewed place.
+
+Layout (see ``contracts.json``)::
+
+    {
+      "defaults":  {... clauses applied to every program ...},
+      "programs":  {"<name>": {... per-program clauses, override ...}},
+      "retrace":   {"max_signatures": {"default": N, "<name>": M}},
+      "lint":      {"forbidden_calls": [...], "allow": ["file.py:qual*"]}
+    }
+
+Per-program clauses:
+  ``collectives``            — {type: max trip-corrected instruction
+                               count}; types NOT listed are budget 0.
+  ``max_wire_bytes``         — per-device collective wire-byte ceiling.
+  ``commit_scatter_passes``  — exact table-shaped StableHLO scatter
+                               passes (keys/versions/values = 1 pass).
+  ``forbidden_dtypes``       — dtypes that may not appear as non-scalar
+                               buffers in the compiled program.
+  ``forbid_host_callbacks``  — no callback custom-calls / infeed /
+                               outfeed in the compiled program.
+  ``donation``               — {"min_aliased_fraction": f}: fraction of
+                               donated parameters that must actually
+                               alias an output (silent-copy detector).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from functools import lru_cache
+
+CONTRACTS_PATH = os.path.join(os.path.dirname(__file__), "contracts.json")
+
+
+@lru_cache(maxsize=None)
+def _load_cached(path: str, mtime: float) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def load(path: str | None = None) -> dict:
+    p = path or CONTRACTS_PATH
+    return _load_cached(p, os.path.getmtime(p))
+
+
+def for_program(name: str, data: dict | None = None) -> dict:
+    """Effective contract for one program: defaults overlaid with the
+    program's own clauses. Unknown programs get the defaults (so a newly
+    registered hot path is checked against the baseline rules until a
+    contract is committed for it)."""
+    data = data or load()
+    merged = dict(data.get("defaults", {}))
+    merged.update(data.get("programs", {}).get(name, {}))
+    return merged
+
+
+def program_names(data: dict | None = None) -> list[str]:
+    data = data or load()
+    return sorted(data.get("programs", {}))
+
+
+def commit_scatter_passes(data: dict | None = None) -> int:
+    """The fused window-commit budget shared by every fabric_step
+    program — what fig11 and the CI artifact assert. Refuses to guess if
+    the committed contracts ever disagree across fabric_step variants."""
+    data = data or load()
+    vals = {
+        c["commit_scatter_passes"]
+        for n, c in data.get("programs", {}).items()
+        if n.startswith("fabric_step/") and "commit_scatter_passes" in c
+    }
+    if len(vals) != 1:
+        raise ValueError(
+            f"fabric_step commit_scatter_passes contracts disagree: {vals}"
+        )
+    return vals.pop()
+
+
+def retrace_budget(name: str, data: dict | None = None) -> int:
+    data = data or load()
+    rt = data.get("retrace", {}).get("max_signatures", {})
+    return int(rt.get(name, rt.get("default", 4)))

@@ -1,0 +1,111 @@
+"""AST-level source lint: host-sync calls outside phase edges.
+
+``jax.block_until_ready``, ``jax.device_get``, ``.block_until_ready()``,
+``pure_callback`` and ``io_callback`` are phase-EDGE operations: they
+belong where a window closes, a snapshot is cut, or a benchmark stops a
+clock. Inside anything the engine calls per round they serialize the
+device pipeline. The lint walks every file under ``src/repro/`` and
+flags each call site whose enclosing qualname is not covered by the
+``lint.allow`` patterns in ``contracts.json`` (fnmatch on
+``relpath:qualname``, e.g. ``obs/trace.py:*`` or
+``pipeline/engine_bridge.py:MeshWindowCommitter.resize``).
+
+This is a source-level complement to the compiled-artifact callback
+scan: the HLO check catches a callback that made it INTO a program; the
+lint catches host syncs BETWEEN programs, which never lower at all.
+"""
+
+from __future__ import annotations
+
+import ast
+import fnmatch
+import os
+
+from repro.analysis.checks import Violation
+
+# Call names that pin the device stream to the host.
+_SYNC_ATTRS = {"block_until_ready", "device_get"}
+_CALLBACK_NAMES = {"pure_callback", "io_callback"}
+
+
+def _call_name(node: ast.Call) -> str | None:
+    """The interesting tail of the called expression, or None."""
+    f = node.func
+    if isinstance(f, ast.Attribute):
+        if f.attr in _SYNC_ATTRS or f.attr in _CALLBACK_NAMES:
+            return f.attr
+        return None
+    if isinstance(f, ast.Name):
+        if f.id in _CALLBACK_NAMES or f.id in _SYNC_ATTRS:
+            return f.id
+    return None
+
+
+class _Walker(ast.NodeVisitor):
+    """Collects (lineno, call, qualname) for every flagged call."""
+
+    def __init__(self):
+        self.stack: list[str] = []
+        self.hits: list[tuple[int, str, str]] = []
+
+    def _walk_scope(self, node, name: str):
+        self.stack.append(name)
+        self.generic_visit(node)
+        self.stack.pop()
+
+    def visit_ClassDef(self, node):
+        self._walk_scope(node, node.name)
+
+    def visit_FunctionDef(self, node):
+        self._walk_scope(node, node.name)
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def visit_Call(self, node):
+        name = _call_name(node)
+        if name is not None:
+            qual = ".".join(self.stack) or "<module>"
+            self.hits.append((node.lineno, name, qual))
+        self.generic_visit(node)
+
+
+def lint_file(path: str, rel: str, allow: list[str]) -> list[Violation]:
+    with open(path) as f:
+        src = f.read()
+    try:
+        tree = ast.parse(src, filename=path)
+    except SyntaxError as e:
+        return [Violation(rel, "lint.syntax", f"unparseable source: {e}")]
+    w = _Walker()
+    w.visit(tree)
+    out: list[Violation] = []
+    for lineno, call, qual in w.hits:
+        site = f"{rel}:{qual}"
+        if any(fnmatch.fnmatch(site, pat) for pat in allow):
+            continue
+        out.append(Violation(
+            rel, f"lint.{call}",
+            f"{call} at line {lineno} in {qual} — host sync outside the "
+            f"allowlisted phase-edge sites; add '{site}' to contracts.json "
+            f"[lint.allow] only if this site really is a phase edge",
+        ))
+    return out
+
+
+def lint_tree(root: str, allow: list[str]) -> list[Violation]:
+    """Lint every ``.py`` under ``root`` (skipping __pycache__)."""
+    out: list[Violation] = []
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = sorted(d for d in dirnames if d != "__pycache__")
+        for fn in sorted(filenames):
+            if not fn.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, fn)
+            rel = os.path.relpath(path, root).replace(os.sep, "/")
+            out.extend(lint_file(path, rel, allow))
+    return out
+
+
+def default_root() -> str:
+    """``src/repro`` as installed — the package directory itself."""
+    return os.path.dirname(os.path.dirname(os.path.abspath(__file__)))

@@ -1,0 +1,102 @@
+"""Hot-path program registry: what the contract analyzer AOT-lowers.
+
+Each module that owns a jitted hot path self-registers a *builder* at
+import time (``@register("name")``). A builder takes a
+:class:`BuildContext` (mesh + small fabric dims + table sizing) and
+returns a :class:`BuiltProgram`: the jit-wrapped callable plus the
+abstract arguments to lower it with — NO workload runs, the analyzer
+compiles the program ahead of time exactly the way the engine would
+(same jit wrapper, same ``donate_argnums``) and inspects the artifact.
+
+Import direction: this module imports nothing from the hot paths; the
+hot paths import :func:`register` (cheap, jax-free at call time).
+:func:`discover` imports the owning modules so their registrations run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Callable, Optional
+
+# Modules whose import registers their hot-path programs.
+_ENTRY_MODULES = (
+    "repro.launch.fabric_step",
+    "repro.pipeline.engine_bridge",
+    "repro.serving.engine",
+)
+
+_PROGRAMS: dict[str, "Registered"] = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class BuildContext:
+    """Sizing for the analyzed programs: small enough to compile fast in
+    CI, structurally identical to production (same stages, same
+    collectives, same commit scatter)."""
+
+    mesh: object  # jax Mesh with ("data", "model") axes
+    dims: object  # types.FabricDims (TEST_DIMS by default in the gate)
+    b_loc: int = 8  # txs per model rank per block
+    n_buckets: int = 256  # global bucket count (divisible by model ranks)
+    slots: int = 8
+    n_channels: int = 1
+
+
+@dataclasses.dataclass
+class BuiltProgram:
+    """One AOT-lowerable hot-path program.
+
+    ``fn`` must expose ``.lower(*args)`` (a ``jax.jit`` wrapper);
+    ``args`` are abstract (ShapeDtypeStruct trees) or concrete arrays.
+    ``donate_argnums`` mirrors what the live call site donates — the
+    donation verifier checks the compiled alias table against it.
+    ``nb_local``/``slots`` parameterize the table-shaped scatter count
+    (None skips that check for programs without a commit scatter).
+    """
+
+    name: str
+    fn: object
+    args: tuple
+    donate_argnums: tuple = ()
+    nb_local: Optional[int] = None
+    slots: Optional[int] = None
+    meta: dict = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass(frozen=True)
+class Registered:
+    name: str
+    builder: Callable[[BuildContext], BuiltProgram]
+    description: str = ""
+
+
+def register(name: str, *, description: str = ""):
+    """Decorator: register ``builder(ctx) -> BuiltProgram`` under ``name``.
+
+    Re-registration overwrites (module reloads in tests)."""
+
+    def deco(builder):
+        _PROGRAMS[name] = Registered(name, builder, description)
+        return builder
+
+    return deco
+
+
+def discover() -> dict[str, Registered]:
+    """Import every entry module (running their registrations) and return
+    the registry, name-sorted."""
+    for mod in _ENTRY_MODULES:
+        importlib.import_module(mod)
+    return dict(sorted(_PROGRAMS.items()))
+
+
+def programs() -> dict[str, Registered]:
+    """The registry as currently populated (no imports)."""
+    return dict(sorted(_PROGRAMS.items()))
+
+
+def get(name: str) -> Registered:
+    if name not in _PROGRAMS:
+        discover()
+    return _PROGRAMS[name]

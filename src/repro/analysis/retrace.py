@@ -1,0 +1,145 @@
+"""Runtime-boundary retrace detection: the jit cache-miss auditor.
+
+A hot-path program is allowed to trace exactly once per *signature* —
+the (shape, dtype, sharding) tuple of its arguments. Legitimate new
+signatures are rare and enumerable: the first window after process
+start, the second window when the step's sharded output layout replaces
+the fresh unsharded input layout, and the first window after a resize
+epoch changes the table shape. Anything else — a cache eviction, a
+non-hashable static argument churning, a host value sneaking into the
+trace — silently re-pays full trace+compile EVERY round and shows up
+only as a vague TPS drift. The auditor makes it a hard failure:
+
+  * a trace on an ALREADY-SEEN signature  -> ``retrace.recompiled``
+  * more distinct signatures than the contract budget
+                                          -> ``retrace.signature_churn``
+
+Wiring: ``MeshWindowCommitter.attach_retrace_auditor(auditor)`` routes
+every jit the committer builds (window steps, resize exchange, stats
+pass) through :meth:`RetraceAuditor.wrap`; the gate drives a small live
+workload through it (windows + a resize + stats reads) and folds any
+violations into the report. The wrapper counts REAL traces (the python
+body runs only while jax traces), so it cannot miss a retrace or
+false-positive on a cache hit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from repro.analysis.checks import Violation
+
+
+def signature(args: tuple, kwargs: dict | None = None) -> str:
+    """Stable trace-cache key of a call: shapes + dtypes + shardings of
+    array leaves, repr of aux structure and non-array leaves. Includes
+    sharding because jit retraces when a committed layout changes (the
+    fresh-state -> mesh-sharded-output transition on window 2 is an
+    ALLOWED new signature, not a recompile of an old one)."""
+
+    def leaf(x):
+        shp = getattr(x, "shape", None)
+        if shp is None:
+            return repr(x)
+        dt = getattr(x, "dtype", "?")
+        sh = getattr(x, "sharding", None)
+        return f"{dt}{tuple(shp)}@{sh}"
+
+    leaves, treedef = jax.tree_util.tree_flatten((args, kwargs or {}))
+    return f"{treedef}|" + ";".join(leaf(x) for x in leaves)
+
+
+@dataclasses.dataclass
+class ProgramAudit:
+    """Per-program trace history."""
+
+    name: str
+    traces: int = 0  # total traces of the wrapped python body
+    calls: int = 0
+    seen: dict = dataclasses.field(default_factory=dict)  # sig -> traces
+    violations: list = dataclasses.field(default_factory=list)
+
+
+class RetraceAuditor:
+    """Wraps hot-path entry points; records and polices every trace."""
+
+    def __init__(self, max_signatures: int | dict | None = None):
+        # int: one budget for all programs; dict: per-name with
+        # "default"; None: defer to contracts.retrace_budget at check().
+        self._max_signatures = max_signatures
+        self.programs: dict[str, ProgramAudit] = {}
+
+    def _budget(self, name: str) -> int:
+        ms = self._max_signatures
+        if isinstance(ms, dict):
+            return int(ms.get(name, ms.get("default", 4)))
+        if ms is None:
+            from repro.analysis import contracts
+
+            return contracts.retrace_budget(name)
+        return int(ms)
+
+    def wrap(self, name: str, fn, **jit_kwargs):
+        """``jax.jit(fn, **jit_kwargs)`` with trace accounting. The
+        returned callable forwards ``.lower`` (AOT lowering retraces
+        outside any audited call and is not policed)."""
+        rec = self.programs.setdefault(name, ProgramAudit(name))
+
+        def traced(*a, **k):
+            rec.traces += 1
+            return fn(*a, **k)
+
+        jf = jax.jit(traced, **jit_kwargs)
+
+        def audited(*args, **kwargs):
+            sig = signature(args, kwargs)
+            before = rec.traces
+            out = jf(*args, **kwargs)
+            rec.calls += 1
+            if rec.traces > before:
+                self._on_trace(rec, sig)
+            return out
+
+        audited.lower = jf.lower
+        audited._audit = rec
+        audited._jitted = jf
+        return audited
+
+    def _on_trace(self, rec: ProgramAudit, sig: str) -> None:
+        if sig in rec.seen:
+            rec.seen[sig] += 1
+            rec.violations.append(Violation(
+                rec.name, "retrace.recompiled",
+                f"call #{rec.calls} re-traced an already-compiled "
+                f"signature (trace {rec.seen[sig]} of {sig[:120]}...): "
+                "cache eviction or a value outside the allowed key set "
+                "is forcing a trace per round",
+            ))
+            return
+        rec.seen[sig] = 1
+        budget = self._budget(rec.name)
+        if len(rec.seen) > budget:
+            rec.violations.append(Violation(
+                rec.name, "retrace.signature_churn",
+                f"{len(rec.seen)} distinct trace signatures, budget "
+                f"{budget} (allowed: first window, sharded-layout "
+                "window, one per resize epoch) — something varies a "
+                "shape or sharding every round",
+            ))
+
+    @property
+    def violations(self) -> list[Violation]:
+        return [v for rec in self.programs.values() for v in rec.violations]
+
+    def report(self) -> dict:
+        return {
+            name: {
+                "calls": rec.calls,
+                "traces": rec.traces,
+                "signatures": len(rec.seen),
+                "violations": [str(v) for v in rec.violations],
+            }
+            for name, rec in sorted(self.programs.items())
+        }

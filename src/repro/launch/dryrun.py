@@ -19,7 +19,6 @@ os.environ["XLA_FLAGS"] = (
 import argparse  # noqa: E402
 import dataclasses  # noqa: E402
 import json  # noqa: E402
-import re  # noqa: E402
 import time  # noqa: E402
 import traceback  # noqa: E402
 
@@ -51,82 +50,11 @@ TRAIN_KNOBS = {
 }
 DEFAULT_TRAIN_KNOBS = dict(microbatches=4, accum_dtype="float32")
 
-# ---------------------------------------------------------------------------
-# HLO collective parsing
-# ---------------------------------------------------------------------------
-
-_DTYPE_BYTES = {
-    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
-    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
-    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
-}
-_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
-_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
-                "collective-permute")
-_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
-_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
-
-
-def _shape_bytes(tok: tuple) -> int:
-    dt, dims = tok
-    if dt not in _DTYPE_BYTES:
-        return 0
-    n = 1
-    for d in dims.split(","):
-        if d:
-            n *= int(d)
-    return n * _DTYPE_BYTES[dt]
-
-
-def parse_collectives(hlo: str) -> dict:
-    """Per-device wire-byte estimate per collective type.
-
-    Shapes in post-SPMD HLO are per-device shard shapes. For each collective
-    instruction we take F = max(shape bytes on the line) as the full buffer
-    and apply ring-transfer factors: all-gather/reduce-scatter/all-to-all
-    F*(g-1)/g, all-reduce 2*F*(g-1)/g, collective-permute F.
-    """
-    out = {c: {"count": 0, "wire_bytes": 0.0, "buffer_bytes": 0.0}
-           for c in _COLLECTIVES}
-    for line in hlo.splitlines():
-        s = line.strip()
-        if not s or s.startswith("//"):
-            continue
-        op = None
-        for c in _COLLECTIVES:
-            if f" {c}(" in s or f" {c}-start(" in s:
-                op = c
-                break
-        if op is None:
-            continue
-        toks = _SHAPE_RE.findall(s.split("(", 1)[0]) or _SHAPE_RE.findall(s)
-        full = max((_shape_bytes(t) for t in _SHAPE_RE.findall(s)),
-                   default=0)
-        # For all-gather the output is the full buffer (already in toks).
-        g = None
-        m = _GROUPS_RE.search(s)
-        if m:
-            g = len(m.group(1).split(","))
-        else:
-            m = _GROUPS_IOTA_RE.search(s)
-            if m:
-                g = int(m.group(2))
-        if not g or g <= 1:
-            g = 2  # conservative
-        ring = (g - 1) / g
-        if op == "all-reduce":
-            wire = 2 * full * ring
-        elif op == "collective-permute":
-            wire = full
-        else:
-            wire = full * ring
-        out[op]["count"] += 1
-        out[op]["wire_bytes"] += wire
-        out[op]["buffer_bytes"] += full
-    out["total_wire_bytes"] = sum(
-        v["wire_bytes"] for k, v in out.items() if isinstance(v, dict)
-    )
-    return out
+# HLO collective parsing lives in launch/hlo_cost (one parser for the
+# dry-run census, the roofline, and the analysis gate); re-exported here
+# for existing callers. The private copy this file used to carry had
+# drifted (no f8 variants, no s4/u4).
+parse_collectives = hlo_cost.parse_collectives
 
 
 # ---------------------------------------------------------------------------

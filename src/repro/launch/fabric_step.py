@@ -368,3 +368,49 @@ def input_specs(mesh, dims: types.FabricDims, b_loc: int = 100,
         jax.ShapeDtypeStruct((c, b_round, wb), jnp.uint8),
         jax.ShapeDtypeStruct((c, b_round, 2), U32),
     )
+
+
+# ---------------------------------------------------------------------------
+# Contract-analyzer registrations (repro.analysis): each step variant
+# self-registers a builder the gate AOT-lowers with the SAME jit wrapper
+# and donation the live committer uses — no workload runs.
+# ---------------------------------------------------------------------------
+
+from repro.analysis import registry as _areg  # noqa: E402
+
+
+def _register_step(name: str, cfg: FabricStepConfig, depth: int,
+                   n_channels: int = 1, description: str = "") -> None:
+    @_areg.register(name, description=description)
+    def _build(ctx, cfg=cfg, depth=depth, n_channels=n_channels):
+        dcfg = dataclasses.replace(cfg, pipeline_depth=depth)
+        step = jax.jit(
+            make_fabric_step(ctx.dims, dcfg, ctx.mesh), donate_argnums=(0,)
+        )
+        state = jax.eval_shape(lambda: create_mesh_state(
+            n_channels, ctx.dims, n_buckets=ctx.n_buckets, slots=ctx.slots
+        ))
+        wire_s, ids_s = input_specs(
+            ctx.mesh, ctx.dims, b_loc=ctx.b_loc, pipeline_depth=depth,
+            n_channels=n_channels,
+        )
+        nb_local = ctx.n_buckets // (
+            ctx.mesh.shape["model"] if dcfg.shard_state else 1
+        )
+        return _areg.BuiltProgram(
+            name=name, fn=step, args=(state, wire_s, ids_s),
+            donate_argnums=(0,), nb_local=nb_local, slots=ctx.slots,
+            meta={"depth": depth, "n_channels": n_channels,
+                  "config": dcfg.name},
+        )
+
+
+_register_step("fabric_step/repl/d1", FASTFABRIC_STEP, 1,
+               description="replicated-state single-block step (the oracle)")
+_register_step("fabric_step/shard/d1", FASTFABRIC_SHARDED_STEP, 1,
+               description="bucket-sharded single-block step (routed MVCC)")
+_register_step("fabric_step/shard/d8", FASTFABRIC_PIPELINED_STEP, 8,
+               description="sharded depth-8 window step (fused commit)")
+_register_step("fabric_step/shard/d4/c2", FASTFABRIC_SHARDED_STEP, 4,
+               n_channels=2,
+               description="two channels vmapped through a depth-4 window")

@@ -350,3 +350,56 @@ def analyze(hlo_text: str) -> dict:
         "collectives": c.coll_counts or {},
         "scatter_count": c.scatters,
     }
+
+
+def parse_collectives(hlo: str) -> dict:
+    """Flat per-line collective census of post-SPMD HLO (the dry-run's
+    report format): ``{type: {count, wire_bytes, buffer_bytes}}`` plus
+    ``total_wire_bytes``. UNLIKE :func:`analyze` this counts each
+    instruction once regardless of loop trip counts — it is the
+    static-text census dryrun records next to the trip-corrected
+    ``hlo_cost`` block. Shapes are per-device shard shapes; ring
+    transfer factors as in :func:`analyze` (all-gather/reduce-scatter/
+    all-to-all F*(g-1)/g, all-reduce 2*F*(g-1)/g, permute F).
+
+    This is the one shared parser — ``launch/dryrun.py`` re-exports it
+    (its private copy had drifted: no f8e4m3/f8e3m4, no s4/u4).
+    """
+    out = {c: {"count": 0, "wire_bytes": 0.0, "buffer_bytes": 0.0}
+           for c in COLLECTIVES}
+    for line in hlo.splitlines():
+        s = line.strip()
+        if not s or s.startswith("//"):
+            continue
+        op = None
+        for c in COLLECTIVES:
+            if f" {c}(" in s or f" {c}-start(" in s:
+                op = c
+                break
+        if op is None:
+            continue
+        full = max((_bytes_of([t]) for t in _shape_list(s)), default=0)
+        g = None
+        m = _GROUPS_RE.search(s)
+        if m:
+            g = len(m.group(1).split(","))
+        else:
+            m = _GROUPS_IOTA_RE.search(s)
+            if m:
+                g = int(m.group(2))
+        if not g or g <= 1:
+            g = 2  # conservative
+        ring = (g - 1) / g
+        if op == "all-reduce":
+            wire = 2 * full * ring
+        elif op == "collective-permute":
+            wire = full
+        else:
+            wire = full * ring
+        out[op]["count"] += 1
+        out[op]["wire_bytes"] += wire
+        out[op]["buffer_bytes"] += full
+    out["total_wire_bytes"] = sum(
+        v["wire_bytes"] for v in out.values() if isinstance(v, dict)
+    )
+    return out

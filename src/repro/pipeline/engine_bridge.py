@@ -98,6 +98,69 @@ def _chain_hashes_multi(prev_hash, block_no0, wire, valid):
     return jax.vmap(_chain_hashes)(prev_hash, block_no0, wire, valid)
 
 
+def make_stats_program(n_shards: int):
+    """Per-group shard-stats pass (unjitted): vmapped occupancy +
+    min-free reductions over a group's stacked state. Module-level so the
+    committer's jit cache and the contract analyzer's registration lower
+    the SAME program (repro.analysis registers it as
+    ``pipeline/stats_pass``)."""
+
+    def prog(keys, vers, vals):
+        def one(k, v, va):
+            st = ws.HashState(k, v, va)
+            return (ws.shard_occupancy(st, n_shards),
+                    ws.shard_min_free(st, n_shards))
+
+        return jax.vmap(one)(keys, vers, vals)
+
+    return prog
+
+
+def make_resize_program(cfg: fs.FabricStepConfig, mesh, old_nb: int,
+                        new_nb: int):
+    """Halve/double of ONE channel's state (C=1) for ``mesh`` (unjitted).
+    Sharded configs run the butterfly neighbor exchange inside shard_map;
+    replicated configs resize every rank's copy locally. Module-level for
+    the same reason as :func:`make_stats_program` (registered as
+    ``pipeline/resize_exchange``)."""
+    msize = mesh.shape["model"]
+    if cfg.shard_state:
+        new_nb_loc = new_nb // msize
+
+        def body(keys, vers, vals):
+            local = ws.HashState(keys[0], vers[0], vals[0])
+            res = state_sharding.resize_sharded(
+                local, new_nb_loc, old_nb, msize
+            )
+            bits = state_sharding.overflow_bits(res.shard_overflow)
+            return (res.state.keys[None], res.state.versions[None],
+                    res.state.values[None], bits[None])
+
+        # A lone channel replicates over `data` (channels_over_data
+        # False) — on a 1-rank data axis this is the old spec exactly.
+        spec = fs.state_specs(mesh, shard_state=True,
+                              channels_over_data=False)
+        return fs._shard_map(
+            body, mesh=mesh,
+            in_specs=(spec.keys, spec.versions, spec.values),
+            out_specs=(spec.keys, spec.versions, spec.values,
+                       spec.overflow),
+            **fs._SHARD_MAP_NO_CHECK,
+        )
+
+    def prog_fn(keys, vers, vals):
+        res = jax.vmap(
+            lambda k, v, va: ws.resize(ws.HashState(k, v, va), new_nb)
+        )(keys, vers, vals)
+        bits = jax.vmap(
+            lambda o: state_sharding.overflow_bits(o[None])
+        )(res.overflow)  # (C, LANES)
+        return (res.state.keys, res.state.versions,
+                res.state.values, bits)
+
+    return prog_fn
+
+
 class _ChannelGroup:
     """Channels sharing one bucket layout, stacked in one mesh state."""
 
@@ -172,6 +235,22 @@ class MeshWindowCommitter:
         self._stats: dict = {}
         self.obs = obs_mod.Obs.disabled()
         self._hlo_gauged: set[int] = set()
+        self._auditor = None
+
+    def attach_retrace_auditor(self, auditor) -> None:
+        """Route every jit this committer builds (window steps, resize
+        exchange, stats pass) through ``auditor.wrap`` (repro.analysis.
+        retrace.RetraceAuditor) — the contracts gate drives a live
+        workload this way and fails on any trace outside the allowed
+        key set. Attach BEFORE the first commit; already-built jits are
+        not retrofitted."""
+        self._auditor = auditor
+
+    def _jit(self, name: str, fn, **jit_kwargs):
+        """``jax.jit`` with optional cache-miss auditing under ``name``."""
+        if self._auditor is not None:
+            return self._auditor.wrap(name, fn, **jit_kwargs)
+        return jax.jit(fn, **jit_kwargs)
 
     def attach_obs(self, obs) -> None:
         """Route window spans + metrics through ``obs`` (repro.obs.Obs).
@@ -256,10 +335,21 @@ class MeshWindowCommitter:
         if key not in self._steps:
             cfg = dataclasses.replace(self.cfg, pipeline_depth=d)
             chan = None if self.n_channels == 1 else channels
-            self._steps[key] = jax.jit(fs.make_fabric_step(
-                self.dims, cfg, self.mesh, channels_over_data=over,
-                channel=chan,
-            ))
+            # donate_argnums=(0,): the window step consumes the group
+            # state in place — XLA aliases the table planes and heads
+            # instead of allocating a second copy per window (the
+            # contract analyzer's donation verifier pins that the alias
+            # actually happens). Callers never reuse a pre-step state:
+            # commit_windows reassigns g.state from the step's output
+            # before anything else reads it.
+            self._steps[key] = self._jit(
+                f"pipeline/window_step/d{d}",
+                fs.make_fabric_step(
+                    self.dims, cfg, self.mesh, channels_over_data=over,
+                    channel=chan,
+                ),
+                donate_argnums=(0,),
+            )
         return self._steps[key]
 
     def commit_window(self, wire: jnp.ndarray, tx_ids: jnp.ndarray
@@ -307,13 +397,16 @@ class MeshWindowCommitter:
                 chans = list(g.channels)
                 wire_g = wires[jnp.asarray(chans)]
                 ids_g = tx_ids[jnp.asarray(chans)]
-                bno0 = g.state.block_no  # (C_g,)
                 if d == 1:
                     g.state, valid = step(g.state, wire_g[:, 0],
                                           ids_g[:, 0])
                     valid = valid[:, None]  # (C_g, 1, B)
                 else:
                     g.state, valid = step(g.state, wire_g, ids_g)
+                # The step donated (and so invalidated) the pre-step
+                # state; derive the window's first block number from the
+                # post-step counter instead of reading it up front.
+                bno0 = g.state.block_no - jnp.uint32(d)  # (C_g,)
                 prev = jnp.stack([self._prev_hash[c] for c in chans])
                 prevs, hashes = _chain_hashes_multi(
                     prev, bno0, wire_g, valid
@@ -377,53 +470,17 @@ class MeshWindowCommitter:
     # -- elastic state: resize epochs --------------------------------------
 
     def _resize_program(self, old_nb: int, new_nb: int):
-        """Jitted halve/double of ONE channel's state (C=1) for THIS mesh.
-        Sharded configs run the butterfly neighbor exchange inside
-        shard_map; replicated configs resize every rank's copy locally."""
+        """Jitted halve/double of ONE channel's state (C=1) for THIS mesh
+        (:func:`make_resize_program`). Sharded configs run the butterfly
+        neighbor exchange inside shard_map; replicated configs resize
+        every rank's copy locally."""
         key = (old_nb, new_nb)
-        if key in self._resizes:
-            return self._resizes[key]
-        msize = self.mesh.shape["model"]
-        if self.cfg.shard_state:
-            new_nb_loc = new_nb // msize
-
-            def body(keys, vers, vals):
-                local = ws.HashState(keys[0], vers[0], vals[0])
-                res = state_sharding.resize_sharded(
-                    local, new_nb_loc, old_nb, msize
-                )
-                bits = state_sharding.overflow_bits(res.shard_overflow)
-                return (res.state.keys[None], res.state.versions[None],
-                        res.state.values[None], bits[None])
-
-            # A lone channel replicates over `data` (channels_over_data
-            # False) — on a 1-rank data axis this is the old spec exactly.
-            spec = fs.state_specs(self.mesh, shard_state=True,
-                                  channels_over_data=False)
-            prog = jax.jit(fs._shard_map(
-                body, mesh=self.mesh,
-                in_specs=(spec.keys, spec.versions, spec.values),
-                out_specs=(spec.keys, spec.versions, spec.values,
-                           spec.overflow),
-                **fs._SHARD_MAP_NO_CHECK,
-            ))
-        else:
-
-            def prog_fn(keys, vers, vals):
-                res = jax.vmap(
-                    lambda k, v, va: ws.resize(
-                        ws.HashState(k, v, va), new_nb
-                    )
-                )(keys, vers, vals)
-                bits = jax.vmap(
-                    lambda o: state_sharding.overflow_bits(o[None])
-                )(res.overflow)  # (C, LANES)
-                return (res.state.keys, res.state.versions,
-                        res.state.values, bits)
-
-            prog = jax.jit(prog_fn)
-        self._resizes[key] = prog
-        return prog
+        if key not in self._resizes:
+            self._resizes[key] = self._jit(
+                "pipeline/resize_exchange",
+                make_resize_program(self.cfg, self.mesh, old_nb, new_nb),
+            )
+        return self._resizes[key]
 
     def resize(self, new_n_buckets: int, channel: int = 0) -> ReanchorInfo:
         """Halve/double ONE channel's world state between windows.
@@ -501,23 +558,14 @@ class MeshWindowCommitter:
     # -- durability-check surface (engine.verify) --------------------------
 
     def _stats_program(self, c_g: int, nb: int):
-        """Jitted per-group shard stats: vmapped occupancy + min-free
-        reductions over the group's stacked state. Output is tiny
-        ((C_g, M) ints), so the host read that follows is a few words —
-        NOT the full-table device_get ``hash_state`` pays."""
+        """Jitted per-group shard stats (:func:`make_stats_program`).
+        Output is tiny ((C_g, M) ints), so the host read that follows is
+        a few words — NOT the full-table device_get ``hash_state`` pays."""
         key = (c_g, nb)
         if key not in self._stats:
-            m = self.n_shards
-
-            def prog(keys, vers, vals):
-                def one(k, v, va):
-                    st = ws.HashState(k, v, va)
-                    return (ws.shard_occupancy(st, m),
-                            ws.shard_min_free(st, m))
-
-                return jax.vmap(one)(keys, vers, vals)
-
-            self._stats[key] = jax.jit(prog)
+            self._stats[key] = self._jit(
+                "pipeline/stats_pass", make_stats_program(self.n_shards)
+            )
         return self._stats[key]
 
     def shard_stats(self, channels) -> dict:
@@ -630,3 +678,53 @@ class MeshWindowCommitter:
 
     def block_until_ready(self) -> None:
         jax.block_until_ready([g.state.ledger_head for g in self.groups])
+
+
+# ---------------------------------------------------------------------------
+# Contract-analyzer registrations (repro.analysis): the committer's two
+# non-step jitted programs, built by the SAME module-level constructors
+# its jit cache uses, lowered at BuildContext sizing.
+# ---------------------------------------------------------------------------
+
+from repro.analysis import registry as _areg  # noqa: E402
+
+
+@_areg.register(
+    "pipeline/stats_pass",
+    description="stacked per-group shard occupancy/min-free reductions",
+)
+def _build_stats_pass(ctx):
+    msize = ctx.mesh.shape["model"]
+    fn = jax.jit(make_stats_program(msize))
+    nb, s = ctx.n_buckets, ctx.slots
+    c = max(ctx.n_channels, 1)
+    sd = jax.ShapeDtypeStruct
+    args = (
+        sd((c, nb, s, 2), jnp.uint32),
+        sd((c, nb, s), jnp.uint32),
+        sd((c, nb, s, ctx.dims.vw), jnp.uint32),
+    )
+    return _areg.BuiltProgram(
+        name="pipeline/stats_pass", fn=fn, args=args,
+        meta={"n_shards": msize},
+    )
+
+
+@_areg.register(
+    "pipeline/resize_exchange",
+    description="butterfly bucket-shard exchange of one channel's table",
+)
+def _build_resize_exchange(ctx):
+    cfg = fs.FASTFABRIC_SHARDED_STEP
+    nb, s = ctx.n_buckets, ctx.slots
+    fn = jax.jit(make_resize_program(cfg, ctx.mesh, nb, 2 * nb))
+    sd = jax.ShapeDtypeStruct
+    args = (
+        sd((1, nb, s, 2), jnp.uint32),
+        sd((1, nb, s), jnp.uint32),
+        sd((1, nb, s, ctx.dims.vw), jnp.uint32),
+    )
+    return _areg.BuiltProgram(
+        name="pipeline/resize_exchange", fn=fn, args=args,
+        meta={"old_n_buckets": nb, "new_n_buckets": 2 * nb},
+    )

@@ -330,3 +330,40 @@ class ServeEngine:
             status=status, reasons=reasons,
             channels={0: {"status": status, "reasons": reasons}},
         )
+
+
+# ---------------------------------------------------------------------------
+# Contract-analyzer registration (repro.analysis): the batched decode
+# step exactly as ServeEngine jits it (same partial, same cache
+# donation), lowered on a smoke model so the gate compiles in seconds.
+# ---------------------------------------------------------------------------
+
+from repro.analysis import registry as _areg  # noqa: E402
+
+
+@_areg.register(
+    "serving/decode_step",
+    description="slot-batched decode step with per-slot positions",
+)
+def _build_decode_step(ctx):
+    from repro.configs import base as cfg_base
+    from repro.launch import specs
+
+    cfg = cfg_base.get_smoke("qwen2-7b")
+    model = LM(cfg, vocab_chunk=8)
+    slots, max_len = 2, 16
+    params = specs.param_shapes(model)
+    cache = jax.eval_shape(lambda: model.init_cache(slots, max_len))
+    fn = jax.jit(partial(decode_step_slots, model), donate_argnums=(1,))
+    sd = jax.ShapeDtypeStruct
+    args = (
+        params, cache,
+        sd((slots,), jnp.int32),  # token
+        sd((slots,), jnp.int32),  # pos_b
+        sd((slots,), jnp.bool_),  # active
+    )
+    return _areg.BuiltProgram(
+        name="serving/decode_step", fn=fn, args=args, donate_argnums=(1,),
+        meta={"arch": "qwen2-7b-smoke", "slots": slots,
+              "max_len": max_len},
+    )

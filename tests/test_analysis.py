@@ -1,0 +1,311 @@
+"""Tests for the program-contract analyzer (repro.analysis).
+
+Known-good programs must pass their committed contracts with zero
+violations, and each SEEDED defect (an over-budget collective, a dropped
+donation, a host callback in a step body, a forced retrace, signature
+churn, dtype widening, an unlisted host sync) must flip exactly the
+check it targets — the gate's failure messages name the program and the
+contracts.json clause to amend.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import checks, contracts, gate, lint, registry
+from repro.analysis.retrace import RetraceAuditor
+from repro.core import types
+from repro.launch import fabric_step as fs
+from repro.launch import hlo_cost
+
+EXPECTED_PROGRAMS = {
+    "fabric_step/repl/d1",
+    "fabric_step/shard/d1",
+    "fabric_step/shard/d8",
+    "fabric_step/shard/d4/c2",
+    "pipeline/stats_pass",
+    "pipeline/resize_exchange",
+    "serving/decode_step",
+}
+
+
+def test_registry_discovers_all_hot_paths():
+    progs = registry.discover()
+    assert EXPECTED_PROGRAMS <= set(progs)
+    for reg in progs.values():
+        assert reg.description  # every program says what it is
+
+
+# ---------------------------------------------------------------------------
+# Known-good artifacts (one compile, shared across tests)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def repl_d1():
+    """(BuiltProgram, stablehlo, compiled hlo) of the depth-1 oracle."""
+    ctx = gate.build_context()
+    built = registry.discover()["fabric_step/repl/d1"].builder(ctx)
+    lowered = built.fn.lower(*built.args)
+    return built, lowered.as_text(), lowered.compile().as_text()
+
+
+def test_known_good_programs_pass(repl_d1):
+    built, stablehlo, hlo = repl_d1
+    art = checks.Artifact(
+        name=built.name, hlo_text=hlo, stablehlo_text=stablehlo,
+        donated=checks.donated_param_ids(built.args, built.donate_argnums),
+        nb_local=built.nb_local, slots=built.slots,
+    )
+    measured, viols = checks.check_artifact(
+        art, contracts.for_program(built.name))
+    assert viols == []
+    assert measured["commit_scatter_passes"] == \
+        contracts.commit_scatter_passes()
+    # Donation really aliases: every donated state leaf appears in the
+    # compiled module's input_output_alias table.
+    assert measured["aliased_params"] == measured["donated_params"]
+
+
+def test_gate_cli_smoke(tmp_path):
+    out = tmp_path / "report.json"
+    rc = gate.main(["--only", "pipeline/stats_pass", "--skip-retrace",
+                    "--skip-lint", "--json", str(out)])
+    assert rc == 0
+    import json
+
+    rep = json.loads(out.read_text())
+    assert rep["ok"] and "pipeline/stats_pass" in rep["programs"]
+
+
+# ---------------------------------------------------------------------------
+# Seeded violations: each flips exactly the intended clause
+# ---------------------------------------------------------------------------
+
+
+def test_seeded_extra_collective_flags_budget(repl_d1):
+    built, _, hlo = repl_d1
+    analysis = hlo_cost.analyze(hlo)
+    n_ag = analysis["collectives"].get("all-gather", {}).get("count", 0)
+    # Tighten the budget below what the program actually issues — the
+    # same failure an extra all-gather sneaking into the step produces.
+    tight = {"collectives": {"all-gather": max(n_ag - 1, 0)}}
+    viols = checks.check_collectives(built.name, tight, analysis)
+    if n_ag:  # single-device lowerings may elide collectives entirely
+        assert [v.clause for v in viols] == ["collectives.all-gather"]
+        assert built.name in str(viols[0])
+        assert "contracts.json" in viols[0].message
+    # A collective type NOT named in the budget is budget 0.
+    viols = checks.check_collectives(
+        built.name, {"collectives": {}},
+        {"collectives": {"all-to-all": {"count": 2, "wire_bytes": 1.0}}},
+    )
+    assert [v.clause for v in viols] == ["collectives.all-to-all"]
+
+
+def test_seeded_dropped_donation_flags_aliasing(repl_d1):
+    built, _, _ = repl_d1
+    ctx = gate.build_context()
+    # Re-jit the SAME step WITHOUT donate_argnums: XLA gets no aliasing
+    # hint, the alias table stays empty, and every "donated" parameter
+    # reads as silently copied.
+    undonated = jax.jit(
+        fs.make_fabric_step(ctx.dims, fs.FASTFABRIC_STEP, ctx.mesh)
+    )
+    hlo = undonated.lower(*built.args).compile().as_text()
+    donated = checks.donated_param_ids(built.args, (0,))
+    viols = checks.check_donation(
+        built.name, {"donation": {"min_aliased_fraction": 1.0}},
+        hlo, donated)
+    assert [v.clause for v in viols] == ["donation.aliasing"]
+    # ... and a program that donates NOTHING against a contract that
+    # expects donation is its own clause.
+    viols = checks.check_donation(
+        built.name, {"donation": {"min_aliased_fraction": 1.0}}, hlo, [])
+    assert [v.clause for v in viols] == ["donation.missing"]
+
+
+def test_seeded_unfused_commit_flags_scatter_passes():
+    # Two fused passes (6 table-shaped scatters) where the contract
+    # requires one — what a de-fused window commit looks like.
+    plane = "tensor<8x4x2xui32>"
+    scat = (f'  %s = "stablehlo.scatter"(%a, %b, %c) ({{\n  }}) : '
+            f"(...) -> {plane}\n")
+    text = scat * 6
+    assert checks.table_scatter_passes(text, 8, 4) == 2
+    viols = checks.check_commit_scatters(
+        "fabric_step/test", {"commit_scatter_passes": 1}, text, 8, 4)
+    assert [v.clause for v in viols] == ["commit_scatter_passes"]
+    # Channel-batched planes ((C, nb, slots) leading dims) count too.
+    text3 = ('  %s = "stablehlo.scatter"(%a) ({\n  }) : '
+             "(...) -> tensor<2x8x4x2xui32>\n") * 3
+    assert checks.table_scatter_passes(text3, 8, 4) == 1
+
+
+def test_seeded_host_callback_in_step_body():
+    def f(x):
+        y = jax.pure_callback(
+            lambda a: np.asarray(a),
+            jax.ShapeDtypeStruct((4,), jnp.float32), x)
+        return y + 1.0
+
+    hlo = jax.jit(f).lower(jnp.zeros(4, jnp.float32)).compile().as_text()
+    viols = checks.check_forbidden_ops(
+        "t/cb", {"forbid_host_callbacks": True}, hlo)
+    assert [v.clause for v in viols] == ["forbidden_ops.host_callback"]
+    # The same artifact passes when the callback target is allowlisted.
+    target = viols[0].message.split('target="')[1].split('"')[0]
+    assert not checks.check_forbidden_ops(
+        "t/cb", {"forbid_host_callbacks": True,
+                 "allowed_custom_calls": [target]}, hlo)
+
+
+def test_seeded_dtype_widening():
+    hlo = ("  %w = f64[128]{0} add(f64[128]{0} %a, f64[128]{0} %b)\n"
+           "  %c = s64[] constant(3)\n")  # scalar bookkeeping: benign
+    viols = checks.check_dtypes(
+        "t/dt", {"forbidden_dtypes": ["f64", "s64", "u64"]}, hlo)
+    assert [v.clause for v in viols] == ["forbidden_dtypes.f64"]
+
+
+# ---------------------------------------------------------------------------
+# Donation plumbing units
+# ---------------------------------------------------------------------------
+
+
+def test_parse_aliased_params_nested_braces():
+    hdr = ("HloModule jit_apply, input_output_alias={ {0}: (0, {}, "
+           "may-alias), {1}: (2, {}, must-alias) }, "
+           "entry_computation_layout={(f32[4]{0})->f32[4]{0}}\nbody\n")
+    assert checks.parse_aliased_params(hdr) == {0, 2}
+    assert checks.parse_aliased_params("HloModule plain\n") == set()
+
+
+def test_donated_param_ids_flattens_pytrees():
+    args = ({"a": jnp.zeros(2), "b": (jnp.zeros(3), jnp.zeros(4))},
+            jnp.zeros(5), jnp.zeros(6))
+    assert checks.donated_param_ids(args, (0, 2)) == [0, 1, 2, 4]
+
+
+# ---------------------------------------------------------------------------
+# Retrace auditing
+# ---------------------------------------------------------------------------
+
+
+def test_retrace_new_signatures_within_budget_ok():
+    aud = RetraceAuditor(max_signatures=4)
+    f = aud.wrap("t/ok", lambda x: x * 2)
+    f(jnp.zeros(4))
+    f(jnp.zeros(4))  # cache hit
+    f(jnp.zeros(8))  # legitimately new shape
+    rec = aud.programs["t/ok"]
+    assert (rec.calls, rec.traces, len(rec.seen)) == (3, 2, 2)
+    assert not aud.violations
+
+
+def test_seeded_forced_retrace_flagged():
+    aud = RetraceAuditor(max_signatures=4)
+    f = aud.wrap("t/evict", lambda x: x + 1)
+    x = jnp.arange(8)
+    f(x)
+    f(x)
+    assert not aud.violations
+    jax.clear_caches()  # simulate cache eviction / key churn
+    f(x)
+    viols = [v for v in aud.violations if v.clause == "retrace.recompiled"]
+    assert len(viols) == 1 and "t/evict" in str(viols[0])
+
+
+def test_seeded_signature_churn_flagged():
+    aud = RetraceAuditor(max_signatures=2)
+    f = aud.wrap("t/churn", lambda x: x + 1)
+    for n in (4, 8, 16):  # a shape varying every round
+        f(jnp.zeros(n))
+    assert any(v.clause == "retrace.signature_churn"
+               for v in aud.violations)
+
+
+def test_committer_audited_workload_clean():
+    # The gate's live workload (windows, stats reads, a resize epoch,
+    # more windows) through an audited MeshWindowCommitter: every trace
+    # stays inside the allowed key set.
+    auditor = gate.run_retrace(gate.make_mesh(), types.TEST_DIMS)
+    assert not auditor.violations
+    steps = auditor.programs["pipeline/window_step/d2"]
+    assert steps.calls == 5
+    assert steps.traces < steps.calls  # steady state hits the cache
+    stats = auditor.programs["pipeline/stats_pass"]
+    assert (stats.calls, stats.traces) == (2, 1)
+
+
+def test_audited_wrapper_exposes_lower():
+    aud = RetraceAuditor(max_signatures=4)
+    f = aud.wrap("t/lower", lambda x: x * 3)
+    hlo = f.lower(jnp.zeros(4)).compile().as_text()
+    assert "HloModule" in hlo
+
+
+# ---------------------------------------------------------------------------
+# Source lint
+# ---------------------------------------------------------------------------
+
+_LINT_SRC = """\
+import jax
+
+def hot_loop(x):
+    return jax.block_until_ready(x)
+
+class Edge:
+    def drain(self, x):
+        return jax.device_get(x)
+"""
+
+
+def test_lint_flags_and_allowlist(tmp_path):
+    (tmp_path / "mod.py").write_text(_LINT_SRC)
+    viols = lint.lint_tree(str(tmp_path), allow=["mod.py:Edge.drain"])
+    assert [v.clause for v in viols] == ["lint.block_until_ready"]
+    assert "hot_loop" in viols[0].message
+    # Widening the allowlist clears it.
+    assert not lint.lint_tree(str(tmp_path), allow=["mod.py:*"])
+
+
+def test_lint_repo_is_clean():
+    assert gate.run_lint() == []
+
+
+# ---------------------------------------------------------------------------
+# Contracts file + deduplicated HLO parser
+# ---------------------------------------------------------------------------
+
+
+def test_contracts_single_source_of_truth():
+    # fig11 and CI consume this value; the fabric_step contracts must
+    # agree on it.
+    assert contracts.commit_scatter_passes() == 1
+    # Defaults overlay: unknown programs still get the baseline rules.
+    c = contracts.for_program("not/registered")
+    assert c["forbid_host_callbacks"] and "f64" in c["forbidden_dtypes"]
+    # Per-program clauses override defaults ("null" disables a clause).
+    assert contracts.for_program("pipeline/stats_pass")["donation"] is None
+
+
+def test_dryrun_delegates_to_hlo_cost_parser():
+    from repro.launch import dryrun
+
+    assert dryrun.parse_collectives is hlo_cost.parse_collectives
+
+
+def test_parse_collectives_counts_new_dtypes():
+    # The dryrun's private copy missed f8e3m4 / s4 — the shared parser
+    # prices them.
+    hlo = ("  %ag = f8e3m4[16]{0} all-gather(f8e3m4[2]{0} %p), "
+           "replica_groups={{0,1,2,3,4,5,6,7}}, dimensions={0}\n"
+           "  %rs = s4[32]{0} reduce-scatter(s4[256]{0} %q), "
+           "replica_groups={{0,1,2,3,4,5,6,7}}, dimensions={0}\n")
+    out = hlo_cost.parse_collectives(hlo)
+    assert out["all-gather"]["count"] == 1
+    assert out["all-gather"]["buffer_bytes"] == 16.0
+    assert out["reduce-scatter"]["count"] == 1
+    assert out["total_wire_bytes"] > 0
